@@ -1,0 +1,57 @@
+//! Compact-model study (the paper's Fig. 12/13 motivation): end-to-end
+//! inference of MobileNetV2 and EfficientNet-B0 on DB-PIM, showing how
+//! depthwise convolutions and element-wise ops cap the achievable
+//! speedup even when std/pw-conv layers accelerate ~8×.
+//!
+//! ```bash
+//! cargo run --release --example compact_models
+//! ```
+
+use dbpim::arch::ArchConfig;
+use dbpim::compiler::SparsityConfig;
+use dbpim::models;
+use dbpim::sim::{self, OpCategory};
+
+fn main() {
+    for name in ["mobilenet_v2", "efficientnet_b0"] {
+        let net = models::by_name(name).unwrap();
+        let base = sim::simulate_network(
+            &net,
+            SparsityConfig::dense(),
+            &ArchConfig::dense_baseline(),
+            42,
+        );
+        let r = sim::simulate_network(&net, SparsityConfig::hybrid(0.6), &ArchConfig::db_pim(), 42);
+
+        println!("== {name} ==");
+        println!(
+            "  PIM-layer speedup : {:.2}x   end-to-end speedup: {:.2}x",
+            r.pim_speedup_vs(&base),
+            r.speedup_vs(&base)
+        );
+        println!("  execution-time breakdown on DB-PIM (Fig. 13):");
+        for (cat, share) in r.category_breakdown() {
+            let label = match cat {
+                OpCategory::PimConvFc => "pw/std-conv + FC",
+                OpCategory::DwConv => "dw-conv",
+                OpCategory::Mul => "mul (SE etc.)",
+                OpCategory::Etc => "pool/ReLU/resadd",
+            };
+            println!("    {label:18} {:5.1}%", 100.0 * share);
+        }
+        // Amdahl check: the non-PIM share must be a visible fraction —
+        // that is the paper's explanation for compact models' limits.
+        let non_pim: f64 = r
+            .category_breakdown()
+            .iter()
+            .filter(|(c, _)| *c != OpCategory::PimConvFc)
+            .map(|(_, s)| s)
+            .sum();
+        println!("  non-acceleratable share: {:.1}%\n", 100.0 * non_pim);
+        assert!(non_pim > 0.15, "compact models should be SIMD-bound");
+        assert!(
+            r.speedup_vs(&base) < r.pim_speedup_vs(&base),
+            "end-to-end speedup must trail the PIM-only speedup"
+        );
+    }
+}

@@ -1,0 +1,84 @@
+//! Quickstart: sparsify a layer with the hybrid-grained pipeline, map it
+//! onto DB-PIM, simulate it against the dense digital-PIM baseline, and
+//! print the speedup / energy / utilization numbers.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use dbpim::arch::ArchConfig;
+use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
+use dbpim::models::synthesize_weights;
+use dbpim::quant;
+use dbpim::sim::Machine;
+use dbpim::tensor::MatI8;
+
+fn main() {
+    // One conv-sized matmul: M output pixels, K unfolded inputs, N filters.
+    let (m, k, n) = (256, 1152, 128);
+    println!("layer: [{m} x {k}] @ [{k} x {n}] INT8\n");
+
+    // --- offline pipeline: coarse 60% block pruning + FTA projection ---
+    let raw = synthesize_weights(42, k, n);
+    let sparsity = SparsityConfig::hybrid(0.6);
+
+    let mut results = Vec::new();
+    for arch in [ArchConfig::db_pim(), ArchConfig::dense_baseline()] {
+        let prep = prepare_layer(
+            "quickstart",
+            m,
+            k,
+            n,
+            raw.clone(),
+            sparsity,
+            &arch,
+            quant::requant_mul(0.005),
+            true,
+            None,
+        );
+        if arch.weight_bit_sparsity {
+            let ths = &prep.thresholds;
+            let th1 = ths.iter().filter(|&&t| t == 1).count();
+            let th2 = ths.iter().filter(|&&t| t == 2).count();
+            println!(
+                "FTA thresholds: {} filters φ=1, {} filters φ=2, {} empty",
+                th1,
+                th2,
+                n - th1 - th2
+            );
+            println!("value sparsity: {:.1}% of α-blocks pruned", 100.0 * prep.mask.sparsity());
+        }
+        let layer = compile_layer(prep, &arch);
+        println!(
+            "{:16} {} macro assignments, {} weight tiles, {} instructions",
+            arch.name,
+            layer.assignments.len(),
+            layer.tiles.len(),
+            layer.instrs.len()
+        );
+
+        // --- simulate with ReLU-like input activations ---
+        let acts = dbpim::models::synthesize_activations(7, m * k);
+        let x = MatI8::from_vec(m, k, acts);
+        let machine = Machine::new(arch.clone());
+        let (stats, _) = machine.run_pim_layer(&layer, Some(&x), false);
+        let energy_uj = stats.events.energy_pj(&machine.energy) / 1e6;
+        let u_act = stats.events.u_act(arch.macro_columns * arch.compartments);
+        println!(
+            "{:16} {} cycles  ({:.1} µs @ {:.0} MHz)   {:.2} µJ   U_act {:.1}%\n",
+            arch.name,
+            stats.elapsed,
+            stats.elapsed as f64 * arch.clock_ns() / 1e3,
+            arch.freq_mhz,
+            energy_uj,
+            100.0 * u_act
+        );
+        results.push((stats.elapsed, energy_uj));
+    }
+
+    let speedup = results[1].0 as f64 / results[0].0 as f64;
+    let saving = 1.0 - results[0].1 / results[1].1;
+    println!("DB-PIM speedup over dense PIM baseline: {speedup:.2}x");
+    println!("energy saving: {:.1}%", 100.0 * saving);
+    assert!(speedup > 3.0, "expected a clear win on a 90%-sparsity layer");
+}

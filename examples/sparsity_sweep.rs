@@ -1,0 +1,63 @@
+//! Sparsity sweep: the Fig. 11 experiment as a runnable example —
+//! speedup and energy saving vs the dense baseline as value-level
+//! sparsity sweeps 0–70% on top of FTA bit-level sparsity, for any zoo
+//! network.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep [network]
+//! ```
+
+use dbpim::arch::ArchConfig;
+use dbpim::compiler::SparsityConfig;
+use dbpim::models;
+use dbpim::sim;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet18".into());
+    let net = models::by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown network {name}");
+        std::process::exit(2);
+    });
+    println!("network: {name} ({} PIM MACs)", net.pim_macs());
+
+    let base = sim::simulate_network(
+        &net,
+        SparsityConfig::dense(),
+        &ArchConfig::dense_baseline(),
+        42,
+    );
+    println!(
+        "dense baseline: {} cycles ({:.3} ms), {:.1} µJ\n",
+        base.pim_cycles(),
+        base.pim_time_ms(),
+        base.energy_uj()
+    );
+
+    println!(
+        "{:>8} {:>8} {:>10} {:>9} {:>9} {:>8}",
+        "value", "total", "cycles", "speedup", "energy", "U_act"
+    );
+    let mut last = 0.0;
+    for v in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7] {
+        let total = 1.0 - (1.0 - v) * 0.25; // FTA guarantees the 75% floor
+        let r = sim::simulate_network(
+            &net,
+            SparsityConfig::hybrid(v),
+            &ArchConfig::weights_only(),
+            42,
+        );
+        let speedup = r.pim_speedup_vs(&base);
+        let saving = 1.0 - r.energy_uj() / base.energy_uj();
+        println!(
+            "{:>7.0}% {:>7.1}% {:>10} {:>8.2}x {:>8.1}% {:>7.1}%",
+            100.0 * v,
+            100.0 * total,
+            r.pim_cycles(),
+            speedup,
+            100.0 * saving,
+            100.0 * r.u_act(),
+        );
+        assert!(speedup >= last * 0.98, "speedup should rise with sparsity");
+        last = speedup;
+    }
+}

@@ -1,0 +1,160 @@
+"""AOT export: lower L2 graphs to HLO *text* + dump binary weight packs.
+
+Interchange format is HLO text, NOT serialized HloModuleProto — jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  mininet.hlo.txt          golden MiniNet forward, FTA weights baked in
+                           (input: int8 [B, C, H, W]; output: int32
+                           logits in a 1-tuple)
+  mininet_ref.hlo.txt      same graph via the jnp oracle (A/B check)
+  tile_matmul.hlo.txt      golden dyadic tile matmul (x, planes) -> acc
+  mininet_manifest.json    layer table: shapes, strides, requant muls,
+                           FTA thresholds, class count, file offsets
+  mininet_weights.bin      int8 [K, N] row-major weight matrices, concat
+  mininet_masks.bin        u8 block masks [K, N/α] row-major, concat
+  mininet_input.bin        fixed int8 input batch (B=2)
+  mininet_golden.bin       int32 golden logits for that batch
+
+Python runs once at build time; the rust binary is self-contained
+afterwards. `make artifacts` is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # requant uses exact int64
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import pruning
+
+TILE_M, TILE_K, TILE_N = 64, 128, 64
+BATCH = 2
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    `print_large_constants=True` is essential: the default printer elides
+    big literals as `{...}`, which the 0.5.1 HLO text parser then
+    silently mis-reads — baked weights would execute as garbage.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_mininet(out_dir: str, seed: int = 0, value_sparsity: float = 0.6) -> None:
+    spec = model_lib.MiniNetSpec()
+    params = model_lib.synthesize_weights(spec, seed=seed,
+                                          value_sparsity=value_sparsity)
+
+    # --- golden HLO graphs -------------------------------------------------
+    x_spec = jax.ShapeDtypeStruct((BATCH, spec.input_ch, spec.input_hw,
+                                   spec.input_hw), jnp.int8)
+    for fname, use_kernel in (("mininet.hlo.txt", True),
+                              ("mininet_ref.hlo.txt", False)):
+        fn = model_lib.make_golden_fn(params, spec, use_kernel=use_kernel)
+        text = to_hlo_text(jax.jit(fn).lower(x_spec))
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+
+    tile_fn = model_lib.make_tile_matmul_fn(TILE_M, TILE_K, TILE_N)
+    tile_text = to_hlo_text(jax.jit(tile_fn).lower(
+        jax.ShapeDtypeStruct((TILE_M, TILE_K), jnp.int8),
+        jax.ShapeDtypeStruct((4, TILE_K, TILE_N), jnp.int8)))
+    with open(os.path.join(out_dir, "tile_matmul.hlo.txt"), "w") as f:
+        f.write(tile_text)
+
+    # --- binary weight pack + manifest ------------------------------------
+    weights = bytearray()
+    masks = bytearray()
+    layers = []
+    order = [c.name for c in spec.convs] + ["fc"]
+    for name in order:
+        p = params[name]
+        w = np.asarray(p["w"], dtype=np.int8)  # [K, N]
+        m = np.asarray(p["mask"], dtype=np.uint8)  # [K, N/α]
+        c = p["spec"]
+        layers.append({
+            "name": name,
+            "kind": "conv" if c is not None else "fc",
+            "k": int(w.shape[0]), "n": int(w.shape[1]),
+            "weight_offset": len(weights), "mask_offset": len(masks),
+            "requant_mul": int(p["mul"]),
+            "thresholds": [int(t) for t in np.asarray(p["th"]).reshape(-1)],
+            "conv": None if c is None else {
+                "out_ch": c.out_ch, "in_ch": c.in_ch, "kernel": c.kernel,
+                "stride": c.stride, "pad": c.pad, "pool": bool(c.pool),
+            },
+        })
+        weights += w.tobytes()
+        masks += m.tobytes()
+
+    # --- fixed verification batch ------------------------------------------
+    rng = np.random.default_rng(1234)
+    x = rng.integers(0, 96, size=(BATCH, spec.input_ch, spec.input_hw,
+                                  spec.input_hw), dtype=np.int8)
+    golden = np.asarray(model_lib.forward(params, jnp.asarray(x), spec,
+                                          use_kernel=False), dtype=np.int32)
+    kernel_out = np.asarray(model_lib.forward(params, jnp.asarray(x), spec,
+                                              use_kernel=True), dtype=np.int32)
+    assert np.array_equal(golden, kernel_out), \
+        "Pallas kernel path diverged from the jnp oracle"
+
+    manifest = {
+        "version": 1,
+        "alpha": pruning.ALPHA,
+        "input": {"batch": BATCH, "ch": spec.input_ch, "hw": spec.input_hw},
+        "num_classes": spec.num_classes,
+        "value_sparsity": value_sparsity,
+        "seed": seed,
+        "layers": layers,
+        "files": {
+            "weights": "mininet_weights.bin",
+            "masks": "mininet_masks.bin",
+            "input": "mininet_input.bin",
+            "golden": "mininet_golden.bin",
+            "hlo": "mininet.hlo.txt",
+            "tile_hlo": "tile_matmul.hlo.txt",
+        },
+        "tile": {"m": TILE_M, "k": TILE_K, "n": TILE_N},
+    }
+    with open(os.path.join(out_dir, "mininet_manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    for fname, blob in (("mininet_weights.bin", bytes(weights)),
+                        ("mininet_masks.bin", bytes(masks)),
+                        ("mininet_input.bin", x.tobytes()),
+                        ("mininet_golden.bin", golden.tobytes())):
+        with open(os.path.join(out_dir, fname), "wb") as f:
+            f.write(blob)
+    print(f"exported {len(layers)} layers, {len(weights)} weight bytes, "
+          f"golden logits {golden.shape} -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--value-sparsity", type=float, default=0.6)
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    export_mininet(out_dir, seed=args.seed, value_sparsity=args.value_sparsity)
+
+
+if __name__ == "__main__":
+    main()

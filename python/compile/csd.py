@@ -1,0 +1,176 @@
+"""Canonical Signed Digit (CSD) encoding and dyadic-block decomposition.
+
+CSD (Reitwiesner 1960) represents an integer with digits in {-1, 0, 1}
+such that (1) the number of non-zero digits is minimal, (2) no two
+adjacent digits are both non-zero, and (3) the representation is unique.
+This is exactly the non-adjacent form (NAF).
+
+DB-PIM partitions the 8 CSD digit positions of an INT8 value into four
+*dyadic blocks* (bit pairs): DB#k covers positions (2k+1, 2k). Property
+(2) guarantees each block holds at most one non-zero digit, so a block is
+either the Zero pattern `00` or a Complementary pattern (one signed digit
+at the even or odd position). A Comp. pattern maps onto the Q/Q-bar
+cross-coupled pair of a single 6T SRAM cell.
+
+All functions here are pure numpy (build-time only) and are mirrored
+bit-exactly by ``rust/src/csd/``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: Number of CSD digit positions used for INT8 ([-128, 127] never needs
+#: a digit above position 7 in NAF).
+NUM_DIGITS = 8
+
+#: Number of dyadic blocks per INT8 value.
+NUM_BLOCKS = NUM_DIGITS // 2
+
+#: Maximum possible non-zero digit count for an INT8 value (one per block).
+MAX_PHI = NUM_BLOCKS
+
+
+def to_csd(value: int) -> np.ndarray:
+    """Encode a single integer in [-128, 127] as 8 NAF/CSD digits.
+
+    Returns an int8 array ``d`` of shape (8,), LSB first, with
+    ``value == sum(d[i] * 2**i)`` and ``d[i] in {-1, 0, 1}``.
+    """
+    if not -128 <= value <= 127:
+        raise ValueError(f"value {value} out of INT8 range")
+    x = int(value)
+    digits = np.zeros(NUM_DIGITS, dtype=np.int8)
+    i = 0
+    while x != 0:
+        if x & 1:
+            # 2 - (x mod 4): +1 when x % 4 == 1, -1 when x % 4 == 3.
+            d = 2 - (x & 3)
+            x -= d
+            digits[i] = d
+        i += 1
+        x >>= 1
+    return digits
+
+
+def to_csd_array(values: np.ndarray) -> np.ndarray:
+    """Vectorized CSD encoding.
+
+    Args:
+      values: integer array, each element in [-128, 127].
+
+    Returns:
+      int8 array of shape ``values.shape + (8,)``, digits LSB first.
+    """
+    v = np.asarray(values)
+    if v.size and (v.min() < -128 or v.max() > 127):
+        raise ValueError("values out of INT8 range")
+    x = v.astype(np.int64)
+    out = np.zeros(v.shape + (NUM_DIGITS,), dtype=np.int8)
+    for i in range(NUM_DIGITS):
+        odd = (x & 1).astype(bool)
+        d = np.where(odd, 2 - (x & 3), 0)
+        x = (x - d) >> 1
+        out[..., i] = d.astype(np.int8)
+    assert not np.any(x), "residual after 8 CSD digits (value out of range?)"
+    return out
+
+
+def from_csd(digits: np.ndarray) -> np.ndarray:
+    """Decode CSD digits (last axis, LSB first) back to integers."""
+    d = np.asarray(digits, dtype=np.int64)
+    weights = 1 << np.arange(d.shape[-1], dtype=np.int64)
+    return np.tensordot(d, weights, axes=([-1], [0]))
+
+
+def phi(values: np.ndarray) -> np.ndarray:
+    """Non-zero CSD digit count per element (the paper's φ), in 0..4."""
+    return np.count_nonzero(to_csd_array(values), axis=-1).astype(np.int32)
+
+
+def is_nonadjacent(digits: np.ndarray) -> np.ndarray:
+    """Check the NAF property: no two adjacent non-zero digits."""
+    d = np.asarray(digits) != 0
+    adj = d[..., :-1] & d[..., 1:]
+    return ~np.any(adj, axis=-1)
+
+
+def dyadic_blocks(values: np.ndarray) -> np.ndarray:
+    """Decompose values into dyadic-block coefficients.
+
+    Block k covers CSD positions (2k, 2k+1); its coefficient is
+    ``d[2k] + 2 * d[2k+1]`` in {-2, -1, 0, 1, 2}, so
+
+        value == sum_k coeff[k] << (2 * k).
+
+    Returns int8 array of shape ``values.shape + (4,)``.
+    """
+    d = to_csd_array(values).astype(np.int8)
+    even = d[..., 0::2]
+    odd = d[..., 1::2]
+    return (even + 2 * odd).astype(np.int8)
+
+
+def from_dyadic_blocks(coeffs: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`dyadic_blocks`."""
+    c = np.asarray(coeffs, dtype=np.int64)
+    weights = 1 << (2 * np.arange(c.shape[-1], dtype=np.int64))
+    return np.tensordot(c, weights, axes=([-1], [0]))
+
+
+def block_metadata(value: int) -> list[dict]:
+    """Per-value Comp. pattern metadata, as stored in the DB-PIM meta RF.
+
+    Returns a list (one entry per non-zero dyadic block) of dicts with:
+      ``index``  — block index 0..3 (the paper's 2-bit DB index),
+      ``sign``   — 1 for a negative digit, 0 for positive,
+      ``odd``    — True when the digit sits at the odd position of the
+                   block (pattern ``10``/``T0``); this is the Q bit, and
+                   Q-bar is its complement (pattern ``01``/``0T``).
+    """
+    coeffs = dyadic_blocks(np.asarray(value)).reshape(-1)
+    meta = []
+    for k, c in enumerate(coeffs):
+        c = int(c)
+        if c == 0:
+            continue
+        meta.append({
+            "index": k,
+            "sign": 1 if c < 0 else 0,
+            "odd": abs(c) == 2,
+        })
+    return meta
+
+
+def digit_planes(weight: np.ndarray) -> np.ndarray:
+    """Dyadic digit planes for a weight matrix.
+
+    Args:
+      weight: int array of shape [K, N] with INT8 values.
+
+    Returns:
+      int8 array of shape [4, K, N] — plane ``d`` holds the dyadic-block
+      coefficient for block ``d``, so
+      ``weight == sum_d planes[d] << (2 * d)``. This is the layout the
+      Pallas kernel (L1) consumes; the rust compiler produces the packed
+      SRAM image from the same decomposition.
+    """
+    blocks = dyadic_blocks(weight)  # [K, N, 4]
+    return np.moveaxis(blocks, -1, 0).astype(np.int8)
+
+
+def nonzero_bit_fraction(values: np.ndarray, encoding: str = "csd") -> float:
+    """Fraction of non-zero bits/digits over all 8-bit positions.
+
+    ``encoding`` is ``"csd"`` (signed digits) or ``"binary"`` (two's
+    complement bits). Used by the Fig. 3(a) analysis.
+    """
+    v = np.asarray(values)
+    if encoding == "csd":
+        nz = np.count_nonzero(to_csd_array(v))
+    elif encoding == "binary":
+        bits = (v.astype(np.int64) & 0xFF).astype(np.uint8)
+        nz = int(np.unpackbits(bits[..., None], axis=-1).sum())
+    else:
+        raise ValueError(f"unknown encoding {encoding!r}")
+    return nz / (v.size * NUM_DIGITS) if v.size else 0.0

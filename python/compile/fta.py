@@ -1,0 +1,144 @@
+"""Fixed-Threshold Approximation (FTA) — Algorithm 1 of the paper.
+
+FTA imposes a uniform non-zero CSD digit count φ_th per *filter*: every
+weight in the filter is re-projected to the nearest INT8 value whose CSD
+representation has exactly φ_th non-zero digits. Because every surviving
+weight then occupies exactly φ_th dyadic blocks, a filter maps onto a
+fixed number of SRAM columns and the crossbar stays regular while the
+zero blocks are physically removed.
+
+The threshold is the mode of the filter's digit counts (over weights not
+removed by coarse-grained pruning), clamped to [0, 2]:
+
+    all φ == 0      → φ_th = 0      (all-zero filter)
+    mode == 0       → φ_th = 1
+    1 <= mode <= 2  → φ_th = mode
+    mode > 2        → φ_th = 2
+
+Mirrored bit-exactly by ``rust/src/fta/``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from . import csd
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+@functools.lru_cache(maxsize=None)
+def query_table(phi_th: int) -> np.ndarray:
+    """T(φ_th): all INT8 values whose CSD has exactly φ_th non-zero digits.
+
+    Sorted ascending. |T(0)| = 1 and |T(1)| = 15 (±2^0..2^6 plus -2^7;
+    +128 is out of INT8 range); the five tables partition the 256 values.
+    """
+    if not 0 <= phi_th <= csd.MAX_PHI:
+        raise ValueError(f"phi_th {phi_th} out of range")
+    values = np.arange(INT8_MIN, INT8_MAX + 1, dtype=np.int64)
+    counts = csd.phi(values)
+    return values[counts == phi_th].astype(np.int64)
+
+
+def nearest_in_table(values: np.ndarray, phi_th: int) -> np.ndarray:
+    """Project each value to the closest element of T(φ_th).
+
+    Ties resolve to the larger candidate (matching the paper's example
+    where 0 projects to +1 under φ_th = 1); the rust mirror uses the same
+    rule.
+    """
+    table = query_table(phi_th)
+    v = np.asarray(values, dtype=np.int64)
+    # searchsorted gives the insertion point; candidates are at idx-1, idx.
+    idx = np.searchsorted(table, v)
+    lo = np.clip(idx - 1, 0, len(table) - 1)
+    hi = np.clip(idx, 0, len(table) - 1)
+    dist_lo = np.abs(v - table[lo])
+    dist_hi = np.abs(table[hi] - v)
+    # Strict '<' keeps hi on ties => prefer the larger value.
+    return np.where(dist_lo < dist_hi, table[lo], table[hi])
+
+
+def filter_threshold(phis: np.ndarray, mask: np.ndarray) -> int:
+    """Compute φ_th for one filter from its digit counts and prune mask.
+
+    ``phis``: int array, non-zero digit count per weight.
+    ``mask``: same shape; 0 marks weights removed by coarse pruning
+    (excluded from the mode).
+    """
+    phis = np.asarray(phis).reshape(-1)
+    mask = np.asarray(mask).reshape(-1)
+    kept = phis[mask != 0]
+    if kept.size == 0 or not np.any(phis):
+        return 0
+    counts = np.bincount(kept, minlength=csd.MAX_PHI + 1)
+    # Mode; ties resolve to the smaller φ (np.argmax picks first max),
+    # which biases toward sparsity. The rust mirror matches.
+    mode = int(np.argmax(counts))
+    if mode == 0:
+        return 1
+    return min(mode, 2)
+
+
+def fta_filter(weights: np.ndarray, mask: np.ndarray) -> tuple[np.ndarray, int]:
+    """Apply FTA to one filter (Alg. 1 body for a single i).
+
+    Masked (coarse-pruned) weights stay exactly zero; every other weight
+    — including naturally-zero unpruned weights — is re-projected into
+    T(φ_th).
+
+    Returns (approximated weights int64, φ_th).
+    """
+    w = np.asarray(weights, dtype=np.int64)
+    m = np.asarray(mask) != 0
+    phis = csd.phi(w) * m  # pruned weights contribute φ=0 and are excluded
+    th = filter_threshold(csd.phi(w), m)
+    if th == 0:
+        return np.zeros_like(w), 0
+    approx = nearest_in_table(w, th)
+    return np.where(m, approx, 0), th
+
+
+def fta_layer(weights: np.ndarray, mask: np.ndarray | None = None
+              ) -> tuple[np.ndarray, np.ndarray]:
+    """Apply FTA to a layer's weight matrix.
+
+    Args:
+      weights: int array [K, N] (im2col layout — column n is filter n).
+      mask: optional [K, N] 0/1 array from coarse-grained pruning
+        (1 = kept). Defaults to all-ones.
+
+    Returns:
+      (approximated weights [K, N] int64, thresholds [N] int64).
+    """
+    w = np.asarray(weights, dtype=np.int64)
+    if w.ndim != 2:
+        raise ValueError("fta_layer expects [K, N]")
+    m = np.ones_like(w) if mask is None else np.asarray(mask, dtype=np.int64)
+    if m.shape != w.shape:
+        raise ValueError("mask shape mismatch")
+    out = np.zeros_like(w)
+    ths = np.zeros(w.shape[1], dtype=np.int64)
+    for n in range(w.shape[1]):
+        out[:, n], ths[n] = fta_filter(w[:, n], m[:, n])
+    return out, ths
+
+
+def bit_sparsity(weights: np.ndarray) -> float:
+    """Fraction of zero CSD digits — the paper's bit-level sparsity."""
+    return 1.0 - csd.nonzero_bit_fraction(weights, "csd")
+
+
+def guaranteed_sparsity(thresholds: np.ndarray) -> float:
+    """Minimum bit-level sparsity guaranteed by FTA thresholds.
+
+    φ_th = 2 guarantees ≥ 75% (2 of 8 digit positions), φ_th = 1 ≥ 87.5%.
+    The paper standardizes reporting at the 75% floor.
+    """
+    th = np.asarray(thresholds, dtype=np.float64)
+    if th.size == 0:
+        return 1.0
+    return float(1.0 - th.mean() / csd.NUM_DIGITS)

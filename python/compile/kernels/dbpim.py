@@ -1,0 +1,160 @@
+"""Layer-1 Pallas kernels: the DB-PIM macro compute hot-spot.
+
+Hardware adaptation (paper 28nm SRAM macro -> TPU-style tiling): the
+macro's 16-compartment x 16-DBMU grid with Tk2 = 16 sequential rows
+becomes a Pallas BlockSpec tile — the (M, N) output tile lives in VMEM
+(the macro's accumulator registers), the K dimension is the grid's inner
+loop (the macro's compartment/row traversal), and the four dyadic-block
+digit planes play the role of the Comp.-pattern columns: the weight
+tensor is stored *decomposed* (planes[d] in {-2..2}) and the result is
+reassembled by the CSD adder-tree semantics ``sum_d (x @ P_d) << 2d``.
+The bit-serial kernel models the macro's input dataflow (one input bit
+column per cycle, IPU-style zero-column skipping is a runtime decision
+and lives in the rust simulator).
+
+Kernels are lowered with ``interpret=True``: real-TPU Pallas emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute; interpret mode
+lowers to plain HLO ops with identical numerics (see DESIGN.md §8 for
+the VMEM/MXU analysis used in place of TPU wallclock).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry. Chosen so one (TM, TN) int32 accumulator tile +
+# one (TM, TK) int8 input tile + four (TK, TN) int8 digit planes stay
+# well under VMEM (~0.3 MiB at these sizes; see DESIGN.md §8).
+TILE_M = 64
+TILE_N = 64
+TILE_K = 128
+
+NUM_PLANES = 4
+NUM_BITS = 8
+
+
+def _pick(tile: int, dim: int) -> int:
+    """Largest divisor of ``dim`` not exceeding ``tile``."""
+    t = min(tile, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+def _dyadic_kernel(x_ref, p_ref, o_ref):
+    """One grid step: accumulate the four shifted plane matmuls.
+
+    x_ref: [TM, TK] int8 input tile (one compartment-group of rows).
+    p_ref: [4, TK, TN] int8 dyadic digit planes (the Comp.-pattern
+           contents of the macro columns for this K-slice).
+    o_ref: [TM, TN] int32 accumulator tile (PPU accumulator registers).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    acc = o_ref[...]
+    # CSD adder tree: each dyadic block contributes its partial product
+    # shifted by 2*d. Unrolled — four MXU-shaped matmuls per step.
+    for d in range(NUM_PLANES):
+        part = jnp.dot(x, p_ref[d].astype(jnp.int32),
+                       preferred_element_type=jnp.int32)
+        acc = acc + (part << (2 * d))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def dyadic_matmul(x, planes, *, tm=TILE_M, tn=TILE_N, tk=TILE_K):
+    """DB-PIM dyadic-block matmul.
+
+    Args:
+      x: [M, K] int8 inputs.
+      planes: [4, K, N] int8 dyadic-block coefficient planes; the logical
+        weight is ``sum_d planes[d] << 2d``.
+
+    Returns:
+      [M, N] int32 — bit-exact vs ``ref.int8_matmul(x, w)``.
+    """
+    m, k = x.shape
+    _, k2, n = planes.shape
+    assert k == k2, (k, k2)
+    tm, tn, tk = _pick(tm, m), _pick(tn, n), _pick(tk, k)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _dyadic_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((NUM_PLANES, tk, tn), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x, planes)
+
+
+def _bitserial_kernel(xb_ref, w_ref, o_ref):
+    """One grid step of the input-bit-serial dataflow.
+
+    xb_ref: [8, TM, TK] int8 input bit planes (bit b of every input).
+    w_ref:  [TK, TN] int8 weights.
+    o_ref:  [TM, TN] int32 accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...].astype(jnp.int32)
+    acc = o_ref[...]
+    # Bit-serial: the macro broadcasts one input bit column per cycle;
+    # shift&add in the PPU. Bit 7 carries the two's-complement sign.
+    for b in range(NUM_BITS):
+        part = jnp.dot(xb_ref[b].astype(jnp.int32), w,
+                       preferred_element_type=jnp.int32)
+        signed = jnp.where(b == NUM_BITS - 1, -part, part)
+        acc = acc + (signed << b)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk"))
+def bitserial_matmul(x, w, *, tm=TILE_M, tn=TILE_N, tk=TILE_K):
+    """Digital-PIM bit-serial matmul (dense baseline dataflow).
+
+    x: [M, K] int8, w: [K, N] int8 -> [M, N] int32, bit-exact vs
+    ``ref.int8_matmul``.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    xi = x.astype(jnp.int32)
+    bits = jnp.stack([(xi >> b) & 1 for b in range(NUM_BITS)]).astype(jnp.int8)
+    tm, tn, tk = _pick(tm, m), _pick(tn, n), _pick(tk, k)
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _bitserial_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((NUM_BITS, tm, tk), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(bits, w)
+
+
+def vmem_bytes(tm: int = TILE_M, tn: int = TILE_N, tk: int = TILE_K) -> int:
+    """Static VMEM footprint estimate for one dyadic grid step."""
+    x = tm * tk            # int8 input tile
+    p = NUM_PLANES * tk * tn  # int8 planes
+    o = 4 * tm * tn        # int32 accumulator
+    return x + p + o

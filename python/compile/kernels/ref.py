@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for the DB-PIM compute path.
+
+These are the correctness references that the Pallas kernels (L1), the
+exported HLO graphs (L2), and — through the exported golden artifacts —
+the rust cycle-accurate simulator (L3) are all validated against.
+
+All arithmetic is exact integer math (INT8 operands, INT32 accumulation,
+INT64 requantization), so every layer of the stack can be compared
+bit-exactly. The requantization scheme is the fixed-point multiplier
+form shared with ``rust/src/quant/``:
+
+    out = clamp( (acc * mul + (1 << (shift-1))) >> shift , -128, 127)
+
+with ``mul`` an i32 and ``shift = 16`` (rounds half toward +inf — the
+same rule on both sides).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REQUANT_SHIFT = 16
+
+
+def int8_matmul(x, w):
+    """Exact INT8 x INT8 -> INT32 matmul. x: [M, K] int8-valued, w: [K, N]."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def dyadic_matmul(x, planes):
+    """Reference for the dyadic-block (CSD digit-plane) matmul.
+
+    planes: [4, K, N] int8, coefficient of dyadic block d in {-2..2};
+    result == int8_matmul(x, sum_d planes[d] << 2d).
+    """
+    acc = jnp.zeros((x.shape[0], planes.shape[2]), jnp.int32)
+    for d in range(planes.shape[0]):
+        part = jnp.dot(x.astype(jnp.int32), planes[d].astype(jnp.int32),
+                       preferred_element_type=jnp.int32)
+        acc = acc + (part << (2 * d))
+    return acc
+
+
+def bitserial_matmul(x, w):
+    """Reference for the input-bit-serial dataflow of digital SRAM-PIM.
+
+    Inputs are processed one bit-plane at a time (the macro broadcasts
+    one input bit column per cycle); bit 7 of a signed INT8 input has
+    weight -2^7. result == int8_matmul(x, w).
+    """
+    xi = x.astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for b in range(8):
+        bit = (xi >> b) & 1
+        sign = -1 if b == 7 else 1
+        part = jnp.dot(bit, w.astype(jnp.int32),
+                       preferred_element_type=jnp.int32)
+        acc = acc + sign * (part << b)
+    return acc
+
+
+def requant_mul_shift(scale_ratio: float) -> int:
+    """Fixed-point multiplier for a float requant ratio (shift = 16)."""
+    mul = int(round(scale_ratio * (1 << REQUANT_SHIFT)))
+    if not 0 <= mul < 2 ** 31:
+        raise ValueError(f"requant ratio {scale_ratio} out of range")
+    return mul
+
+
+def requantize(acc, mul: int, shift: int = REQUANT_SHIFT):
+    """INT32 accumulator -> INT8 output, exact fixed-point semantics."""
+    wide = acc.astype(jnp.int64) * jnp.int64(mul)
+    rounded = (wide + (jnp.int64(1) << (shift - 1))) >> shift
+    return jnp.clip(rounded, -128, 127).astype(jnp.int32)
+
+
+def im2col(x, kh: int, kw: int, stride: int = 1, pad: int = 0):
+    """Unfold NCHW activations into matmul rows.
+
+    x: [N, C, H, W] -> [N * OH * OW, C * kh * kw]; column order is
+    (c, kh, kw) row-major, matching ``rust/src/tensor/``.
+    """
+    n, c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, :, i:i + stride * oh:stride, j:j + stride * ow:stride]
+            cols.append(patch)  # [N, C, OH, OW]
+    stack = jnp.stack(cols, axis=2)  # [N, C, KH*KW, OH, OW]
+    stack = stack.transpose(0, 3, 4, 1, 2)  # [N, OH, OW, C, KHKW]
+    return stack.reshape(n * oh * ow, c * kh * kw), (n, oh, ow)
+
+
+def conv2d_int8(x, w, stride: int = 1, pad: int = 0):
+    """Exact INT8 conv via im2col. x: [N,C,H,W], w: [O,C,KH,KW] -> int32
+    [N,O,OH,OW]."""
+    o, c, kh, kw = w.shape
+    cols, (n, oh, ow) = im2col(x, kh, kw, stride, pad)
+    wmat = w.reshape(o, c * kh * kw).T  # [CKK, O]
+    out = int8_matmul(cols, wmat)  # [N*OH*OW, O]
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def maxpool2x2(x):
+    """2x2/2 max pool on [N, C, H, W] integers."""
+    n, c, h, w = x.shape
+    xr = x.reshape(n, c, h // 2, 2, w // 2, 2)
+    return xr.max(axis=(3, 5))
+
+
+def avgpool_global(x):
+    """Global average pool with floor division (integer semantics)."""
+    n, c, h, w = x.shape
+    s = x.astype(jnp.int32).sum(axis=(2, 3))
+    return s // (h * w)
+
+
+def numpy_int8_matmul(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Host-side exact reference (used by pytest without tracing)."""
+    return x.astype(np.int64) @ w.astype(np.int64)

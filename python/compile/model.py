@@ -1,0 +1,169 @@
+"""Layer-2 JAX model: quantized CNN forward built on the L1 kernels.
+
+The network here ("MiniNet") is the end-to-end verification workload: a
+small INT8 CNN whose weights go through the full DB-PIM pipeline (coarse
+block pruning -> FTA projection -> dyadic-block decomposition). Its
+forward pass calls the Pallas dyadic kernel for every conv/FC layer, so
+the AOT-lowered HLO exercises the exact compute the rust simulator
+models; the rust e2e example compares the simulator's integer outputs
+against this graph bit-for-bit.
+
+All layer arithmetic is integer-exact (see kernels/ref.py for the shared
+requantization semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dbpim, ref
+from . import csd, fta, pruning
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One conv layer: INT8 weights [O, C, KH, KW], stride/pad, requant."""
+    name: str
+    out_ch: int
+    in_ch: int
+    kernel: int
+    stride: int = 1
+    pad: int = 1
+    pool: bool = False  # 2x2 max pool after ReLU
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniNetSpec:
+    """The e2e verification CNN (channels are multiples of α = 8)."""
+    input_hw: int = 16
+    input_ch: int = 8
+    num_classes: int = 16
+    convs: tuple = (
+        ConvSpec("conv1", 16, 8, 3, pool=True),
+        ConvSpec("conv2", 32, 16, 3, pool=True),
+        ConvSpec("conv3", 32, 32, 3),
+    )
+
+    @property
+    def fc_in(self) -> int:
+        hw = self.input_hw
+        for c in self.convs:
+            hw = hw // c.stride
+            if c.pool:
+                hw //= 2
+        return self.convs[-1].out_ch * hw * hw
+
+
+def synthesize_weights(spec: MiniNetSpec, seed: int = 0,
+                       value_sparsity: float = 0.6,
+                       apply_fta: bool = True) -> dict:
+    """Generate FTA-compliant INT8 weights + requant multipliers.
+
+    Weights are drawn from a clipped Gaussian (trained-CNN-like
+    distribution), block-pruned at ``value_sparsity``, then FTA-projected
+    — the exact offline pipeline the rust compiler consumes.
+
+    Returns a dict: name -> {"w": int8 [O,C,KH,KW] or [K,N] for fc,
+    "mask": block mask, "th": per-filter φ_th, "mul": requant
+    multiplier}.
+    """
+    rng = np.random.default_rng(seed)
+    params = {}
+    for c in spec.convs:
+        k = c.in_ch * c.kernel * c.kernel
+        w = np.clip(rng.normal(0.0, 24.0, size=(k, c.out_ch)), -127, 127)
+        w = np.round(w).astype(np.int64)
+        pruned, mask = pruning.prune_blocks(w, value_sparsity)
+        if apply_fta:
+            wq, th = fta.fta_layer(pruned, pruning.expand_mask(mask))
+        else:
+            wq, th = pruned, csd.phi(pruned).max(axis=0)
+        # Requant multiplier keeps activations in INT8 range: scale by
+        # ~1/(sqrt(K) * sigma) in fixed point.
+        mul = ref.requant_mul_shift(1.0 / (np.sqrt(k) * 24.0 * 0.25))
+        params[c.name] = {
+            "w": wq.reshape(k, c.out_ch).astype(np.int8),
+            "mask": mask, "th": th.astype(np.int8), "mul": mul,
+            "spec": c,
+        }
+    # FC layer; num_classes may not be a multiple of α — pad filters up.
+    kfc = spec.fc_in
+    ncls = spec.num_classes
+    npad = ((ncls + pruning.ALPHA - 1) // pruning.ALPHA) * pruning.ALPHA
+    w = np.round(np.clip(rng.normal(0.0, 24.0, size=(kfc, npad)), -127, 127)).astype(np.int64)
+    pruned, mask = pruning.prune_blocks(w, value_sparsity)
+    if apply_fta:
+        wq, th = fta.fta_layer(pruned, pruning.expand_mask(mask))
+    else:
+        wq, th = pruned, csd.phi(pruned).max(axis=0)
+    params["fc"] = {
+        "w": wq.astype(np.int8), "mask": mask, "th": th.astype(np.int8),
+        "mul": ref.requant_mul_shift(1.0 / (np.sqrt(kfc) * 24.0 * 0.25)),
+        "spec": None, "classes": ncls,
+    }
+    return params
+
+
+def _conv_layer(x, w_planes, mul, c: ConvSpec, use_kernel: bool):
+    """INT8 conv -> requant -> ReLU (-> pool) with exact integer math."""
+    cols, (n, oh, ow) = ref.im2col(x, c.kernel, c.kernel, c.stride, c.pad)
+    if use_kernel:
+        acc = dbpim.dyadic_matmul(cols.astype(jnp.int8), w_planes)
+    else:
+        w = sum((w_planes[d].astype(jnp.int32) << (2 * d)) for d in range(4))
+        acc = ref.int8_matmul(cols, w)
+    out = ref.requantize(acc, mul)
+    out = ref.relu(out)
+    out = out.reshape(n, oh, ow, -1).transpose(0, 3, 1, 2)
+    if c.pool:
+        out = ref.maxpool2x2(out)
+    return out
+
+
+def forward(params: dict, x, spec: MiniNetSpec, use_kernel: bool = True):
+    """MiniNet forward: x int8 [N, C, H, W] -> int32 logits [N, classes].
+
+    ``use_kernel=True`` routes every matmul through the L1 Pallas dyadic
+    kernel; ``False`` uses the jnp oracle (for A/B testing the lowering).
+    """
+    h = x
+    for c in spec.convs:
+        p = params[c.name]
+        planes = jnp.asarray(csd.digit_planes(np.asarray(p["w"], dtype=np.int64)))
+        h = _conv_layer(h, planes, p["mul"], c, use_kernel)
+    n = h.shape[0]
+    flat = h.transpose(0, 2, 3, 1).reshape(n, -1)  # match rust (HWC) layout
+    pfc = params["fc"]
+    planes = jnp.asarray(csd.digit_planes(np.asarray(pfc["w"], dtype=np.int64)))
+    if use_kernel:
+        acc = dbpim.dyadic_matmul(flat.astype(jnp.int8), planes)
+    else:
+        w = sum((planes[d].astype(jnp.int32) << (2 * d)) for d in range(4))
+        acc = ref.int8_matmul(flat, w)
+    return acc[:, :pfc["classes"]]
+
+
+def make_golden_fn(params: dict, spec: MiniNetSpec, use_kernel: bool = True):
+    """Close over weights so the AOT graph takes only the activation.
+
+    The exported HLO then has the FTA weights baked in as constants —
+    the rust side feeds an input batch and compares raw logits.
+    """
+    def fn(x):
+        return (forward(params, x, spec, use_kernel),)
+    return fn
+
+
+def make_tile_matmul_fn(m: int, k: int, n: int):
+    """Golden tile graph: (x int8 [m,k], planes int8 [4,k,n]) -> int32.
+
+    Used by the rust runtime to verify individual simulator tiles via
+    PJRT without re-deriving weights.
+    """
+    def fn(x, planes):
+        return (dbpim.dyadic_matmul(x, planes),)
+    return fn

@@ -1,0 +1,102 @@
+"""Coarse-grained block-wise pruning (value-level sparsity).
+
+The weight matrix of a layer (im2col layout [K, N]: K input positions,
+N filters) is partitioned into non-overlapping 1xα blocks along the
+filter axis: block (k, g) covers weights at input position k in filters
+g*α .. g*α+α-1 — "the weights at the same position in multiple filters".
+α is fixed by the SRAM macro column count (α = 8 in DB-PIM).
+
+Blocks are ranked by L2 norm and the lowest fraction is pruned. Because
+a pruned block zeroes input position k for a whole α-filter group, the
+sparse allocation network can skip fetching that input feature for the
+group — this is the structured value-level sparsity the architecture
+exploits.
+
+Mirrored by ``rust/src/pruning/``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: DB-PIM pruning granularity (macro column count / FTA threshold).
+ALPHA = 8
+
+
+def block_l2(weights: np.ndarray, alpha: int = ALPHA) -> np.ndarray:
+    """L2 norm of each 1xα block.
+
+    Args:
+      weights: [K, N] with N divisible by α.
+
+    Returns:
+      float64 array [K, N // α].
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    k, n = w.shape
+    if n % alpha:
+        raise ValueError(f"N={n} not divisible by alpha={alpha}")
+    return np.sqrt((w.reshape(k, n // alpha, alpha) ** 2).sum(-1))
+
+
+def prune_blocks(weights: np.ndarray, sparsity: float,
+                 alpha: int = ALPHA) -> tuple[np.ndarray, np.ndarray]:
+    """Prune the lowest-L2 fraction of blocks.
+
+    Args:
+      weights: [K, N] float or int weights.
+      sparsity: fraction of blocks to prune, in [0, 1).
+      alpha: block width along the filter axis.
+
+    Returns:
+      (pruned weights (same dtype), block mask [K, N // α] uint8 with
+      1 = kept). Ties at the threshold are broken by block order
+      (stable argsort), matching the rust mirror.
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity {sparsity} out of [0, 1)")
+    w = np.asarray(weights)
+    norms = block_l2(w, alpha)
+    k, g = norms.shape
+    mask = np.ones((k, g), dtype=np.uint8)
+    n_prune = int(round(sparsity * k * g))
+    if n_prune:
+        order = np.argsort(norms.reshape(-1), kind="stable")
+        mask.reshape(-1)[order[:n_prune]] = 0
+    pruned = w * expand_mask(mask, alpha).astype(w.dtype)
+    return pruned, mask
+
+
+def expand_mask(block_mask: np.ndarray, alpha: int = ALPHA) -> np.ndarray:
+    """Expand a [K, G] block mask to a per-weight [K, G*α] mask."""
+    m = np.asarray(block_mask)
+    return np.repeat(m, alpha, axis=1)
+
+
+def value_sparsity(weights: np.ndarray) -> float:
+    """Fraction of exactly-zero weights."""
+    w = np.asarray(weights)
+    return 1.0 - (np.count_nonzero(w) / w.size) if w.size else 0.0
+
+
+def mask_sparsity(block_mask: np.ndarray) -> float:
+    """Fraction of pruned blocks."""
+    m = np.asarray(block_mask)
+    return 1.0 - (np.count_nonzero(m) / m.size) if m.size else 0.0
+
+
+def group_zero_column_fraction(acts: np.ndarray, group: int) -> float:
+    """Fig. 3(b): fraction of all-zero bit columns in groups of N inputs.
+
+    Activations are unsigned INT8 (post-ReLU). Inputs are grouped into
+    consecutive runs of ``group`` values; a bit column (one of the 8 bit
+    positions) is skippable when it is zero across the whole group.
+    """
+    a = np.asarray(acts).reshape(-1).astype(np.int64)
+    if a.size == 0:
+        return 0.0
+    usable = (a.size // group) * group
+    a = np.abs(a[:usable]).reshape(-1, group)
+    bits = (a[..., None] >> np.arange(8)) & 1  # [G, group, 8]
+    col_nonzero = bits.any(axis=1)  # [G, 8]
+    return float(1.0 - col_nonzero.mean())

@@ -1,0 +1,195 @@
+"""FTA-aware Quantization-Aware Training (QAT).
+
+Implements the paper's training recipe (Sec. III / VI-A):
+
+* INT8 symmetric fake-quantization of weights and activations with
+  **dynamic min-max ranges smoothed by an exponential moving average**
+  (EMA) — no precomputed global ranges, no trainable range parameters.
+* **Straight-through estimator** (STE) gradients through the quantizer
+  and through the FTA projection.
+* The **FTA projection is applied inside the training loop** (each
+  optimization step here; the paper says each epoch) so the optimizer
+  sees the accuracy impact of the fixed-threshold constraint.
+* Coarse-grained block-pruned weights are pinned to zero throughout
+  fine-tuning.
+
+Everything is pure JAX + a hand-rolled AdamW (optax is not available in
+the build image). Build-time only — never on the rust request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import csd, fta, pruning
+
+INT8_MAX = 127.0
+
+
+# --------------------------------------------------------------------------
+# Fake quantization with STE
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def quantize_symmetric(x, scale):
+    """Fake-quantize to INT8 with STE: x -> round(x / s).clip * s."""
+    q = ste_round(x / scale)
+    q = jnp.clip(q, -128.0, INT8_MAX)
+    return q * scale
+
+
+def amax_scale(x) -> jnp.ndarray:
+    """Symmetric min-max scale: amax / 127 (ε-guarded)."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / INT8_MAX
+
+
+@dataclasses.dataclass
+class EmaRange:
+    """EMA-smoothed absolute-max range tracker for activations."""
+    decay: float = 0.99
+
+    def init(self) -> jnp.ndarray:
+        return jnp.array(0.0, dtype=jnp.float32)
+
+    def update(self, state, x):
+        amax = jnp.max(jnp.abs(x))
+        new = jnp.where(state == 0.0, amax, self.decay * state + (1 - self.decay) * amax)
+        return new
+
+    def scale(self, state) -> jnp.ndarray:
+        return jnp.maximum(state, 1e-8) / INT8_MAX
+
+
+# --------------------------------------------------------------------------
+# FTA projection inside the loop (non-differentiable; applied to the
+# *quantized integer* weights, with STE back to the float master copy)
+# --------------------------------------------------------------------------
+
+def fta_project_int(w_int: np.ndarray, mask: np.ndarray | None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Project an integer [K, N] weight matrix to FTA-compliant values.
+
+    Pure numpy (runs on host between jitted steps, like the paper's
+    per-epoch application). Returns (projected ints, thresholds [N]).
+    """
+    return fta.fta_layer(w_int, mask)
+
+
+def apply_fta_to_params(params: dict, masks: dict, alpha: int = pruning.ALPHA,
+                        enable: bool = True) -> tuple[dict, dict]:
+    """Project every conv/dense kernel in ``params`` to FTA-compliant
+    fake-quantized values; biases are untouched.
+
+    ``masks`` maps parameter name -> block mask ([K, G] uint8) or None.
+    Returns (new params, thresholds per layer).
+    """
+    new = dict(params)
+    thresholds = {}
+    for name, w in params.items():
+        if not name.endswith("w"):
+            continue
+        wk = np.asarray(w)
+        k2 = wk.reshape(-1, wk.shape[-1])  # [K, N] im2col layout
+        scale = float(np.maximum(np.abs(k2).max(), 1e-8) / INT8_MAX)
+        w_int = np.clip(np.round(k2 / scale), -128, 127).astype(np.int64)
+        bmask = masks.get(name)
+        wmask = None if bmask is None else pruning.expand_mask(bmask, alpha)
+        if enable:
+            w_fta, th = fta_project_int(w_int, wmask)
+        else:
+            w_fta = w_int if wmask is None else w_int * wmask
+            th = csd.phi(w_fta).max(axis=0) if w_fta.size else np.zeros(0)
+        thresholds[name] = th
+        new[name] = jnp.asarray((w_fta * scale).reshape(wk.shape),
+                                dtype=jnp.float32)
+    return new, thresholds
+
+
+# --------------------------------------------------------------------------
+# Hand-rolled AdamW
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+
+    def init(self, params):
+        zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+        return {"m": zeros(params), "v": zeros(params), "t": jnp.array(0, jnp.int32)}
+
+    def update(self, grads, state, params, lr_scale=1.0):
+        t = state["t"] + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+        mhat = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+        vhat = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+        lr = self.lr * lr_scale
+        new_params = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                                        + self.weight_decay * p),
+            params, mhat, vhat)
+        return new_params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total_steps, base=1.0, floor=1e-4, warmup=0.02):
+    """Cosine annealing with linear warmup, as a multiplier of base lr."""
+    warm_steps = jnp.maximum(1, jnp.asarray(total_steps * warmup, jnp.float32))
+    warm = step / warm_steps
+    progress = jnp.clip((step - warm_steps) / jnp.maximum(1.0, total_steps - warm_steps), 0.0, 1.0)
+    cos = floor + (base - floor) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return jnp.where(step < warm_steps, base * warm, cos)
+
+
+# --------------------------------------------------------------------------
+# Masked-gradient helper: pinned zeros stay zero through fine-tuning
+# --------------------------------------------------------------------------
+
+def apply_weight_masks(params: dict, masks: dict, alpha: int = pruning.ALPHA) -> dict:
+    out = dict(params)
+    for name, bmask in masks.items():
+        if bmask is None or name not in params:
+            continue
+        w = params[name]
+        k2 = pruning.expand_mask(np.asarray(bmask), alpha).astype(np.float32)
+        out[name] = w * jnp.asarray(k2.reshape((-1,) + (w.shape[-1],)).reshape(w.shape))
+    return out
+
+
+def build_masks(params: dict, sparsity: float, alpha: int = pruning.ALPHA) -> dict:
+    """Coarse-grained block-wise pruning masks for every kernel param."""
+    masks = {}
+    for name, w in params.items():
+        if not name.endswith("w"):
+            continue
+        k2 = np.asarray(w).reshape(-1, w.shape[-1])
+        if k2.shape[1] % alpha or sparsity <= 0.0:
+            masks[name] = None
+            continue
+        _, bmask = pruning.prune_blocks(k2, sparsity, alpha)
+        masks[name] = bmask
+    return masks

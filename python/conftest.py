@@ -1,0 +1,6 @@
+"""Ensure the build-time package root (python/) is importable in tests."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,130 @@
+"""CSD codec tests: exhaustive over INT8 plus hypothesis sweeps."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import csd
+
+ALL_INT8 = np.arange(-128, 128, dtype=np.int64)
+
+
+def test_roundtrip_exhaustive():
+    digits = csd.to_csd_array(ALL_INT8)
+    back = csd.from_csd(digits)
+    np.testing.assert_array_equal(back, ALL_INT8)
+
+
+def test_digits_are_ternary():
+    digits = csd.to_csd_array(ALL_INT8)
+    assert set(np.unique(digits)) <= {-1, 0, 1}
+
+
+def test_nonadjacent_property_exhaustive():
+    """CSD property 2: no two adjacent non-zero digits."""
+    digits = csd.to_csd_array(ALL_INT8)
+    assert bool(np.all(csd.is_nonadjacent(digits)))
+
+
+def test_minimality_vs_binary():
+    """CSD property 1: never more non-zero digits than plain binary."""
+    digits = csd.to_csd_array(ALL_INT8)
+    csd_nz = np.count_nonzero(digits, axis=-1)
+    for v, nz in zip(ALL_INT8, csd_nz):
+        bin_nz = bin(int(v) & 0xFF).count("1")
+        assert nz <= max(bin_nz, 1) + 1  # loose sanity
+    # average reduction ~33% claimed by the paper for random data
+    assert csd_nz.mean() < 3.0
+
+
+def test_scalar_matches_vector():
+    for v in (-128, -67, -1, 0, 1, 67, 85, 127):
+        np.testing.assert_array_equal(csd.to_csd(v),
+                                      csd.to_csd_array(np.asarray(v)))
+
+
+def test_paper_example_67():
+    """Tab. I: 67 = 0100_0101-bar-at-0 -> digits at 6 (+), 2 (+), 0 (-)."""
+    d = csd.to_csd(67)
+    assert int(csd.from_csd(d)) == 67
+    nz = {i: int(d[i]) for i in range(8) if d[i]}
+    assert nz == {0: -1, 2: 1, 6: 1}
+
+
+def test_paper_example_neg67():
+    d = csd.to_csd(-67)
+    nz = {i: int(d[i]) for i in range(8) if d[i]}
+    assert nz == {0: 1, 2: -1, 6: -1}
+
+
+def test_phi_range():
+    phis = csd.phi(ALL_INT8)
+    assert phis.min() == 0 and phis.max() == csd.MAX_PHI
+    assert phis[128] == 0  # value 0
+    assert int(csd.phi(np.asarray(85))) == 4  # alternating 01010101
+
+
+def test_dyadic_block_at_most_one_digit():
+    """Each dyadic block is Zero or Comp. pattern — never two digits."""
+    digits = csd.to_csd_array(ALL_INT8).reshape(256, 4, 2)
+    per_block = np.count_nonzero(digits, axis=-1)
+    assert per_block.max() <= 1
+
+
+def test_dyadic_roundtrip_exhaustive():
+    coeffs = csd.dyadic_blocks(ALL_INT8)
+    assert set(np.unique(coeffs)) <= {-2, -1, 0, 1, 2}
+    np.testing.assert_array_equal(csd.from_dyadic_blocks(coeffs), ALL_INT8)
+
+
+def test_digit_planes_reconstruct():
+    rng = np.random.default_rng(0)
+    w = rng.integers(-128, 128, size=(24, 16), dtype=np.int64)
+    planes = csd.digit_planes(w)
+    assert planes.shape == (4, 24, 16)
+    recon = sum(planes[d].astype(np.int64) << (2 * d) for d in range(4))
+    np.testing.assert_array_equal(recon, w)
+
+
+def test_block_metadata_paper_example():
+    """f(0) = -64 (CSD 0T00_0000): one Comp. block at index 3, negative."""
+    meta = csd.block_metadata(-64)
+    assert meta == [{"index": 3, "sign": 1, "odd": False}]
+    # value 2 = block 0, odd position within block, positive
+    assert csd.block_metadata(2) == [{"index": 0, "sign": 0, "odd": True}]
+
+
+def test_metadata_count_equals_phi():
+    for v in ALL_INT8:
+        assert len(csd.block_metadata(int(v))) == int(csd.phi(np.asarray(v)))
+
+
+def test_nonzero_bit_fraction_csd_leq_binary_on_average():
+    rng = np.random.default_rng(1)
+    w = rng.integers(-128, 128, size=4096, dtype=np.int64)
+    f_csd = csd.nonzero_bit_fraction(w, "csd")
+    f_bin = csd.nonzero_bit_fraction(w, "binary")
+    assert f_csd < f_bin
+    # Reitwiesner's asymptotic density is 1/3 non-zero digits.
+    assert abs(f_csd - 1 / 3) < 0.03
+
+
+@given(st.lists(st.integers(min_value=-128, max_value=127), min_size=1,
+                max_size=256))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_hypothesis(values):
+    arr = np.asarray(values, dtype=np.int64)
+    np.testing.assert_array_equal(csd.from_csd(csd.to_csd_array(arr)), arr)
+    np.testing.assert_array_equal(
+        csd.from_dyadic_blocks(csd.dyadic_blocks(arr)), arr)
+
+
+@given(st.integers(min_value=-128, max_value=127))
+@settings(max_examples=256, deadline=None)
+def test_out_of_range_guard(v):
+    csd.to_csd(v)  # never raises in range
+    with pytest.raises(ValueError):
+        csd.to_csd(200)
+    with pytest.raises(ValueError):
+        csd.to_csd(-200)

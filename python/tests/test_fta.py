@@ -1,0 +1,124 @@
+"""FTA (Alg. 1) tests, including the paper's worked example."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import csd, fta
+
+
+def test_query_tables_partition_int8():
+    sizes = {p: len(fta.query_table(p)) for p in range(5)}
+    assert sizes[0] == 1  # {0}
+    assert sum(sizes.values()) == 256
+    union = np.concatenate([fta.query_table(p) for p in range(5)])
+    assert len(np.unique(union)) == 256
+
+
+def test_query_table_phi_exact():
+    for p in range(5):
+        t = fta.query_table(p)
+        np.testing.assert_array_equal(csd.phi(t), np.full(len(t), p))
+
+
+def test_query_table_1_is_signed_powers_of_two():
+    t = set(int(v) for v in fta.query_table(1))
+    expect = {s * 2 ** k for s in (1, -1) for k in range(8)}
+    expect = {v for v in expect if -128 <= v <= 127}
+    assert t == expect
+
+
+def test_nearest_tie_prefers_larger():
+    # 0 is equidistant from -1 and +1 in T(1); paper's example projects
+    # the unpruned natural zero to +1.
+    assert int(fta.nearest_in_table(np.asarray(0), 1)) == 1
+
+
+def test_paper_worked_example():
+    """Sec. IV-C: f0 = {-63,0,64,0,0,-8,13}, mask = {1,0,1,1,0,1,1}."""
+    f0 = np.asarray([-63, 0, 64, 0, 0, -8, 13])
+    mask = np.asarray([1, 0, 1, 1, 0, 1, 1])
+    phis = csd.phi(f0)
+    np.testing.assert_array_equal(phis, [2, 0, 1, 0, 0, 1, 3])
+    assert fta.filter_threshold(phis, mask) == 1
+    out, th = fta.fta_filter(f0, mask)
+    assert th == 1
+    np.testing.assert_array_equal(out, [-64, 0, 64, 1, 0, -8, 16])
+
+
+def test_threshold_rules():
+    # all-zero filter
+    assert fta.filter_threshold(np.zeros(8, int), np.ones(8, int)) == 0
+    # mode 0 with some non-zero -> 1
+    assert fta.filter_threshold(np.asarray([0, 0, 0, 1]), np.ones(4, int)) == 1
+    # mode in {1, 2} -> mode
+    assert fta.filter_threshold(np.asarray([1, 1, 2, 3]), np.ones(4, int)) == 1
+    assert fta.filter_threshold(np.asarray([2, 2, 1, 3]), np.ones(4, int)) == 2
+    # mode > 2 -> clamp to 2
+    assert fta.filter_threshold(np.asarray([3, 3, 4, 1]), np.ones(4, int)) == 2
+    # fully masked filter -> 0
+    assert fta.filter_threshold(np.asarray([1, 2, 3]), np.zeros(3, int)) == 0
+
+
+def test_fta_layer_every_kept_weight_has_threshold_digits():
+    rng = np.random.default_rng(7)
+    w = rng.integers(-128, 128, size=(64, 16), dtype=np.int64)
+    mask = (rng.random((64, 16)) > 0.3).astype(np.int64)
+    out, ths = fta.fta_layer(w, mask)
+    for n in range(w.shape[1]):
+        th = int(ths[n])
+        col = out[:, n]
+        kept = col[mask[:, n] != 0]
+        if th == 0:
+            np.testing.assert_array_equal(col, 0)
+        else:
+            np.testing.assert_array_equal(csd.phi(kept),
+                                          np.full(len(kept), th))
+        # pruned weights stay exactly zero
+        np.testing.assert_array_equal(col[mask[:, n] == 0], 0)
+
+
+def test_fta_projection_idempotent():
+    rng = np.random.default_rng(3)
+    w = rng.integers(-128, 128, size=(32, 8), dtype=np.int64)
+    once, th1 = fta.fta_layer(w)
+    twice, th2 = fta.fta_layer(once)
+    np.testing.assert_array_equal(once, twice)
+    np.testing.assert_array_equal(th1, th2)
+
+
+def test_thresholds_bounded_by_two():
+    rng = np.random.default_rng(11)
+    w = rng.integers(-128, 128, size=(128, 24), dtype=np.int64)
+    _, ths = fta.fta_layer(w)
+    assert ths.max() <= 2 and ths.min() >= 0
+
+
+def test_guaranteed_sparsity():
+    assert fta.guaranteed_sparsity(np.asarray([2, 2, 2])) == pytest.approx(0.75)
+    assert fta.guaranteed_sparsity(np.asarray([1, 1])) == pytest.approx(0.875)
+    assert fta.guaranteed_sparsity(np.asarray([0, 1, 2, 2, 1, 0])) == \
+        pytest.approx(1 - (6 / 6) / 8)
+
+
+def test_bit_sparsity_increases_after_fta():
+    rng = np.random.default_rng(5)
+    w = rng.integers(-128, 128, size=(256, 32), dtype=np.int64)
+    before = fta.bit_sparsity(w)
+    out, _ = fta.fta_layer(w)
+    after = fta.bit_sparsity(out)
+    assert after > before
+    assert after >= 0.75  # FTA guarantee with φ_th <= 2
+
+
+@given(st.integers(min_value=-128, max_value=127),
+       st.integers(min_value=1, max_value=2))
+@settings(max_examples=300, deadline=None)
+def test_projection_error_bounded(v, th):
+    """The projection picks the *closest* element — no table element is
+    nearer than the chosen one."""
+    chosen = int(fta.nearest_in_table(np.asarray(v), th))
+    table = fta.query_table(th)
+    best = int(np.min(np.abs(table - v)))
+    assert abs(chosen - v) == best

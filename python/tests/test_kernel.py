@@ -1,0 +1,145 @@
+"""L1 Pallas kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+The dyadic kernel must be *bit-exact* against exact INT8 matmul for all
+shapes/dtypes the compiler can emit; hypothesis sweeps the shape space.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile import csd
+from compile.kernels import dbpim, ref
+
+
+def _random_case(rng, m, k, n):
+    x = rng.integers(-128, 128, size=(m, k), dtype=np.int64)
+    w = rng.integers(-128, 128, size=(k, n), dtype=np.int64)
+    planes = csd.digit_planes(w)
+    return (jnp.asarray(x, jnp.int8), jnp.asarray(w, jnp.int8),
+            jnp.asarray(planes, jnp.int8))
+
+
+def test_dyadic_matmul_exact_default_tiles():
+    rng = np.random.default_rng(0)
+    x, w, planes = _random_case(rng, 64, 128, 64)
+    out = dbpim.dyadic_matmul(x, planes)
+    expect = ref.int8_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_dyadic_matmul_non_divisible_tiles():
+    """Shapes that don't divide the default tiles still work (tile
+    shrinks to a divisor)."""
+    rng = np.random.default_rng(1)
+    x, w, planes = _random_case(rng, 6, 36, 10)
+    out = dbpim.dyadic_matmul(x, planes)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.int8_matmul(x, w)))
+
+
+def test_dyadic_ref_matches_int8_matmul():
+    rng = np.random.default_rng(2)
+    x, w, planes = _random_case(rng, 16, 64, 24)
+    np.testing.assert_array_equal(
+        np.asarray(ref.dyadic_matmul(x, planes)),
+        np.asarray(ref.int8_matmul(x, w)))
+
+
+def test_bitserial_matmul_exact():
+    rng = np.random.default_rng(3)
+    x, w, _ = _random_case(rng, 32, 64, 16)
+    out = dbpim.bitserial_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.int8_matmul(x, w)))
+
+
+def test_bitserial_ref_matches():
+    rng = np.random.default_rng(4)
+    x, w, _ = _random_case(rng, 8, 40, 8)
+    np.testing.assert_array_equal(np.asarray(ref.bitserial_matmul(x, w)),
+                                  np.asarray(ref.int8_matmul(x, w)))
+
+
+def test_extreme_values():
+    """Worst-case magnitudes: -128 everywhere must not overflow int32."""
+    m, k, n = 8, 256, 8
+    x = jnp.full((m, k), -128, jnp.int8)
+    w = np.full((k, n), -128, np.int64)
+    planes = jnp.asarray(csd.digit_planes(w), jnp.int8)
+    out = dbpim.dyadic_matmul(x, planes)
+    expect = np.full((m, n), 128 * 128 * k, np.int32)
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_sparse_planes_zero_rows():
+    """All-zero weights -> all-zero output (Zero-pattern-only filters)."""
+    x = jnp.asarray(np.random.default_rng(5).integers(-128, 128, (16, 32)),
+                    jnp.int8)
+    planes = jnp.zeros((4, 32, 8), jnp.int8)
+    out = dbpim.dyadic_matmul(x, planes)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((16, 8)))
+
+
+def test_vmem_estimate_within_budget():
+    """DESIGN.md §8: default tile footprint stays far below ~16 MiB."""
+    assert dbpim.vmem_bytes() < 1 << 20
+
+
+def test_requantize_matches_fixed_point():
+    rng = np.random.default_rng(6)
+    acc = rng.integers(-(1 << 20), 1 << 20, size=(64,), dtype=np.int64)
+    mul = ref.requant_mul_shift(0.00317)
+    out = np.asarray(ref.requantize(jnp.asarray(acc, jnp.int32), mul))
+    # independent host-side computation of the same fixed-point rule
+    wide = acc.astype(np.int64) * mul
+    expect = np.clip((wide + (1 << 15)) >> 16, -128, 127)
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_requantize_rounding_rule_half_toward_plus_inf():
+    mul = 1 << 15  # ratio 0.5 at shift 16
+    acc = jnp.asarray([1, -1, 3, -3], jnp.int32)
+    out = np.asarray(ref.requantize(acc, mul))
+    # 0.5 -> 1, -0.5 -> 0, 1.5 -> 2, -1.5 -> -1
+    np.testing.assert_array_equal(out, [1, 0, 2, -1])
+
+
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(1, 5),
+       st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_dyadic_matmul_hypothesis(mi, ki, ni, seed):
+    """Shape sweep: m in 1..80, k in 1..96, n in 1..80 (random strides)."""
+    rng = np.random.default_rng(seed)
+    m, k, n = mi * 16, ki * 16, ni * 16
+    x, w, planes = _random_case(rng, m, k, n)
+    out = dbpim.dyadic_matmul(x, planes)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.int8_matmul(x, w)))
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 2 ** 32 - 1))
+@settings(max_examples=15, deadline=None)
+def test_bitserial_matmul_hypothesis(mi, ki, ni, seed):
+    rng = np.random.default_rng(seed)
+    m, k, n = mi * 8, ki * 16, ni * 8
+    x, w, _ = _random_case(rng, m, k, n)
+    out = dbpim.bitserial_matmul(x, w)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.int8_matmul(x, w)))
+
+
+@given(st.sampled_from([(1, 1, 1), (3, 7, 5), (2, 9, 4), (5, 3, 11)]),
+       st.integers(0, 2 ** 31))
+@settings(max_examples=12, deadline=None)
+def test_dyadic_matmul_awkward_shapes(shape, seed):
+    """Non-power-of-two shapes exercise the tile-shrink path."""
+    rng = np.random.default_rng(seed)
+    x, w, planes = _random_case(rng, *shape)
+    out = dbpim.dyadic_matmul(x, planes)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.int8_matmul(x, w)))

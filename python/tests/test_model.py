@@ -1,0 +1,120 @@
+"""L2 model tests: MiniNet forward, kernel-vs-oracle equality, pipeline."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import csd, fta, model as model_lib, pruning
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return model_lib.MiniNetSpec()
+
+
+@pytest.fixture(scope="module")
+def params(spec):
+    return model_lib.synthesize_weights(spec, seed=0, value_sparsity=0.6)
+
+
+@pytest.fixture(scope="module")
+def batch(spec):
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.integers(0, 96, size=(2, spec.input_ch,
+                                                 spec.input_hw,
+                                                 spec.input_hw)), jnp.int8)
+
+
+def test_fc_in_dimension(spec):
+    # 16x16 -> pool -> 8x8 -> pool -> 4x4, 32 channels
+    assert spec.fc_in == 32 * 4 * 4
+
+
+def test_weights_are_fta_compliant(params):
+    for name, p in params.items():
+        w = np.asarray(p["w"], dtype=np.int64)
+        th = np.asarray(p["th"])
+        mask = pruning.expand_mask(np.asarray(p["mask"]))
+        for n in range(w.shape[1]):
+            kept = w[mask[:, n] != 0, n]
+            if th[n] == 0:
+                np.testing.assert_array_equal(w[:, n], 0)
+            else:
+                np.testing.assert_array_equal(
+                    csd.phi(kept), np.full(len(kept), th[n]),
+                    err_msg=f"{name} filter {n}")
+
+
+def test_weights_respect_value_sparsity(params):
+    for name, p in params.items():
+        assert pruning.mask_sparsity(np.asarray(p["mask"])) == pytest.approx(0.6, abs=0.02), name
+
+
+def test_forward_shapes(params, spec, batch):
+    logits = model_lib.forward(params, batch, spec, use_kernel=False)
+    assert logits.shape == (2, spec.num_classes)
+    assert logits.dtype == jnp.int32
+
+
+def test_kernel_path_bit_exact_vs_oracle(params, spec, batch):
+    """The single most important L2 check: Pallas == jnp oracle."""
+    a = np.asarray(model_lib.forward(params, batch, spec, use_kernel=True))
+    b = np.asarray(model_lib.forward(params, batch, spec, use_kernel=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_forward_deterministic(params, spec, batch):
+    a = np.asarray(model_lib.forward(params, batch, spec, use_kernel=False))
+    b = np.asarray(model_lib.forward(params, batch, spec, use_kernel=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_im2col_matches_direct_conv():
+    """conv2d_int8 (im2col path) equals lax-style dense conv."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-64, 64, (1, 4, 8, 8)), jnp.int8)
+    w = jnp.asarray(rng.integers(-64, 64, (8, 4, 3, 3)), jnp.int8)
+    out = ref.conv2d_int8(x, w, stride=1, pad=1)
+    # brute-force conv
+    xp = np.pad(np.asarray(x, np.int64), ((0, 0), (0, 0), (1, 1), (1, 1)))
+    wn = np.asarray(w, np.int64)
+    expect = np.zeros((1, 8, 8, 8), np.int64)
+    for o in range(8):
+        for i in range(8):
+            for j in range(8):
+                patch = xp[0, :, i:i + 3, j:j + 3]
+                expect[0, o, i, j] = (patch * wn[o]).sum()
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+def test_maxpool_and_avgpool():
+    x = jnp.arange(16, dtype=jnp.int32).reshape(1, 1, 4, 4)
+    pooled = ref.maxpool2x2(x)
+    np.testing.assert_array_equal(np.asarray(pooled)[0, 0], [[5, 7], [13, 15]])
+    avg = ref.avgpool_global(x)
+    assert int(avg[0, 0]) == (15 * 16 // 2) // 16
+
+
+def test_mininet_without_fta_differs(spec, batch):
+    """FTA projection changes weights, so logits differ from the
+    unprojected model (sanity that FTA actually ran)."""
+    p_fta = model_lib.synthesize_weights(spec, seed=0, apply_fta=True)
+    p_raw = model_lib.synthesize_weights(spec, seed=0, apply_fta=False)
+    a = np.asarray(model_lib.forward(p_fta, batch, spec, use_kernel=False))
+    b = np.asarray(model_lib.forward(p_raw, batch, spec, use_kernel=False))
+    assert not np.array_equal(a, b)
+
+
+def test_fta_approximation_error_small(spec):
+    """FTA projection moves each weight by a bounded distance (projection
+    onto the φ_th set is the nearest point)."""
+    p_fta = model_lib.synthesize_weights(spec, seed=0, apply_fta=True)
+    p_raw = model_lib.synthesize_weights(spec, seed=0, apply_fta=False)
+    for name in p_fta:
+        a = np.asarray(p_fta[name]["w"], np.int64)
+        b = np.asarray(p_raw[name]["w"], np.int64)
+        err = np.abs(a - b)
+        assert err.max() <= 22  # worst-case gap to T(1) within INT8
+        assert np.mean(err) < 4.0

@@ -1,0 +1,99 @@
+"""Coarse-grained block-wise pruning tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import pruning
+
+
+def test_block_l2_shape_and_values():
+    w = np.asarray([[3.0] * 8 + [4.0] * 8])
+    norms = pruning.block_l2(w, alpha=8)
+    assert norms.shape == (1, 2)
+    np.testing.assert_allclose(norms[0], [np.sqrt(9 * 8), np.sqrt(16 * 8)])
+
+
+def test_block_l2_rejects_misaligned():
+    with pytest.raises(ValueError):
+        pruning.block_l2(np.zeros((4, 12)), alpha=8)
+
+
+def test_prune_exact_fraction():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(32, 64))
+    _, mask = pruning.prune_blocks(w, 0.5)
+    assert mask.shape == (32, 8)
+    assert mask.sum() == mask.size // 2
+
+
+def test_prune_removes_lowest_norm_blocks():
+    w = np.zeros((2, 16))
+    w[0, :8] = 10.0   # strong block
+    w[0, 8:] = 0.1    # weak block
+    w[1, :8] = 5.0
+    w[1, 8:] = 0.2
+    pruned, mask = pruning.prune_blocks(w, 0.5)
+    np.testing.assert_array_equal(mask, [[1, 0], [1, 0]])
+    assert np.all(pruned[:, 8:] == 0)
+    assert np.all(pruned[:, :8] == w[:, :8])
+
+
+def test_zero_sparsity_keeps_everything():
+    w = np.ones((8, 8))
+    pruned, mask = pruning.prune_blocks(w, 0.0)
+    np.testing.assert_array_equal(pruned, w)
+    assert mask.all()
+
+
+def test_expand_mask():
+    m = np.asarray([[1, 0], [0, 1]], dtype=np.uint8)
+    e = pruning.expand_mask(m, alpha=4)
+    assert e.shape == (2, 8)
+    np.testing.assert_array_equal(e[0], [1] * 4 + [0] * 4)
+    np.testing.assert_array_equal(e[1], [0] * 4 + [1] * 4)
+
+
+def test_value_sparsity_metric():
+    w = np.asarray([0, 0, 1, 2])
+    assert pruning.value_sparsity(w) == pytest.approx(0.5)
+    assert pruning.mask_sparsity(np.asarray([1, 0, 0, 0])) == pytest.approx(0.75)
+
+
+def test_group_zero_column_all_zero():
+    assert pruning.group_zero_column_fraction(np.zeros(64, int), 8) == 1.0
+
+
+def test_group_zero_column_dense_ones():
+    # 0xFF in every input -> no zero columns.
+    acts = np.full(64, 127, dtype=np.int64)
+    frac = pruning.group_zero_column_fraction(acts, 8)
+    assert frac == pytest.approx(1 / 8)  # bit 7 of 127 is 0
+
+
+def test_group_zero_column_monotone_in_group_size():
+    """Fig. 3(b) trend: larger groups -> fewer skippable columns."""
+    rng = np.random.default_rng(2)
+    # ReLU-like activations: ~50% zeros, small magnitudes
+    acts = rng.integers(0, 32, size=4096)
+    acts[rng.random(4096) < 0.5] = 0
+    f1 = pruning.group_zero_column_fraction(acts, 1)
+    f8 = pruning.group_zero_column_fraction(acts, 8)
+    f16 = pruning.group_zero_column_fraction(acts, 16)
+    assert f1 >= f8 >= f16
+    assert f8 > 0.2  # grouped sparsity remains substantial
+
+
+@given(st.integers(min_value=1, max_value=8).map(lambda g: 8 * g),
+       st.floats(min_value=0.0, max_value=0.9))
+@settings(max_examples=60, deadline=None)
+def test_prune_fraction_hypothesis(n, sparsity):
+    rng = np.random.default_rng(n)
+    w = rng.normal(size=(16, n))
+    pruned, mask = pruning.prune_blocks(w, sparsity)
+    expect = int(round(sparsity * mask.size))
+    assert int((mask == 0).sum()) == expect
+    # every pruned block is fully zero in the weights
+    zero_blocks = pruning.expand_mask(mask) == 0
+    assert np.all(pruned[zero_blocks] == 0)

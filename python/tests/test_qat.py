@@ -1,0 +1,113 @@
+"""QAT machinery tests: STE, EMA ranges, AdamW, FTA-in-the-loop."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import csd, pruning, qat
+
+
+def test_ste_round_forward():
+    x = jnp.asarray([0.4, 0.6, -1.5, 2.5])
+    np.testing.assert_array_equal(np.asarray(qat.ste_round(x)),
+                                  np.round(np.asarray(x)))
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: qat.ste_round(3.0 * x))(1.234)
+    assert g == pytest.approx(3.0)
+
+
+def test_quantize_symmetric_range():
+    x = jnp.linspace(-2.0, 2.0, 101)
+    s = qat.amax_scale(x)
+    q = qat.quantize_symmetric(x, s)
+    levels = np.unique(np.round(np.asarray(q) / float(s)))
+    assert levels.min() >= -128 and levels.max() <= 127
+
+
+def test_quantize_gradient_flows():
+    def loss(x):
+        return jnp.sum(qat.quantize_symmetric(x, qat.amax_scale(x)) ** 2)
+    g = jax.grad(loss)(jnp.asarray([0.5, -0.25]))
+    assert np.all(np.isfinite(np.asarray(g)))
+    assert not np.allclose(np.asarray(g), 0.0)
+
+
+def test_ema_range_tracker():
+    ema = qat.EmaRange(decay=0.9)
+    s = ema.init()
+    s = ema.update(s, jnp.asarray([1.0, -2.0]))  # first update seeds
+    assert float(s) == pytest.approx(2.0)
+    s = ema.update(s, jnp.asarray([4.0]))
+    assert float(s) == pytest.approx(0.9 * 2.0 + 0.1 * 4.0)
+    assert float(ema.scale(s)) == pytest.approx(float(s) / 127.0)
+
+
+def test_adamw_reduces_quadratic():
+    opt = qat.AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.tree_util.tree_map(lambda p: 2 * p, params)
+        params, state = opt.update(grads, state, params)
+    assert np.abs(np.asarray(params["w"])).max() < 1e-2
+
+
+def test_cosine_lr_schedule():
+    total = 1000
+    start = float(qat.cosine_lr(0.0, total))
+    mid = float(qat.cosine_lr(total / 2, total))
+    end = float(qat.cosine_lr(float(total), total))
+    assert start < 0.1          # warmup begins low
+    assert 0.3 < mid < 0.8      # mid-cosine
+    assert end == pytest.approx(1e-4, abs=1e-3)
+
+
+def test_build_masks_and_apply():
+    rng = np.random.default_rng(0)
+    params = {"conv.w": jnp.asarray(rng.normal(size=(3, 3, 8, 16)),
+                                    jnp.float32)}
+    masks = qat.build_masks(params, sparsity=0.5)
+    bmask = masks["conv.w"]
+    assert bmask is not None and bmask.shape == (72, 2)
+    assert (bmask == 0).sum() == bmask.size // 2
+    masked = qat.apply_weight_masks(params, masks)
+    w = np.asarray(masked["conv.w"]).reshape(72, 16)
+    expanded = pruning.expand_mask(np.asarray(bmask))
+    assert np.all(w[expanded == 0] == 0)
+
+
+def test_apply_fta_to_params_projects_kernels():
+    rng = np.random.default_rng(1)
+    params = {"conv.w": jnp.asarray(rng.normal(size=(3, 3, 8, 16)),
+                                    jnp.float32),
+              "conv.b": jnp.zeros(16)}
+    masks = qat.build_masks(params, sparsity=0.5)
+    new, ths = qat.apply_fta_to_params(params, masks)
+    assert "conv.w" in ths and "conv.b" not in ths
+    # quantize the projected weights back and verify φ uniformity
+    w = np.asarray(new["conv.w"]).reshape(72, 16)
+    scale = np.abs(np.asarray(params["conv.w"]).reshape(72, 16)).max() / 127.0
+    w_int = np.round(w / scale).astype(np.int64)
+    mask = pruning.expand_mask(np.asarray(masks["conv.w"]))
+    for n in range(16):
+        th = int(ths["conv.w"][n])
+        kept = w_int[mask[:, n] != 0, n]
+        if th > 0:
+            counts = csd.phi(kept)
+            np.testing.assert_array_equal(counts, np.full(len(kept), th))
+    # bias untouched
+    np.testing.assert_array_equal(np.asarray(new["conv.b"]), 0.0)
+
+
+def test_fta_disable_passthrough():
+    rng = np.random.default_rng(2)
+    params = {"fc.w": jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)}
+    new, _ = qat.apply_fta_to_params(params, {"fc.w": None}, enable=False)
+    # disabled: only fake-quantization, values stay on the int grid
+    w = np.asarray(new["fc.w"])
+    scale = np.abs(np.asarray(params["fc.w"])).max() / 127.0
+    np.testing.assert_allclose(w / scale, np.round(w / scale), atol=1e-4)

@@ -1,0 +1,56 @@
+//! Ablation bench for the compiler design choices DESIGN.md calls out:
+//!
+//! * **group merging** — packing column-compatible filter groups into
+//!   one macro (how the architecture reaches 16 filters/macro at φ=1)
+//!   vs strictly one α-group per macro;
+//! * **core scheduling** — greedy LPT balancing vs naive round-robin
+//!   (the paper's plain N-K-M order).
+//!
+//! ```bash
+//! cargo bench --bench ablation
+//! ```
+
+use dbpim::arch::{ArchConfig, SchedulePolicy};
+use dbpim::benchlib::{f2, print_table};
+use dbpim::compiler::SparsityConfig;
+use dbpim::models;
+use dbpim::sim;
+
+fn run(net: &models::Network, arch: &ArchConfig) -> (u64, f64) {
+    let r = sim::simulate_network(net, SparsityConfig::hybrid(0.6), arch, 42);
+    (r.pim_cycles(), r.u_act())
+}
+
+fn main() {
+    let nets = ["vgg19", "resnet18", "mobilenet_v2"];
+    let mut rows = Vec::new();
+    for name in nets {
+        let net = models::by_name(name).unwrap();
+        let full = ArchConfig::db_pim();
+        let no_merge = ArchConfig { merge_groups: false, ..ArchConfig::db_pim() };
+        let rr = ArchConfig { schedule: SchedulePolicy::RoundRobin, ..ArchConfig::db_pim() };
+
+        let (c_full, u_full) = run(&net, &full);
+        let (c_nm, u_nm) = run(&net, &no_merge);
+        let (c_rr, _) = run(&net, &rr);
+
+        rows.push(vec![
+            name.to_string(),
+            format!("{c_full}"),
+            format!("{} ({}x)", c_nm, f2(c_nm as f64 / c_full as f64)),
+            format!("{} ({}x)", c_rr, f2(c_rr as f64 / c_full as f64)),
+            format!("{} -> {}", f2(100.0 * u_nm), f2(100.0 * u_full)),
+        ]);
+
+        // Neither heuristic is globally optimal (merging coarsens the
+        // load-balancing granularity; LPT is a 4/3-approximation), so
+        // allow small inversions but catch real regressions.
+        assert!(c_nm as f64 >= 0.92 * c_full as f64, "{name}: merging regressed badly");
+        assert!(c_rr as f64 >= 0.92 * c_full as f64, "{name}: LPT lost badly to round-robin");
+    }
+    print_table(
+        "Ablation — PIM cycles under compiler variants (hybrid 60%)",
+        &["network", "full", "no group merge", "round-robin sched", "U_act% nm->full"],
+        &rows,
+    );
+}

@@ -1,0 +1,45 @@
+//! Bench + regeneration of **Fig. 3** — sparsity analysis.
+//!
+//! (a) zero-bit proportion in weights: original / 60% value-pruned /
+//!     hybrid, per network;
+//! (b) all-zero input bit-column proportion for groups N = 1, 8, 16.
+//!
+//! ```bash
+//! cargo bench --bench fig03_sparsity
+//! ```
+
+use dbpim::benchlib::{bench, pct, print_table};
+use dbpim::coordinator::experiments;
+
+fn main() {
+    let (bits, cols) = experiments::fig3(42);
+
+    print_table(
+        "Fig. 3(a) — proportion of zero bits in weights (CSD encoding)",
+        &["network", "Ori.", "Val. (60%)", "Our (hybrid)"],
+        &bits
+            .iter()
+            .map(|r| vec![r.network.clone(), pct(r.original), pct(r.value_pruned), pct(r.hybrid)])
+            .collect::<Vec<_>>(),
+    );
+    print_table(
+        "Fig. 3(b) — all-zero bit columns in input groups",
+        &["network", "N=1", "N=8", "N=16"],
+        &cols
+            .iter()
+            .map(|r| vec![r.network.clone(), pct(r.group1), pct(r.group8), pct(r.group16)])
+            .collect::<Vec<_>>(),
+    );
+
+    // paper-shape assertions
+    for r in &bits {
+        assert!(r.original < r.value_pruned && r.value_pruned < r.hybrid, "{r:?}");
+        assert!(r.value_pruned > 0.75, "Val. should exceed 80%-ish: {r:?}");
+    }
+    for r in &cols {
+        assert!(r.group1 >= r.group8 && r.group8 >= r.group16, "{r:?}");
+    }
+
+    // timing: the analysis pass itself
+    bench("fig3_full_analysis", 0, 3, || experiments::fig3(42));
+}

@@ -1,0 +1,52 @@
+//! Bench + regeneration of **Fig. 11** — speedup and normalized energy
+//! over the dense PIM baseline on VGG19 / ResNet18 / MobileNetV2 at
+//! 75–90% weight sparsity (hybrid pruning, input-column skipping OFF,
+//! std/pw-conv + FC layers only — the paper's stated scope).
+//!
+//! ```bash
+//! cargo bench --bench fig11_sweep
+//! ```
+
+use dbpim::benchlib::{bench, f2, pct, print_table};
+use dbpim::coordinator::experiments;
+
+fn main() {
+    let rows = experiments::fig11(42);
+    print_table(
+        "Fig. 11 — speedup & energy vs dense digital PIM baseline",
+        &["network", "weight sparsity", "speedup", "energy saving"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    pct(r.total_sparsity),
+                    format!("{}x", f2(r.speedup)),
+                    pct(r.energy_saving),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    // paper-shape assertions: monotone, VGG ≥ ResNet ≥ MobileNet at 90%,
+    // several-fold speedup band, energy saving in the 70–95% band
+    let get = |n: &str, t: f64| {
+        rows.iter().find(|r| r.network == n && (r.total_sparsity - t).abs() < 1e-9).unwrap()
+    };
+    assert!(get("vgg19", 0.90).speedup > get("resnet18", 0.90).speedup);
+    assert!(get("resnet18", 0.90).speedup > get("mobilenet_v2", 0.90).speedup);
+    assert!(get("vgg19", 0.90).speedup > 6.0);
+    for r in &rows {
+        assert!(r.energy_saving > 0.6 && r.energy_saving < 0.95, "{r:?}");
+    }
+
+    bench("fig11_one_point_vgg19_90", 0, 3, || {
+        let net = dbpim::models::vgg19();
+        dbpim::sim::simulate_network(
+            &net,
+            dbpim::compiler::SparsityConfig::hybrid(0.6),
+            &dbpim::arch::ArchConfig::weights_only(),
+            42,
+        )
+    });
+}

@@ -1,0 +1,50 @@
+//! Bench + regeneration of **Fig. 12** — end-to-end speedup (a) and
+//! normalized energy (b) for bit-level / value-level / hybrid sparsity
+//! across all five networks, relative to the dense PIM baseline.
+//!
+//! ```bash
+//! cargo bench --bench fig12_breakdown
+//! ```
+
+use dbpim::benchlib::{bench, f2, print_table};
+use dbpim::coordinator::experiments;
+
+fn main() {
+    let rows = experiments::fig12(42);
+    print_table(
+        "Fig. 12(a/b) — end-to-end speedup and normalized energy",
+        &["network", "approach", "speedup", "normalized energy"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    r.approach.to_string(),
+                    format!("{}x", f2(r.speedup)),
+                    f2(r.energy_norm),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    // paper shape: hybrid dominates both single-axis approaches; compact
+    // models gain less than the big CNNs
+    for net in ["alexnet", "vgg19", "resnet18", "mobilenet_v2", "efficientnet_b0"] {
+        let get = |ap: &str| rows.iter().find(|r| r.network == net && r.approach == ap).unwrap();
+        assert!(get("hybrid").speedup >= get("bit").speedup, "{net}");
+        assert!(get("hybrid").speedup >= get("value").speedup, "{net}");
+        assert!(get("hybrid").energy_norm < 1.0, "{net}");
+    }
+    let hy = |n: &str| rows.iter().find(|r| r.network == n && r.approach == "hybrid").unwrap();
+    assert!(hy("mobilenet_v2").speedup < hy("vgg19").speedup);
+
+    bench("fig12_one_network_resnet18", 0, 3, || {
+        let net = dbpim::models::resnet18();
+        dbpim::sim::simulate_network(
+            &net,
+            dbpim::compiler::SparsityConfig::hybrid(0.6),
+            &dbpim::arch::ArchConfig::db_pim(),
+            42,
+        )
+    });
+}

@@ -1,0 +1,43 @@
+//! Bench + regeneration of **Fig. 13** — execution-time breakdown of
+//! MobileNetV2 and EfficientNetB0 on DB-PIM: pw/std-conv+FC vs dw-conv
+//! vs multiplications vs everything else (pool/ReLU/resadd).
+//!
+//! ```bash
+//! cargo bench --bench fig13_optime
+//! ```
+
+use dbpim::benchlib::{bench, pct, print_table};
+use dbpim::coordinator::experiments;
+
+fn main() {
+    let rows = experiments::fig13(42);
+    print_table(
+        "Fig. 13 — execution-time breakdown (DB-PIM, hybrid sparsity)",
+        &["network", "pw/std-Conv/FC", "dw-Conv", "Mul", "Etc."],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    pct(r.pw_std_conv_fc),
+                    pct(r.dw_conv),
+                    pct(r.mul),
+                    pct(r.etc),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    // paper shape: conv+FC only ~51-61% of time; dw-conv is the big
+    // non-acceleratable chunk (48.3% MobileNetV2 / 35.9% EfficientNet)
+    for r in &rows {
+        let sum = r.pw_std_conv_fc + r.dw_conv + r.mul + r.etc;
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!(r.pw_std_conv_fc < 0.75, "conv share too high: {r:?}");
+        assert!(r.dw_conv > 0.2, "dw-conv share too low: {r:?}");
+    }
+    let eff = rows.iter().find(|r| r.network == "efficientnet_b0").unwrap();
+    assert!(eff.mul > 0.005, "SE multiplies must be visible: {eff:?}");
+
+    bench("fig13_both_networks", 0, 3, || experiments::fig13(42));
+}

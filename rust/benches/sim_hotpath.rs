@@ -1,0 +1,80 @@
+//! L3 hot-path microbenchmarks (the perf-pass instrument, EXPERIMENTS.md
+//! §Perf): isolates the simulator inner loops so optimization deltas are
+//! measurable in isolation from experiment orchestration.
+//!
+//! * `row_loop` — the per-(m, tile) IPU gather + B_eff loop (dominant
+//!   cost with input skipping enabled)
+//! * `analytic` — the data-independent fast path
+//! * `functional` — accumulate path (MiniNet-style verification runs)
+//! * `compile`  — prune + FTA + pack + codegen for a VGG-sized layer
+//! * `e2e`      — one full ResNet18 perf simulation
+//!
+//! ```bash
+//! cargo bench --bench sim_hotpath
+//! ```
+
+use dbpim::arch::ArchConfig;
+use dbpim::benchlib::bench;
+use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
+use dbpim::models::{synthesize_activations, synthesize_weights};
+use dbpim::quant;
+use dbpim::sim::Machine;
+use dbpim::tensor::MatI8;
+
+fn main() {
+    let (m, k, n) = (256, 1152, 128); // VGG-like conv layer
+    let w = synthesize_weights(1, k, n);
+    let x = MatI8::from_vec(m, k, synthesize_activations(2, m * k));
+
+    // --- row-loop path (IPU on) ---
+    let arch = ArchConfig::db_pim();
+    let prep = prepare_layer(
+        "hot", m, k, n,
+        w.clone(), SparsityConfig::hybrid(0.6), &arch,
+        quant::requant_mul(0.01), true, None,
+    );
+    let layer = compile_layer(prep, &arch);
+    let machine = Machine::new(arch.clone());
+    let s = bench("row_loop_ipu_on", 1, 10, || {
+        machine.run_pim_layer(&layer, Some(&x), false)
+    });
+    // report simulated-events-per-second for the perf log
+    let (stats, _) = machine.run_pim_layer(&layer, Some(&x), false);
+    let steps = stats.events.input_buf_reads; // one per row-step
+    println!(
+        "  row-steps {} -> {:.1} M row-steps/s",
+        steps,
+        steps as f64 / s.median.as_secs_f64() / 1e6
+    );
+
+    // --- analytic path (IPU off) ---
+    let arch2 = ArchConfig::weights_only();
+    let prep2 = prepare_layer(
+        "hot2", m, k, n,
+        w.clone(), SparsityConfig::hybrid(0.6), &arch2,
+        quant::requant_mul(0.01), true, None,
+    );
+    let layer2 = compile_layer(prep2, &arch2);
+    let machine2 = Machine::new(arch2);
+    bench("analytic_ipu_off", 1, 50, || machine2.run_pim_layer(&layer2, None, false));
+
+    // --- functional path ---
+    bench("functional_accumulate", 1, 5, || machine.run_pim_layer(&layer, Some(&x), true));
+
+    // --- compiler ---
+    let arch3 = ArchConfig::db_pim();
+    bench("compile_layer_vgg_sized", 1, 10, || {
+        let prep = prepare_layer(
+            "c", m, k, n,
+            w.clone(), SparsityConfig::hybrid(0.6), &arch3,
+            quant::requant_mul(0.01), true, None,
+        );
+        compile_layer(prep, &arch3)
+    });
+
+    // --- end-to-end perf sim ---
+    bench("e2e_resnet18_hybrid", 0, 3, || {
+        let net = dbpim::models::resnet18();
+        dbpim::sim::simulate_network(&net, SparsityConfig::hybrid(0.6), &ArchConfig::db_pim(), 42)
+    });
+}

@@ -1,0 +1,60 @@
+//! Bench + regeneration of **Table II** — comparison with prior works:
+//! measured actual utilization U_act per network, peak throughput, and
+//! peak throughput per macro, alongside the prior-work numbers the
+//! paper tabulates (quoted from Table II for context).
+//!
+//! ```bash
+//! cargo bench --bench table2_throughput
+//! ```
+
+use dbpim::benchlib::{bench, f2, pct, print_table};
+use dbpim::coordinator::experiments;
+
+/// Prior-work rows quoted from the paper's Table II (for the printed
+/// comparison only; our measured row is computed).
+const PRIOR: &[(&str, &str, &str, f64)] = &[
+    // (work, type, utilization bound, peak GOPS/macro)
+    ("ISSCC'20 [21]", "analog", "<32.04%", 62.5),
+    ("ISSCC'21 [22]", "analog", "32.04%", 24.69),
+    ("Z-PIM [36]", "digital", "16%", 7.95),
+    ("SDP [23]", "digital", "48.64%", 51.19),
+    ("TT@CIM [26]", "analog", "<50%", 25.1),
+];
+
+fn main() {
+    let t = experiments::table2(42);
+
+    println!("\nDB-PIM (this work): {} macros, {} KB PIM capacity", t.total_macros, t.pim_kb);
+    println!(
+        "peak throughput: {:.2} TOPS (8b/8b) | per macro: {:.1} GOPS (φ=1) / {:.1} GOPS (φ=2) / {:.1} GOPS (dense INT8 mapping)",
+        t.peak_tops_phi1, t.peak_gops_per_macro_phi1, t.peak_gops_per_macro_phi2, t.dense_gops_per_macro
+    );
+
+    let mut rows: Vec<Vec<String>> = PRIOR
+        .iter()
+        .map(|(w, ty, u, g)| vec![w.to_string(), ty.to_string(), u.to_string(), f2(*g)])
+        .collect();
+    for (net, u) in &t.u_act {
+        rows.push(vec![
+            format!("this work ({net})"),
+            "digital".into(),
+            pct(*u),
+            f2(t.peak_gops_per_macro_phi2),
+        ]);
+    }
+    print_table(
+        "Table II — utilization & peak throughput per macro",
+        &["work", "type", "U_act", "GOPS/macro"],
+        &rows,
+    );
+
+    // paper shape: our U_act beats every prior bound (~78–87% measured)
+    for (net, u) in &t.u_act {
+        assert!(*u > 0.55, "{net} utilization {u} below prior work band");
+    }
+    // φ=1 peak = 8x dense mapping, φ=2 = 4x (paper: 16/8 filters vs 2)
+    assert!((t.peak_gops_per_macro_phi1 / t.dense_gops_per_macro - 8.0).abs() < 1e-6);
+    assert!((t.peak_gops_per_macro_phi2 / t.dense_gops_per_macro - 4.0).abs() < 1e-6);
+
+    bench("table2_utilization_measurement", 0, 1, || experiments::table2(42));
+}

@@ -1,0 +1,55 @@
+//! Bench + regeneration of **Table III** — on-chip execution time
+//! (std/pw-conv + FC layers only) of the DAC'24 predecessor
+//! configuration vs this work's bit-level and hybrid modes, across the
+//! five networks, plus the headline "up to N× vs DAC'24" number.
+//!
+//! ```bash
+//! cargo bench --bench table3_exec
+//! ```
+
+use dbpim::benchlib::{bench, f2, print_table};
+use dbpim::coordinator::experiments;
+
+fn main() {
+    let rows = experiments::table3(42);
+    print_table(
+        "Table III — on-chip execution time (ms, conv+FC only)",
+        &["network", "DAC'24 [16]", "bit-level", "hybrid", "hybrid vs DAC'24"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    f2(r.dac24_ms),
+                    f2(r.bit_level_ms),
+                    f2(r.hybrid_ms),
+                    format!("{}x", f2(r.dac24_ms / r.hybrid_ms)),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+
+    let max_speedup = rows
+        .iter()
+        .map(|r| r.dac24_ms / r.hybrid_ms)
+        .fold(0.0f64, f64::max);
+    println!("max speedup vs DAC'24: {max_speedup:.2}x (paper: up to 11.10x)");
+
+    // paper shape: hybrid < bit-level < DAC'24 for every network, and a
+    // several-fold best case
+    for r in &rows {
+        assert!(r.hybrid_ms < r.bit_level_ms, "{r:?}");
+        assert!(r.bit_level_ms < r.dac24_ms, "{r:?}");
+    }
+    assert!(max_speedup > 3.0, "max speedup {max_speedup}");
+
+    bench("table3_one_network_alexnet", 0, 3, || {
+        let net = dbpim::models::alexnet();
+        dbpim::sim::simulate_network(
+            &net,
+            dbpim::compiler::SparsityConfig::hybrid(0.6),
+            &dbpim::arch::ArchConfig::db_pim(),
+            42,
+        )
+    });
+}

@@ -1,0 +1,216 @@
+//! Architecture configuration for DB-PIM and its comparison points.
+//!
+//! Geometry follows the paper's Sec. V / VI-A: 8 PIM cores × Tm = 4
+//! macros; each macro has Tk1 = 16 compartments × Tk2 = 16 SRAM rows ×
+//! 16 DBMU columns (one 6T cell per column per row ⇒ 16 KB PIM capacity
+//! across 32 macros); 28 nm, 500 MHz. Feature flags select the paper's
+//! ablation points (Fig. 12's bit-only / value-only / hybrid) and the
+//! DAC'24 predecessor configuration (Tab. III).
+
+/// How assignments are spread over the PIM cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Greedy longest-processing-time balancing (default).
+    Lpt,
+    /// Naive round-robin (the paper's plain N-K-M loop order).
+    RoundRobin,
+}
+
+/// Hardware + feature configuration shared by the compiler and simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    pub name: &'static str,
+    /// Number of PIM cores (paper: 8).
+    pub n_cores: usize,
+    /// Macros per core, all storing identical weights for M-parallelism
+    /// (the paper's Tm = 4).
+    pub macros_per_core: usize,
+    /// Compartments per macro (Tk1 = 16): spatially-parallel input lanes.
+    pub compartments: usize,
+    /// SRAM cell rows per compartment (Tk2 = 16): sequential (one LPU).
+    pub rows_per_compartment: usize,
+    /// DBMU columns per compartment (16) — the macro's column budget.
+    pub macro_columns: usize,
+    /// Input activation bit width (INT8 ⇒ 8 bit-serial cycles max).
+    pub input_bits: usize,
+    /// Clock (paper: 333–500 MHz; we use the top bin).
+    pub freq_mhz: f64,
+    /// Coarse pruning granularity α (macro columns / max φ_th).
+    pub alpha: usize,
+    /// SIMD core lanes for non-PIM ops (dw-conv, pool, ReLU, mul, ...).
+    pub simd_lanes: usize,
+    /// Cycles to load one full weight tile (weight-stationary, amortized
+    /// over all M rows).
+    pub tile_load_cycles: u64,
+
+    // ---- sparsity feature flags (the paper's ablation axes) ----
+    /// Customized DBMU macro storing only Comp.-pattern blocks
+    /// (bit-level weight sparsity). Off ⇒ dense bit-parallel columns
+    /// (8 columns per filter, 2 filters per macro).
+    pub weight_bit_sparsity: bool,
+    /// Sparse allocation network skipping coarse-pruned blocks
+    /// (value-level sparsity).
+    pub value_sparsity: bool,
+    /// IPU dynamic skipping of block-wise all-zero input bit columns.
+    pub input_skipping: bool,
+    /// SIMD core present (end-to-end models; DAC'24 was conv-only).
+    pub has_simd: bool,
+    /// Merge column-compatible filter groups into one macro (the
+    /// "16 filters at φ_th = 1" packing; ablation knob).
+    pub merge_groups: bool,
+    /// Core scheduling policy for assignments (ablation knob).
+    pub schedule: SchedulePolicy,
+
+    // ---- buffer capacities (KB) for the area/energy report ----
+    pub input_buffer_kb: usize,
+    pub output_buffer_kb: usize,
+    pub inst_buffer_kb: usize,
+}
+
+impl ArchConfig {
+    /// The full DB-PIM configuration (this paper).
+    pub fn db_pim() -> Self {
+        Self {
+            name: "db-pim",
+            n_cores: 8,
+            macros_per_core: 4,
+            compartments: 16,
+            rows_per_compartment: 16,
+            macro_columns: 16,
+            input_bits: 8,
+            freq_mhz: 500.0,
+            alpha: 8,
+            simd_lanes: 64,
+            tile_load_cycles: 64,
+            weight_bit_sparsity: true,
+            value_sparsity: true,
+            input_skipping: true,
+            has_simd: true,
+            merge_groups: true,
+            schedule: SchedulePolicy::Lpt,
+            input_buffer_kb: 128,
+            output_buffer_kb: 256,
+            inst_buffer_kb: 16,
+        }
+    }
+
+    /// Dense digital PIM baseline: all sparsity support removed
+    /// (Sec. VI-A), same buffers/cores/macros.
+    pub fn dense_baseline() -> Self {
+        Self {
+            name: "dense-baseline",
+            weight_bit_sparsity: false,
+            value_sparsity: false,
+            input_skipping: false,
+            ..Self::db_pim()
+        }
+    }
+
+    /// Bit-level sparsity only (weights FTA + input IPU; Fig. 12
+    /// "bit-level").
+    pub fn bit_only() -> Self {
+        Self { name: "bit-only", value_sparsity: false, ..Self::db_pim() }
+    }
+
+    /// Value-level sparsity only (allocation network, dense bit columns).
+    pub fn value_only() -> Self {
+        Self {
+            name: "value-only",
+            weight_bit_sparsity: false,
+            input_skipping: false,
+            ..Self::db_pim()
+        }
+    }
+
+    /// Fig. 11 configuration: weight sparsity only, IPU disabled.
+    pub fn weights_only() -> Self {
+        Self { name: "weights-only", input_skipping: false, ..Self::db_pim() }
+    }
+
+    /// The DAC'24 predecessor (Tab. III): bit-level weight sparsity but
+    /// no sparse allocation network, no IPU, no SIMD core, and half the
+    /// core count (the journal version "expanded the architecture to
+    /// increase computational parallelism").
+    pub fn dac24() -> Self {
+        Self {
+            name: "dac24",
+            n_cores: 4,
+            value_sparsity: false,
+            input_skipping: false,
+            has_simd: false,
+            ..Self::db_pim()
+        }
+    }
+
+    /// Total macros (paper: 32).
+    pub fn total_macros(&self) -> usize {
+        self.n_cores * self.macros_per_core
+    }
+
+    /// SRAM cells per macro.
+    pub fn cells_per_macro(&self) -> usize {
+        self.compartments * self.rows_per_compartment * self.macro_columns
+    }
+
+    /// PIM capacity in KB (1 bit per 6T cell pair as in the paper's
+    /// 16 KB across 32 macros... each cell stores one weight bit).
+    pub fn pim_capacity_kb(&self) -> usize {
+        self.total_macros() * self.cells_per_macro() / 8 / 1024
+    }
+
+    /// Row-slots (k positions) one macro covers per weight tile.
+    pub fn k_slots(&self) -> usize {
+        self.compartments * self.rows_per_compartment
+    }
+
+    /// Filters per macro in the *dense* mapping (bit-parallel INT8
+    /// columns): 16 columns / 8 bits = 2.
+    pub fn dense_filters_per_macro(&self) -> usize {
+        self.macro_columns / self.input_bits
+    }
+
+    /// Clock period in nanoseconds.
+    pub fn clock_ns(&self) -> f64 {
+        1e3 / self.freq_mhz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry() {
+        let a = ArchConfig::db_pim();
+        assert_eq!(a.total_macros(), 32);
+        assert_eq!(a.cells_per_macro(), 4096);
+        assert_eq!(a.pim_capacity_kb(), 16); // paper: 16 KB PIM
+        assert_eq!(a.k_slots(), 256); // Tk = Tk1 * Tk2
+        assert_eq!(a.dense_filters_per_macro(), 2);
+        assert!((a.clock_ns() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_strips_all_sparsity() {
+        let b = ArchConfig::dense_baseline();
+        assert!(!b.weight_bit_sparsity && !b.value_sparsity && !b.input_skipping);
+        assert_eq!(b.total_macros(), ArchConfig::db_pim().total_macros());
+    }
+
+    #[test]
+    fn ablation_points_differ_only_in_flags() {
+        let full = ArchConfig::db_pim();
+        let bit = ArchConfig::bit_only();
+        assert_eq!(bit.n_cores, full.n_cores);
+        assert!(bit.weight_bit_sparsity && !bit.value_sparsity);
+        let val = ArchConfig::value_only();
+        assert!(!val.weight_bit_sparsity && val.value_sparsity);
+    }
+
+    #[test]
+    fn dac24_is_smaller_and_conv_only() {
+        let d = ArchConfig::dac24();
+        assert_eq!(d.total_macros(), 16);
+        assert!(d.weight_bit_sparsity && !d.value_sparsity && !d.has_simd);
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal benchmark harness (criterion is not in the offline vendored
+//! registry). Provides warmup + repeated timing with median/min/mean
+//! reporting, and a table printer used by the paper-figure benches so
+//! every bench target prints the same rows/series the paper reports.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs then `iters` measured.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    let s = Sample {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean,
+        median: times[times.len() / 2],
+        min: times[0],
+    };
+    println!(
+        "bench {:40} iters={:3} mean={:>12?} median={:>12?} min={:>12?}",
+        s.name, s.iters, s.mean, s.median, s.min
+    );
+    s
+}
+
+/// Print a markdown-style table (used for paper-figure regeneration).
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    println!("| {} |", headers.join(" | "));
+    println!("|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+    println!();
+}
+
+/// Format helpers.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+/// Quick CLI arg: `--fast` trims bench scope (used by CI-style runs).
+pub fn fast_mode() -> bool {
+    std::env::args().any(|a| a == "--fast") || std::env::var("DBPIM_BENCH_FAST").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_positive_times() {
+        let s = bench("noop", 1, 5, || std::hint::black_box(1 + 1));
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.mean * 2);
+    }
+
+    #[test]
+    fn table_formats() {
+        print_table("t", &["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(f2(1.234), "1.23");
+        assert_eq!(pct(0.5), "50.00%");
+    }
+}

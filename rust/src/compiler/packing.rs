@@ -1,0 +1,306 @@
+//! Filter-group packing and weight tiling.
+//!
+//! Under the DBMU mapping (weight_bit_sparsity), each kept weight of
+//! filter n occupies exactly φ_th(n) SRAM columns (its Comp.-pattern
+//! blocks); an α-group of filters therefore demands Σ φ_th ≤ α·2 = 16
+//! columns and fills one macro. Groups whose filters are all zero
+//! (φ_th = 0 across the group, or fully pruned) are skipped outright.
+//!
+//! Under the dense mapping each filter occupies `input_bits` = 8 bit
+//! columns, so a 16-column macro holds 2 filters — the conventional
+//! digital-PIM arrangement the paper compares against.
+//!
+//! One macro sees ONE input stream, so all filters in an assignment
+//! must share the same coarse-pruning mask — i.e. belong to the same
+//! α-group (the allocation-network switch is per core, per group).
+
+use crate::arch::ArchConfig;
+use crate::util::ceil_div;
+
+use super::PreparedLayer;
+
+/// A set of filters resident together in one macro (replicated across
+/// the Tm macros of the owning core for M-parallelism).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Assignment {
+    /// α-group index this assignment draws filters from.
+    pub group: usize,
+    /// Filter (column) indices, ascending.
+    pub filters: Vec<usize>,
+    /// Columns occupied per filter (φ_th or 8).
+    pub cols_per_filter: Vec<u8>,
+    /// K rows actually stored (gathered by the allocation network when
+    /// value sparsity is enabled; 0..K otherwise).
+    pub kept_rows: Vec<u32>,
+    /// Core this assignment is scheduled on.
+    pub core: usize,
+}
+
+impl Assignment {
+    /// Total macro columns in use.
+    pub fn active_cols(&self) -> usize {
+        self.cols_per_filter.iter().map(|&c| c as usize).sum()
+    }
+}
+
+/// One weight tile: a Tk1×Tk2 slice of an assignment's kept rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tile {
+    pub id: u32,
+    /// Index into the layer's assignment list.
+    pub assignment: usize,
+    /// Range into `kept_rows` covered by this tile.
+    pub row_start: usize,
+    pub row_end: usize,
+}
+
+impl Tile {
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+}
+
+/// Pack a prepared layer into assignments and tiles and schedule them
+/// across cores (greedy longest-processing-time balancing).
+pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, Vec<Tile>) {
+    let mut assignments = Vec::new();
+    let groups = prep.mask.groups;
+    for g in 0..groups {
+        let filters: Vec<usize> = (g * arch.alpha..(g + 1) * arch.alpha).collect();
+        // kept K rows for this group
+        let kept_rows: Vec<u32> = if arch.value_sparsity {
+            (0..prep.k).filter(|&k| prep.mask.kept(k, g)).map(|k| k as u32).collect()
+        } else {
+            (0..prep.k as u32).collect()
+        };
+        if kept_rows.is_empty() {
+            continue; // group fully pruned
+        }
+        if arch.weight_bit_sparsity {
+            // Each filter needs φ_th columns; drop φ_th = 0 filters.
+            // With FTA (φ_th ≤ 2, α = 8) a whole group always fits one
+            // macro; without FTA (ablation runs) per-filter demand can
+            // reach 4 columns, so chunk filters to the column budget.
+            let live: Vec<usize> =
+                filters.iter().copied().filter(|&n| prep.thresholds[n] > 0).collect();
+            if live.is_empty() {
+                continue;
+            }
+            let mut chunk: Vec<usize> = Vec::new();
+            let mut cols: Vec<u8> = Vec::new();
+            let mut demand = 0usize;
+            for &f in &live {
+                let c = prep.thresholds[f].min(crate::csd::MAX_PHI) as usize;
+                if demand + c > arch.macro_columns && !chunk.is_empty() {
+                    assignments.push(Assignment {
+                        group: g,
+                        filters: std::mem::take(&mut chunk),
+                        cols_per_filter: std::mem::take(&mut cols),
+                        kept_rows: kept_rows.clone(),
+                        core: 0,
+                    });
+                    demand = 0;
+                }
+                chunk.push(f);
+                cols.push(c as u8);
+                demand += c;
+            }
+            assignments.push(Assignment {
+                group: g,
+                filters: chunk,
+                cols_per_filter: cols,
+                kept_rows,
+                core: 0,
+            });
+        } else {
+            // dense mapping: pairs of filters, 8 bit-columns each
+            let per_macro = arch.dense_filters_per_macro();
+            for chunk in filters.chunks(per_macro) {
+                assignments.push(Assignment {
+                    group: g,
+                    filters: chunk.to_vec(),
+                    cols_per_filter: vec![arch.input_bits as u8; chunk.len()],
+                    kept_rows: kept_rows.clone(),
+                    core: 0,
+                });
+            }
+        }
+    }
+
+    // Merge assignments that can share a macro: combined column demand
+    // within budget AND identical input streams (same kept-row gather —
+    // one macro broadcasts a single input stream to all compartments).
+    // This is how the paper reaches "up to 16 filters per macro with
+    // φ_th = 1": low-threshold groups double up whenever their masks
+    // agree (always true without value sparsity).
+    if arch.weight_bit_sparsity && arch.merge_groups {
+        merge_compatible(&mut assignments, arch.macro_columns);
+    }
+
+    match arch.schedule {
+        crate::arch::SchedulePolicy::Lpt => schedule(&mut assignments, arch.n_cores),
+        crate::arch::SchedulePolicy::RoundRobin => {
+            for (i, a) in assignments.iter_mut().enumerate() {
+                a.core = i % arch.n_cores;
+            }
+        }
+    }
+
+    // K tiling: Tk1 × Tk2 row slots per macro.
+    let slots = arch.k_slots();
+    let mut tiles = Vec::new();
+    let mut id = 0u32;
+    for (ai, a) in assignments.iter().enumerate() {
+        let n_tiles = ceil_div(a.kept_rows.len(), slots);
+        for t in 0..n_tiles {
+            let row_start = t * slots;
+            let row_end = ((t + 1) * slots).min(a.kept_rows.len());
+            tiles.push(Tile { id, assignment: ai, row_start, row_end });
+            id += 1;
+        }
+    }
+    (assignments, tiles)
+}
+
+/// First-fit-decreasing merge of column-compatible assignments.
+fn merge_compatible(assignments: &mut Vec<Assignment>, budget: usize) {
+    let mut order: Vec<usize> = (0..assignments.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(assignments[i].active_cols()));
+    let mut merged: Vec<Assignment> = Vec::with_capacity(assignments.len());
+    for idx in order {
+        let a = &assignments[idx];
+        if let Some(host) = merged.iter_mut().find(|h| {
+            h.active_cols() + a.active_cols() <= budget && h.kept_rows == a.kept_rows
+        }) {
+            host.filters.extend_from_slice(&a.filters);
+            host.cols_per_filter.extend_from_slice(&a.cols_per_filter);
+        } else {
+            merged.push(a.clone());
+        }
+    }
+    *assignments = merged;
+}
+
+/// Greedy LPT schedule: heaviest assignment (by kept rows × columns) to
+/// the least-loaded core. Deterministic.
+fn schedule(assignments: &mut [Assignment], n_cores: usize) {
+    let mut order: Vec<usize> = (0..assignments.len()).collect();
+    let cost = |a: &Assignment| (a.kept_rows.len() * a.active_cols()) as u64;
+    order.sort_by_key(|&i| std::cmp::Reverse((cost(&assignments[i]), i)));
+    let mut load = vec![0u64; n_cores];
+    for idx in order {
+        let core = (0..n_cores).min_by_key(|&c| (load[c], c)).unwrap();
+        assignments[idx].core = core;
+        load[core] += cost(&assignments[idx]);
+    }
+}
+
+/// U_act upper bound from the packing alone (column occupancy).
+pub fn packing_utilization(assignments: &[Assignment], arch: &ArchConfig) -> f64 {
+    if assignments.is_empty() {
+        return 0.0;
+    }
+    let used: usize = assignments.iter().map(|a| a.active_cols()).sum();
+    used as f64 / (assignments.len() * arch.macro_columns) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{prepare_layer, SparsityConfig};
+    use crate::models::synthesize_weights;
+    use crate::quant;
+
+    fn prep(k: usize, n: usize, sparsity: SparsityConfig, arch: &ArchConfig) -> PreparedLayer {
+        let w = synthesize_weights(3, k, n);
+        prepare_layer("t", 4, k, n, w, sparsity, arch, quant::requant_mul(0.01), true, None)
+    }
+
+    #[test]
+    fn dbpim_packs_one_group_per_assignment() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(128, 32, SparsityConfig::hybrid(0.0), &arch);
+        let (asg, tiles) = pack_layer(&p, &arch);
+        assert!(asg.len() <= 4); // 32 filters / α=8 (fewer after merging)
+        let mut seen = std::collections::HashSet::new();
+        for a in &asg {
+            assert!(a.active_cols() <= arch.macro_columns);
+            assert!(!a.filters.is_empty());
+            for &f in &a.filters {
+                assert!(seen.insert(f), "filter {f} packed twice");
+            }
+        }
+        assert!(!tiles.is_empty());
+    }
+
+    #[test]
+    fn dense_packs_two_filters_per_assignment() {
+        let arch = ArchConfig::dense_baseline();
+        let p = prep(64, 16, SparsityConfig::dense(), &arch);
+        let (asg, _) = pack_layer(&p, &arch);
+        assert_eq!(asg.len(), 8); // 16 filters / 2
+        for a in &asg {
+            assert_eq!(a.filters.len(), 2);
+            assert_eq!(a.active_cols(), 16);
+        }
+    }
+
+    #[test]
+    fn value_sparsity_shrinks_kept_rows() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(256, 16, SparsityConfig::hybrid(0.6), &arch);
+        let (asg, _) = pack_layer(&p, &arch);
+        for a in &asg {
+            assert!(a.kept_rows.len() < 256, "rows {}", a.kept_rows.len());
+            // kept rows are exactly the unpruned ones for the group
+            for &r in &a.kept_rows {
+                assert!(p.mask.kept(r as usize, a.group));
+            }
+        }
+        // baseline arch ignores the mask
+        let arch_b = ArchConfig::dense_baseline();
+        let (asg_b, _) = pack_layer(&p, &arch_b);
+        for a in &asg_b {
+            assert_eq!(a.kept_rows.len(), 256);
+        }
+    }
+
+    #[test]
+    fn tiles_cover_all_kept_rows_exactly() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(1000, 24, SparsityConfig::hybrid(0.3), &arch);
+        let (asg, tiles) = pack_layer(&p, &arch);
+        for (ai, a) in asg.iter().enumerate() {
+            let mut covered = 0;
+            for t in tiles.iter().filter(|t| t.assignment == ai) {
+                assert!(t.rows() <= arch.k_slots());
+                covered += t.rows();
+            }
+            assert_eq!(covered, a.kept_rows.len());
+        }
+    }
+
+    #[test]
+    fn schedule_balances_cores() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(512, 128, SparsityConfig::hybrid(0.5), &arch);
+        let (asg, _) = pack_layer(&p, &arch);
+        let mut loads = vec![0u64; arch.n_cores];
+        for a in &asg {
+            loads[a.core] += (a.kept_rows.len() * a.active_cols()) as u64;
+        }
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        assert!(min > 0.0, "idle core with 16 groups");
+        assert!(max / min.max(1.0) < 2.0, "imbalance {loads:?}");
+    }
+
+    #[test]
+    fn utilization_higher_for_dbpim_than_unused_columns() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(128, 64, SparsityConfig::hybrid(0.0), &arch);
+        let (asg, _) = pack_layer(&p, &arch);
+        let u = packing_utilization(&asg, &arch);
+        assert!(u > 0.5, "packing utilization {u}");
+    }
+}

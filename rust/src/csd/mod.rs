@@ -1,0 +1,257 @@
+//! Canonical Signed Digit (CSD / non-adjacent form) codec and the
+//! dyadic-block decomposition — bit-exact mirror of
+//! `python/compile/csd.py`.
+//!
+//! An INT8 value becomes 8 digits in {-1, 0, 1} (LSB first) with no two
+//! adjacent non-zeros; the 8 positions split into four *dyadic blocks*
+//! (bit pairs). Non-adjacency guarantees each block carries at most one
+//! signed digit, so a block is either the Zero pattern or a
+//! Complementary pattern that fits the Q/Q̄ pair of one 6T SRAM cell.
+
+/// Number of CSD digit positions for INT8.
+pub const NUM_DIGITS: usize = 8;
+/// Dyadic blocks per INT8 value.
+pub const NUM_BLOCKS: usize = NUM_DIGITS / 2;
+/// Maximum non-zero digit count (φ) for INT8.
+pub const MAX_PHI: u8 = NUM_BLOCKS as u8;
+
+/// CSD digits of one INT8 value, LSB first.
+pub fn to_csd(value: i8) -> [i8; NUM_DIGITS] {
+    let mut x = value as i32;
+    let mut digits = [0i8; NUM_DIGITS];
+    let mut i = 0;
+    while x != 0 {
+        if x & 1 != 0 {
+            let d = 2 - (x & 3); // +1 when x % 4 == 1, -1 when x % 4 == 3
+            x -= d;
+            digits[i] = d as i8;
+        }
+        i += 1;
+        x >>= 1;
+    }
+    debug_assert!(i <= NUM_DIGITS);
+    digits
+}
+
+/// Decode CSD digits back to the integer value.
+pub fn from_csd(digits: &[i8; NUM_DIGITS]) -> i32 {
+    digits
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| (d as i32) << i)
+        .sum()
+}
+
+/// Number of non-zero CSD digits (the paper's φ), in 0..=4.
+#[inline]
+pub fn phi(value: i8) -> u8 {
+    PHI_TABLE[(value as u8) as usize]
+}
+
+/// Precomputed φ for all 256 INT8 values (index = value as u8).
+pub static PHI_TABLE: [u8; 256] = build_phi_table();
+
+const fn build_phi_table() -> [u8; 256] {
+    let mut table = [0u8; 256];
+    let mut i: i32 = -128;
+    while i < 128 {
+        let mut x = i;
+        let mut count = 0u8;
+        while x != 0 {
+            if x & 1 != 0 {
+                let d = 2 - (x & 3);
+                x -= d;
+                count += 1;
+            }
+            x >>= 1;
+        }
+        table[(i as u8) as usize] = count;
+        i += 1;
+    }
+    table
+}
+
+/// Dyadic-block coefficients: block k covers digits (2k, 2k+1) and its
+/// coefficient is `d[2k] + 2*d[2k+1]` in {-2..2}, so
+/// `value == Σ_k coeff[k] << 2k`.
+pub fn dyadic_blocks(value: i8) -> [i8; NUM_BLOCKS] {
+    let d = to_csd(value);
+    let mut out = [0i8; NUM_BLOCKS];
+    let mut k = 0;
+    while k < NUM_BLOCKS {
+        out[k] = d[2 * k] + 2 * d[2 * k + 1];
+        k += 1;
+    }
+    out
+}
+
+/// Inverse of [`dyadic_blocks`].
+pub fn from_dyadic_blocks(coeffs: &[i8; NUM_BLOCKS]) -> i32 {
+    coeffs
+        .iter()
+        .enumerate()
+        .map(|(k, &c)| (c as i32) << (2 * k))
+        .sum()
+}
+
+/// One Comp.-pattern block as stored in the DB-PIM meta RF + SRAM cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompBlock {
+    /// Dyadic block index 0..=3 (the 2-bit "index" metadata).
+    pub index: u8,
+    /// True for a negative digit (the "sign" metadata bit).
+    pub sign: bool,
+    /// True when the digit sits at the odd position of the pair — this
+    /// is the Q bit of the 6T cell (patterns `10`/`T0`); Q̄ covers the
+    /// even position (patterns `01`/`0T`).
+    pub odd: bool,
+}
+
+impl CompBlock {
+    /// The signed contribution `±2^(2*index + odd)` of this block.
+    pub fn contribution(&self) -> i32 {
+        let mag = 1i32 << (2 * self.index as i32 + self.odd as i32);
+        if self.sign { -mag } else { mag }
+    }
+}
+
+/// Comp.-pattern metadata for a value — exactly `phi(value)` entries.
+pub fn comp_blocks(value: i8) -> Vec<CompBlock> {
+    dyadic_blocks(value)
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c != 0)
+        .map(|(k, &c)| CompBlock { index: k as u8, sign: c < 0, odd: c.abs() == 2 })
+        .collect()
+}
+
+/// Fraction of non-zero CSD digits over a weight slice (Fig. 3a metric
+/// under CSD encoding).
+pub fn nonzero_digit_fraction(values: &[i8]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let nz: u64 = values.iter().map(|&v| phi(v) as u64).sum();
+    nz as f64 / (values.len() * NUM_DIGITS) as f64
+}
+
+/// Fraction of non-zero bits under plain two's-complement encoding.
+pub fn nonzero_binary_fraction(values: &[i8]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let nz: u64 = values.iter().map(|&v| (v as u8).count_ones() as u64).sum();
+    nz as f64 / (values.len() * NUM_DIGITS) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_cases;
+
+    #[test]
+    fn roundtrip_exhaustive() {
+        for v in i8::MIN..=i8::MAX {
+            assert_eq!(from_csd(&to_csd(v)), v as i32, "value {v}");
+            assert_eq!(from_dyadic_blocks(&dyadic_blocks(v)), v as i32);
+        }
+    }
+
+    #[test]
+    fn nonadjacent_property_exhaustive() {
+        for v in i8::MIN..=i8::MAX {
+            let d = to_csd(v);
+            for i in 0..NUM_DIGITS - 1 {
+                assert!(!(d[i] != 0 && d[i + 1] != 0), "adjacent digits in {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn digits_are_ternary() {
+        for v in i8::MIN..=i8::MAX {
+            assert!(to_csd(v).iter().all(|d| (-1..=1).contains(d)));
+        }
+    }
+
+    #[test]
+    fn phi_matches_digit_count() {
+        for v in i8::MIN..=i8::MAX {
+            let count = to_csd(v).iter().filter(|&&d| d != 0).count() as u8;
+            assert_eq!(phi(v), count, "value {v}");
+            assert!(phi(v) <= MAX_PHI);
+        }
+    }
+
+    #[test]
+    fn paper_example_67() {
+        // Tab. I: 67 -> 0100_010T (digits at 6:+1, 2:+1, 0:-1).
+        let d = to_csd(67);
+        assert_eq!(d[0], -1);
+        assert_eq!(d[2], 1);
+        assert_eq!(d[6], 1);
+        assert_eq!(d.iter().filter(|&&x| x != 0).count(), 3);
+        // -67 -> 0T00_0T01
+        let d = to_csd(-67);
+        assert_eq!(d[0], 1);
+        assert_eq!(d[2], -1);
+        assert_eq!(d[6], -1);
+    }
+
+    #[test]
+    fn blocks_hold_at_most_one_digit() {
+        for v in i8::MIN..=i8::MAX {
+            let d = to_csd(v);
+            for k in 0..NUM_BLOCKS {
+                assert!(d[2 * k] == 0 || d[2 * k + 1] == 0, "value {v} block {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn comp_blocks_count_equals_phi_and_sum_reconstructs() {
+        for v in i8::MIN..=i8::MAX {
+            let blocks = comp_blocks(v);
+            assert_eq!(blocks.len(), phi(v) as usize);
+            let sum: i32 = blocks.iter().map(|b| b.contribution()).sum();
+            assert_eq!(sum, v as i32, "value {v}");
+        }
+    }
+
+    #[test]
+    fn comp_block_paper_example() {
+        // -64 = 0T00_0000: single block at index 3, even position, negative.
+        let blocks = comp_blocks(-64);
+        assert_eq!(blocks, vec![CompBlock { index: 3, sign: true, odd: false }]);
+        // 2: block 0, odd position, positive.
+        let blocks = comp_blocks(2);
+        assert_eq!(blocks, vec![CompBlock { index: 0, sign: false, odd: true }]);
+    }
+
+    #[test]
+    fn csd_denser_than_binary_on_random_weights() {
+        check_cases(4, |rng| {
+            let vals: Vec<i8> = (0..4096).map(|_| rng.int8()).collect();
+            let c = nonzero_digit_fraction(&vals);
+            let b = nonzero_binary_fraction(&vals);
+            if c >= b {
+                return Err(format!("csd {c} >= binary {b}"));
+            }
+            // Reitwiesner asymptotic density is 1/3.
+            if (c - 1.0 / 3.0).abs() > 0.04 {
+                return Err(format!("csd density {c} far from 1/3"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn phi_table_spot_checks() {
+        assert_eq!(phi(0), 0);
+        assert_eq!(phi(64), 1);
+        assert_eq!(phi(-64), 1);
+        assert_eq!(phi(85), 4); // 01010101 alternating
+        assert_eq!(phi(-128), 1);
+        assert_eq!(phi(127), 2); // 128 - 1
+    }
+}

@@ -1,0 +1,283 @@
+//! Fixed-Threshold Approximation (Alg. 1) — rust mirror of
+//! `python/compile/fta.py`, bit-exact (same mode rule, same tie-breaks).
+//!
+//! FTA gives every filter a uniform non-zero CSD digit count
+//! φ_th ∈ {0, 1, 2}: the mode of the filter's digit counts over weights
+//! that survived coarse pruning, clamped to 2. Every kept weight is then
+//! re-projected to the nearest INT8 value with exactly φ_th digits, so a
+//! filter occupies exactly φ_th SRAM columns per weight row and the
+//! crossbar stays regular with all Zero-pattern blocks removed.
+
+use crate::csd;
+
+/// Query table T(φ): all INT8 values with exactly φ non-zero CSD digits,
+/// ascending. The five tables partition the 256 INT8 values
+/// (|T(1)| = 15: ±2^0..2^6 plus -2^7; +128 is out of range).
+pub fn query_table(phi_th: u8) -> &'static [i8] {
+    assert!(phi_th <= csd::MAX_PHI, "phi {phi_th} out of range");
+    &TABLES[phi_th as usize]
+}
+
+static TABLES: std::sync::LazyLock<[Vec<i8>; 5]> = std::sync::LazyLock::new(|| {
+    let mut tables: [Vec<i8>; 5] = Default::default();
+    for v in i8::MIN..=i8::MAX {
+        tables[csd::phi(v) as usize].push(v);
+    }
+    for t in &mut tables {
+        t.sort_unstable();
+    }
+    tables
+});
+
+/// Project `value` to the closest element of T(φ_th); ties resolve to
+/// the larger candidate (paper's worked example projects 0 → +1).
+/// O(1): precomputed 256-entry projection LUT per φ (perf §Perf: this
+/// is the FTA hot spot — one lookup per weight per projection).
+#[inline]
+pub fn nearest_in_table(value: i8, phi_th: u8) -> i8 {
+    assert!(phi_th <= csd::MAX_PHI, "phi {phi_th} out of range");
+    NEAREST[phi_th as usize][(value as u8) as usize]
+}
+
+static NEAREST: std::sync::LazyLock<[[i8; 256]; 5]> = std::sync::LazyLock::new(|| {
+    let mut out = [[0i8; 256]; 5];
+    for phi_th in 0..=csd::MAX_PHI {
+        let table = query_table(phi_th);
+        for v in i8::MIN..=i8::MAX {
+            out[phi_th as usize][(v as u8) as usize] = nearest_search(v, table);
+        }
+    }
+    out
+});
+
+fn nearest_search(value: i8, table: &[i8]) -> i8 {
+    let v = value as i32;
+    match table.binary_search(&value) {
+        Ok(_) => value,
+        Err(idx) => {
+            let lo = idx.saturating_sub(1).min(table.len() - 1);
+            let hi = idx.min(table.len() - 1);
+            let (tl, th) = (table[lo] as i32, table[hi] as i32);
+            // strict '<' keeps hi on ties => prefer the larger value
+            if (v - tl).abs() < (th - v).abs() {
+                table[lo]
+            } else {
+                table[hi]
+            }
+        }
+    }
+}
+
+/// Threshold rule: mode of kept weights' φ, with the paper's clamps.
+pub fn filter_threshold(phis: &[u8], mask: &[bool]) -> u8 {
+    debug_assert_eq!(phis.len(), mask.len());
+    let mut counts = [0u32; csd::MAX_PHI as usize + 1];
+    let mut any_nonzero_phi = false;
+    let mut any_kept = false;
+    for (&p, &m) in phis.iter().zip(mask) {
+        any_nonzero_phi |= p != 0;
+        if m {
+            counts[p as usize] += 1;
+            any_kept = true;
+        }
+    }
+    if !any_kept || !any_nonzero_phi {
+        return 0; // all-zero (or fully pruned) filter
+    }
+    // Mode; ties resolve to the smaller φ (first max), matching numpy argmax.
+    let mode = counts
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i as u8)
+        .unwrap();
+    match mode {
+        0 => 1,
+        1 | 2 => mode,
+        _ => 2,
+    }
+}
+
+/// Apply FTA to one filter. Masked weights stay exactly zero; every kept
+/// weight (including natural zeros) is projected into T(φ_th).
+/// Returns (projected weights, φ_th).
+pub fn fta_filter(weights: &[i8], mask: &[bool]) -> (Vec<i8>, u8) {
+    let phis: Vec<u8> = weights.iter().map(|&w| csd::phi(w)).collect();
+    let th = filter_threshold(&phis, mask);
+    if th == 0 {
+        return (vec![0; weights.len()], 0);
+    }
+    let out = weights
+        .iter()
+        .zip(mask)
+        .map(|(&w, &m)| if m { nearest_in_table(w, th) } else { 0 })
+        .collect();
+    (out, th)
+}
+
+/// Apply FTA to a layer's [K, N] weight matrix (row-major). `mask` is a
+/// per-weight keep mask of the same shape (all-true when absent).
+/// Returns (projected [K, N], thresholds [N]).
+pub fn fta_layer(weights: &[i8], k: usize, n: usize, mask: Option<&[bool]>) -> (Vec<i8>, Vec<u8>) {
+    assert_eq!(weights.len(), k * n);
+    // Transpose once so each filter is contiguous (perf §Perf: the
+    // column-strided walk dominated the offline pipeline profile).
+    let mut wt = vec![0i8; k * n];
+    let mut mt = vec![true; k * n];
+    for row in 0..k {
+        let wrow = &weights[row * n..(row + 1) * n];
+        for col in 0..n {
+            wt[col * k + row] = wrow[col];
+        }
+        if let Some(m) = mask {
+            let mrow = &m[row * n..(row + 1) * n];
+            for col in 0..n {
+                mt[col * k + row] = mrow[col];
+            }
+        }
+    }
+    let mut out = vec![0i8; k * n];
+    let mut ths = vec![0u8; n];
+    for col in 0..n {
+        let (proj, th) = fta_filter(&wt[col * k..(col + 1) * k], &mt[col * k..(col + 1) * k]);
+        ths[col] = th;
+        for row in 0..k {
+            out[row * n + col] = proj[row];
+        }
+    }
+    (out, ths)
+}
+
+/// Bit-level sparsity (fraction of zero CSD digits).
+pub fn bit_sparsity(weights: &[i8]) -> f64 {
+    1.0 - csd::nonzero_digit_fraction(weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_cases;
+
+    #[test]
+    fn tables_partition_int8() {
+        let total: usize = (0..=4).map(|p| query_table(p).len()).sum();
+        assert_eq!(total, 256);
+        assert_eq!(query_table(0), &[0]);
+        assert_eq!(query_table(1).len(), 15);
+    }
+
+    #[test]
+    fn table_one_is_signed_powers_of_two() {
+        let t: Vec<i32> = query_table(1).iter().map(|&v| v as i32).collect();
+        let mut expect: Vec<i32> = (0..8)
+            .flat_map(|k| [1i32 << k, -(1i32 << k)])
+            .filter(|v| (-128..=127).contains(v))
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(t, expect);
+    }
+
+    #[test]
+    fn nearest_tie_prefers_larger() {
+        assert_eq!(nearest_in_table(0, 1), 1);
+    }
+
+    #[test]
+    fn nearest_is_optimal_exhaustive() {
+        for th in 1..=2u8 {
+            let table = query_table(th);
+            for v in i8::MIN..=i8::MAX {
+                let chosen = nearest_in_table(v, th);
+                let best = table
+                    .iter()
+                    .map(|&t| (t as i32 - v as i32).abs())
+                    .min()
+                    .unwrap();
+                assert_eq!((chosen as i32 - v as i32).abs(), best, "v={v} th={th}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // Sec. IV-C: f0 = {-63,0,64,0,0,-8,13}, mask = {1,0,1,1,0,1,1}.
+        let f0: [i8; 7] = [-63, 0, 64, 0, 0, -8, 13];
+        let mask = [true, false, true, true, false, true, true];
+        let phis: Vec<u8> = f0.iter().map(|&w| csd::phi(w)).collect();
+        assert_eq!(phis, vec![2, 0, 1, 0, 0, 1, 3]);
+        assert_eq!(filter_threshold(&phis, &mask), 1);
+        let (out, th) = fta_filter(&f0, &mask);
+        assert_eq!(th, 1);
+        assert_eq!(out, vec![-64, 0, 64, 1, 0, -8, 16]);
+    }
+
+    #[test]
+    fn threshold_rules() {
+        let ones = [true; 4];
+        assert_eq!(filter_threshold(&[0, 0, 0, 0], &ones), 0);
+        assert_eq!(filter_threshold(&[0, 0, 0, 1], &ones), 1);
+        assert_eq!(filter_threshold(&[1, 1, 2, 3], &ones), 1);
+        assert_eq!(filter_threshold(&[2, 2, 1, 3], &ones), 2);
+        assert_eq!(filter_threshold(&[3, 3, 4, 1], &ones), 2);
+        assert_eq!(filter_threshold(&[1, 2, 3], &[false; 3]), 0);
+    }
+
+    #[test]
+    fn projection_uniform_phi_property() {
+        check_cases(32, |rng| {
+            let k = 8 + rng.below(64) as usize;
+            let w: Vec<i8> = (0..k).map(|_| rng.int8()).collect();
+            let mask: Vec<bool> = (0..k).map(|_| rng.f64() > 0.3).collect();
+            let (out, th) = fta_filter(&w, &mask);
+            for (i, (&o, &m)) in out.iter().zip(&mask).enumerate() {
+                if !m && o != 0 {
+                    return Err(format!("pruned weight {i} nonzero"));
+                }
+                if m && th > 0 && csd::phi(o) != th {
+                    return Err(format!("weight {i}: phi {} != th {th}", csd::phi(o)));
+                }
+                if th == 0 && o != 0 {
+                    return Err(format!("all-zero filter has nonzero at {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn projection_idempotent() {
+        check_cases(16, |rng| {
+            let w: Vec<i8> = (0..32).map(|_| rng.int8()).collect();
+            let (once, th1) = fta_filter(&w, &vec![true; 32]);
+            let (twice, th2) = fta_filter(&once, &vec![true; 32]);
+            if once != twice || th1 != th2 {
+                return Err("not idempotent".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn layer_matches_per_filter() {
+        let (k, n) = (16, 4);
+        let mut rng = crate::util::Rng::new(9);
+        let w: Vec<i8> = (0..k * n).map(|_| rng.int8()).collect();
+        let (out, ths) = fta_layer(&w, k, n, None);
+        for col in 0..n {
+            let colw: Vec<i8> = (0..k).map(|r| w[r * n + col]).collect();
+            let (proj, th) = fta_filter(&colw, &vec![true; k]);
+            assert_eq!(th, ths[col]);
+            for r in 0..k {
+                assert_eq!(out[r * n + col], proj[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn fta_guarantees_75_percent_sparsity() {
+        let mut rng = crate::util::Rng::new(3);
+        let w: Vec<i8> = (0..4096).map(|_| rng.int8()).collect();
+        let (out, _) = fta_layer(&w, 256, 16, None);
+        assert!(bit_sparsity(&out) >= 0.75);
+    }
+}

@@ -1,0 +1,217 @@
+//! The DB-PIM instruction set.
+//!
+//! The offline compiler (Sec. III "offline compilation" → instructions
+//! stored in the instruction buffer) emits one stream per layer; the top
+//! controller in the simulator fetches, decodes and dispatches them.
+//! The encoding is a fixed 12-byte little-endian word so the instruction
+//! buffer occupancy (16 KB in the paper) can be checked per layer.
+
+/// SIMD-core opcode (non-PIM operations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SimdOp {
+    Relu = 0,
+    MaxPool = 1,
+    AvgPool = 2,
+    Requant = 3,
+    ResAdd = 4,
+    Mul = 5,
+    DwConv = 6,
+}
+
+impl SimdOp {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            0 => SimdOp::Relu,
+            1 => SimdOp::MaxPool,
+            2 => SimdOp::AvgPool,
+            3 => SimdOp::Requant,
+            4 => SimdOp::ResAdd,
+            5 => SimdOp::Mul,
+            6 => SimdOp::DwConv,
+            _ => return None,
+        })
+    }
+}
+
+/// One instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// Load weight tile `tile` into every macro of `core`
+    /// (weight-stationary: done once per tile, reused over all M).
+    LoadTile { core: u8, tile: u32 },
+    /// Stream input rows `[m_base, m_base + m_count)` through `core`'s
+    /// macros against the resident tile and accumulate partial sums.
+    Compute { core: u8, tile: u32, m_base: u32, m_count: u16 },
+    /// Drain the core's accumulators for those rows to the output buffer.
+    Store { core: u8, tile: u32, m_base: u32, m_count: u16 },
+    /// SIMD-core operation over `elems` elements.
+    Simd { op: SimdOp, elems: u32 },
+    /// Barrier: wait for all cores to finish outstanding work.
+    Sync,
+    /// End of the layer's stream.
+    EndLayer,
+}
+
+/// Fixed encoding width (bytes).
+pub const INSTR_BYTES: usize = 12;
+
+const OP_LOAD: u8 = 1;
+const OP_COMPUTE: u8 = 2;
+const OP_STORE: u8 = 3;
+const OP_SIMD: u8 = 4;
+const OP_SYNC: u8 = 5;
+const OP_END: u8 = 6;
+
+impl Instr {
+    /// Encode into the 12-byte instruction word.
+    pub fn encode(&self) -> [u8; INSTR_BYTES] {
+        let mut w = [0u8; INSTR_BYTES];
+        match *self {
+            Instr::LoadTile { core, tile } => {
+                w[0] = OP_LOAD;
+                w[1] = core;
+                w[2..6].copy_from_slice(&tile.to_le_bytes());
+            }
+            Instr::Compute { core, tile, m_base, m_count } => {
+                w[0] = OP_COMPUTE;
+                w[1] = core;
+                w[2..6].copy_from_slice(&tile.to_le_bytes());
+                w[6..10].copy_from_slice(&m_base.to_le_bytes());
+                w[10..12].copy_from_slice(&m_count.to_le_bytes());
+            }
+            Instr::Store { core, tile, m_base, m_count } => {
+                w[0] = OP_STORE;
+                w[1] = core;
+                w[2..6].copy_from_slice(&tile.to_le_bytes());
+                w[6..10].copy_from_slice(&m_base.to_le_bytes());
+                w[10..12].copy_from_slice(&m_count.to_le_bytes());
+            }
+            Instr::Simd { op, elems } => {
+                w[0] = OP_SIMD;
+                w[1] = op as u8;
+                w[2..6].copy_from_slice(&elems.to_le_bytes());
+            }
+            Instr::Sync => w[0] = OP_SYNC,
+            Instr::EndLayer => w[0] = OP_END,
+        }
+        w
+    }
+
+    /// Decode one instruction word.
+    pub fn decode(w: &[u8]) -> Option<Instr> {
+        if w.len() < INSTR_BYTES {
+            return None;
+        }
+        let tile = u32::from_le_bytes([w[2], w[3], w[4], w[5]]);
+        let m_base = u32::from_le_bytes([w[6], w[7], w[8], w[9]]);
+        let m_count = u16::from_le_bytes([w[10], w[11]]);
+        Some(match w[0] {
+            OP_LOAD => Instr::LoadTile { core: w[1], tile },
+            OP_COMPUTE => Instr::Compute { core: w[1], tile, m_base, m_count },
+            OP_STORE => Instr::Store { core: w[1], tile, m_base, m_count },
+            OP_SIMD => Instr::Simd { op: SimdOp::from_u8(w[1])?, elems: tile },
+            OP_SYNC => Instr::Sync,
+            OP_END => Instr::EndLayer,
+            _ => return None,
+        })
+    }
+}
+
+/// Encode a full stream.
+pub fn encode_stream(instrs: &[Instr]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(instrs.len() * INSTR_BYTES);
+    for i in instrs {
+        out.extend_from_slice(&i.encode());
+    }
+    out
+}
+
+/// Decode a full stream.
+pub fn decode_stream(bytes: &[u8]) -> Option<Vec<Instr>> {
+    if bytes.len() % INSTR_BYTES != 0 {
+        return None;
+    }
+    bytes.chunks_exact(INSTR_BYTES).map(Instr::decode).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_cases;
+
+    fn sample() -> Vec<Instr> {
+        vec![
+            Instr::LoadTile { core: 3, tile: 77 },
+            Instr::Compute { core: 3, tile: 77, m_base: 1024, m_count: 64 },
+            Instr::Store { core: 3, tile: 77, m_base: 1024, m_count: 64 },
+            Instr::Simd { op: SimdOp::DwConv, elems: 123_456 },
+            Instr::Sync,
+            Instr::EndLayer,
+        ]
+    }
+
+    #[test]
+    fn roundtrip_all_opcodes() {
+        for i in sample() {
+            assert_eq!(Instr::decode(&i.encode()), Some(i));
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip() {
+        let s = sample();
+        let bytes = encode_stream(&s);
+        assert_eq!(bytes.len(), s.len() * INSTR_BYTES);
+        assert_eq!(decode_stream(&bytes), Some(s));
+    }
+
+    #[test]
+    fn rejects_bad_opcode_and_length() {
+        let mut w = [0u8; INSTR_BYTES];
+        w[0] = 99;
+        assert_eq!(Instr::decode(&w), None);
+        assert_eq!(Instr::decode(&w[..4]), None);
+        assert_eq!(decode_stream(&[0u8; 13]), None);
+    }
+
+    #[test]
+    fn simd_ops_roundtrip() {
+        for v in 0..7u8 {
+            let op = SimdOp::from_u8(v).unwrap();
+            assert_eq!(op as u8, v);
+        }
+        assert_eq!(SimdOp::from_u8(7), None);
+    }
+
+    #[test]
+    fn random_instruction_roundtrip_property() {
+        check_cases(64, |rng| {
+            let i = match rng.below(6) {
+                0 => Instr::LoadTile { core: rng.below(8) as u8, tile: rng.next_u64() as u32 },
+                1 => Instr::Compute {
+                    core: rng.below(8) as u8,
+                    tile: rng.next_u64() as u32,
+                    m_base: rng.next_u64() as u32,
+                    m_count: rng.next_u64() as u16,
+                },
+                2 => Instr::Store {
+                    core: rng.below(8) as u8,
+                    tile: rng.next_u64() as u32,
+                    m_base: rng.next_u64() as u32,
+                    m_count: rng.next_u64() as u16,
+                },
+                3 => Instr::Simd {
+                    op: SimdOp::from_u8(rng.below(7) as u8).unwrap(),
+                    elems: rng.next_u64() as u32,
+                },
+                4 => Instr::Sync,
+                _ => Instr::EndLayer,
+            };
+            if Instr::decode(&i.encode()) != Some(i) {
+                return Err(format!("roundtrip failed for {i:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! # DB-PIM — Dyadic Block Processing-In-Memory
+//!
+//! Reproduction of *"Efficient SRAM-PIM Co-design by Joint Exploration of
+//! Value-Level and Bit-Level Sparsity"* (Duan et al., 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time, python)** — the hybrid-grained pruning
+//!   algorithm (coarse block pruning + CSD/FTA bit-level sparsity), the
+//!   Pallas dyadic-matmul kernel, and the AOT-lowered golden HLO graphs.
+//! * **Layer 3 (this crate)** — the offline compiler that maps pruned
+//!   INT8 networks onto the DB-PIM macro grid, a cycle-accurate
+//!   simulator of the architecture (sparse allocation network, IPU,
+//!   DBMU compartments, CSD adder trees, SIMD core) plus its dense
+//!   digital-PIM baseline, the energy model, and a coordinator that
+//!   schedules per-layer jobs and verifies numerics against the golden
+//!   HLO through the PJRT runtime.
+//!
+//! The crate is organised bottom-up; see `DESIGN.md` for the full system
+//! inventory and the per-experiment index (every paper table/figure maps
+//! to a bench target in `rust/benches/`).
+
+pub mod arch;
+pub mod benchlib;
+pub mod compiler;
+pub mod coordinator;
+pub mod csd;
+pub mod energy;
+pub mod fta;
+pub mod isa;
+pub mod json;
+pub mod models;
+pub mod pruning;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

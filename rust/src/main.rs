@@ -1,0 +1,359 @@
+//! `dbpim` — DB-PIM leader CLI.
+//!
+//! Subcommands (hand-rolled parser; clap is not in the offline registry):
+//!
+//! ```text
+//! dbpim verify             run MiniNet on the simulator + golden HLO via
+//!                          PJRT and compare logits bit-for-bit
+//! dbpim simulate <net>     simulate one network (--arch, --value-sparsity)
+//! dbpim fig3|fig11|fig12|fig13|table2|table3
+//!                          regenerate a paper figure/table (prints the
+//!                          rows + writes artifacts/<exp>.json)
+//! dbpim info               architecture summary
+//! ```
+
+use dbpim::arch::ArchConfig;
+use dbpim::benchlib::{f2, pct, print_table};
+use dbpim::compiler::SparsityConfig;
+use dbpim::coordinator::experiments as exp;
+use dbpim::json;
+use dbpim::models;
+use dbpim::sim;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let code = match cmd {
+        "verify" => cmd_verify(),
+        "simulate" => cmd_simulate(&args[1..]),
+        "fig3" => cmd_fig3(),
+        "fig11" => cmd_fig11(),
+        "fig12" => cmd_fig12(),
+        "fig13" => cmd_fig13(),
+        "table2" => cmd_table2(),
+        "table3" => cmd_table3(),
+        "energy" => cmd_energy(&args[1..]),
+        "trace" => cmd_trace(&args[1..]),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: dbpim <verify|simulate|energy|trace|fig3|fig11|fig12|fig13|table2|table3|info>"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn write_report(name: &str, value: &json::Value) {
+    let dir = models::default_artifacts_dir();
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::create_dir_all(&dir).is_ok() && std::fs::write(&path, json::to_string(value)).is_ok()
+    {
+        println!("wrote {path:?}");
+    }
+}
+
+fn cmd_verify() -> i32 {
+    let dir = models::default_artifacts_dir();
+    let net = match models::load_mininet(&dir) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("error loading artifacts: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!(
+        "MiniNet: {} layers, batch {}, {} classes",
+        net.layers.len(),
+        net.batch,
+        net.num_classes
+    );
+
+    // 1. simulator (DB-PIM + baseline)
+    let run_d = sim::pipeline::run_mininet(&net, &ArchConfig::db_pim()).unwrap();
+    let run_b = sim::pipeline::run_mininet(&net, &ArchConfig::dense_baseline()).unwrap();
+    let sim_ok = run_d.matches_golden(&net) && run_b.matches_golden(&net);
+    println!("simulator vs exported golden: {}", if sim_ok { "BIT-EXACT" } else { "MISMATCH" });
+
+    // 2. golden HLO through PJRT
+    match dbpim::runtime::run_golden_mininet(&net) {
+        Ok(logits) => {
+            let pjrt_ok = logits == net.golden && logits == run_d.logits;
+            println!(
+                "PJRT golden HLO vs simulator: {}",
+                if pjrt_ok { "BIT-EXACT" } else { "MISMATCH" }
+            );
+            if !pjrt_ok {
+                return 1;
+            }
+        }
+        Err(e) => {
+            eprintln!("PJRT execution failed: {e:#}");
+            return 1;
+        }
+    }
+
+    println!(
+        "DB-PIM: {} cycles, {:.2} µs, {:.3} µJ | baseline: {} cycles ⇒ speedup {:.2}×, energy saving {}",
+        run_d.total_cycles(),
+        run_d.time_us(),
+        run_d.energy_uj(),
+        run_b.total_cycles(),
+        run_b.total_cycles() as f64 / run_d.total_cycles() as f64,
+        pct(1.0 - run_d.energy_uj() / run_b.energy_uj()),
+    );
+    if sim_ok {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_simulate(args: &[String]) -> i32 {
+    let name = args.first().map(String::as_str).unwrap_or("resnet18");
+    let Some(net) = models::by_name(name) else {
+        eprintln!(
+            "unknown network {name} (try: alexnet vgg19 resnet18 mobilenet_v2 efficientnet_b0)"
+        );
+        return 2;
+    };
+    let arch = match flag_value(args, "--arch").as_deref() {
+        None | Some("db-pim") => ArchConfig::db_pim(),
+        Some("baseline") => ArchConfig::dense_baseline(),
+        Some("bit-only") => ArchConfig::bit_only(),
+        Some("value-only") => ArchConfig::value_only(),
+        Some("weights-only") => ArchConfig::weights_only(),
+        Some("dac24") => ArchConfig::dac24(),
+        Some(other) => {
+            eprintln!("unknown arch {other}");
+            return 2;
+        }
+    };
+    let v = flag_value(args, "--value-sparsity").and_then(|s| s.parse().ok()).unwrap_or(0.6);
+    let sp = if args.iter().any(|a| a == "--no-fta") {
+        SparsityConfig { value_sparsity: v, fta: false }
+    } else {
+        SparsityConfig::hybrid(v)
+    };
+    let t0 = std::time::Instant::now();
+    let r = sim::simulate_network(&net, sp, &arch, 42);
+    println!(
+        "{name} on {}: {} cycles ({:.3} ms @ {:.0} MHz), PIM-only {:.3} ms, {:.1} µJ, U_act {}",
+        arch.name,
+        r.total_cycles(),
+        r.time_ms(),
+        arch.freq_mhz,
+        r.pim_time_ms(),
+        r.energy_uj(),
+        pct(r.u_act()),
+    );
+    println!("simulated in {:?} host time", t0.elapsed());
+    for (cat, share) in r.category_breakdown() {
+        println!("  {:?}: {}", cat, pct(share));
+    }
+    0
+}
+
+fn cmd_fig3() -> i32 {
+    let (bits, cols) = exp::fig3(42);
+    print_table(
+        "Fig. 3(a) — zero-bit proportion in weights (CSD)",
+        &["network", "original", "60% value-pruned", "hybrid (ours)"],
+        &bits
+            .iter()
+            .map(|r| vec![r.network.clone(), pct(r.original), pct(r.value_pruned), pct(r.hybrid)])
+            .collect::<Vec<_>>(),
+    );
+    print_table(
+        "Fig. 3(b) — all-zero input bit columns by group size",
+        &["network", "N=1", "N=8", "N=16"],
+        &cols
+            .iter()
+            .map(|r| vec![r.network.clone(), pct(r.group1), pct(r.group8), pct(r.group16)])
+            .collect::<Vec<_>>(),
+    );
+    0
+}
+
+fn cmd_fig11() -> i32 {
+    let rows = exp::fig11(42);
+    print_table(
+        "Fig. 11 — speedup & energy saving vs dense PIM (weight sparsity only)",
+        &["network", "total sparsity", "speedup", "energy saving"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    pct(r.total_sparsity),
+                    format!("{}x", f2(r.speedup)),
+                    pct(r.energy_saving),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    write_report("fig11", &exp::fig11_json(&rows));
+    0
+}
+
+fn cmd_fig12() -> i32 {
+    let rows = exp::fig12(42);
+    print_table(
+        "Fig. 12 — end-to-end breakdown by sparsity approach",
+        &["network", "approach", "speedup", "normalized energy"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    r.approach.to_string(),
+                    format!("{}x", f2(r.speedup)),
+                    f2(r.energy_norm),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    write_report("fig12", &exp::fig12_json(&rows));
+    0
+}
+
+fn cmd_fig13() -> i32 {
+    let rows = exp::fig13(42);
+    print_table(
+        "Fig. 13 — execution-time breakdown",
+        &["network", "pw/std-conv+FC", "dw-conv", "mul", "etc"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    pct(r.pw_std_conv_fc),
+                    pct(r.dw_conv),
+                    pct(r.mul),
+                    pct(r.etc),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    write_report("fig13", &exp::fig13_json(&rows));
+    0
+}
+
+fn cmd_table2() -> i32 {
+    let t = exp::table2(42);
+    println!("Table II — this work:");
+    println!("  macros: {}  PIM capacity: {} KB", t.total_macros, t.pim_kb);
+    println!(
+        "  peak: {:.2} TOPS | {:.1} GOPS/macro (φ=1), {:.1} (φ=2), {:.1} (dense mapping)",
+        t.peak_tops_phi1,
+        t.peak_gops_per_macro_phi1,
+        t.peak_gops_per_macro_phi2,
+        t.dense_gops_per_macro
+    );
+    print_table(
+        "Measured actual utilization U_act (hybrid, 60% value + FTA)",
+        &["network", "U_act"],
+        &t.u_act.iter().map(|(n, u)| vec![n.clone(), pct(*u)]).collect::<Vec<_>>(),
+    );
+    0
+}
+
+fn cmd_table3() -> i32 {
+    let rows = exp::table3(42);
+    print_table(
+        "Table III — on-chip execution time, std/pw-conv + FC only (ms)",
+        &["network", "DAC'24", "bit-level", "hybrid", "hybrid speedup vs DAC'24"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    f2(r.dac24_ms),
+                    f2(r.bit_level_ms),
+                    f2(r.hybrid_ms),
+                    format!("{}x", f2(r.dac24_ms / r.hybrid_ms)),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    write_report("table3", &exp::table3_json(&rows));
+    0
+}
+
+/// Per-component energy breakdown of a simulated run (Fig. 12-style
+/// energy accounting, per hardware block).
+fn cmd_energy(args: &[String]) -> i32 {
+    let name = args.first().map(String::as_str).unwrap_or("resnet18");
+    let Some(net) = models::by_name(name) else {
+        eprintln!("unknown network {name}");
+        return 2;
+    };
+    let table = dbpim::energy::EnergyTable::default28nm();
+    for arch in [ArchConfig::db_pim(), ArchConfig::dense_baseline()] {
+        let sp = if arch.weight_bit_sparsity {
+            SparsityConfig::hybrid(0.6)
+        } else {
+            SparsityConfig::dense()
+        };
+        let r = sim::simulate_network(&net, sp, &arch, 42);
+        let breakdown = r.totals.energy_breakdown(&table);
+        let total: f64 = breakdown.iter().map(|(_, v)| v).sum();
+        println!("\n{name} on {} — total {:.1} µJ", arch.name, total / 1e6);
+        for (label, pj) in breakdown {
+            println!("  {label:14} {:>9.2} µJ  ({})", pj / 1e6, pct(pj / total));
+        }
+    }
+    0
+}
+
+/// Dump a Chrome/Perfetto trace of one simulated inference.
+fn cmd_trace(args: &[String]) -> i32 {
+    let name = args.first().map(String::as_str).unwrap_or("mobilenet_v2");
+    let Some(net) = models::by_name(name) else {
+        eprintln!("unknown network {name}");
+        return 2;
+    };
+    let out = flag_value(args, "--out").unwrap_or_else(|| format!("{name}_trace.json"));
+    let r = sim::simulate_network(&net, SparsityConfig::hybrid(0.6), &ArchConfig::db_pim(), 42);
+    let text = dbpim::sim::trace::chrome_trace(&r);
+    match std::fs::write(&out, &text) {
+        Ok(()) => {
+            println!("wrote {out} ({} bytes) — open in ui.perfetto.dev", text.len());
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    for arch in [
+        ArchConfig::db_pim(),
+        ArchConfig::dense_baseline(),
+        ArchConfig::bit_only(),
+        ArchConfig::value_only(),
+        ArchConfig::dac24(),
+    ] {
+        println!(
+            "{:16} cores={} macros={} Tk={} cols={} bits={} {}{}{}simd={}",
+            arch.name,
+            arch.n_cores,
+            arch.total_macros(),
+            arch.k_slots(),
+            arch.macro_columns,
+            arch.input_bits,
+            if arch.weight_bit_sparsity { "wbit " } else { "" },
+            if arch.value_sparsity { "value " } else { "" },
+            if arch.input_skipping { "ipu " } else { "" },
+            arch.has_simd,
+        );
+    }
+    0
+}

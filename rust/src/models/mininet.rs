@@ -1,0 +1,235 @@
+//! MiniNet: the e2e verification model exported by `python/compile/aot.py`.
+//!
+//! The manifest + binary pack carry the exact FTA-projected INT8 weights
+//! baked into the golden HLO graph, so the rust compiler/simulator can
+//! run the same network and compare logits bit-for-bit against PJRT.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::json;
+use crate::pruning::BlockMask;
+use crate::tensor::ConvGeom;
+
+/// One PIM layer of MiniNet with its loaded weights and metadata.
+#[derive(Debug, Clone)]
+pub struct MiniNetLayer {
+    pub name: String,
+    /// im2col weight matrix [K, N], row-major (column n = filter n).
+    pub weights: Vec<i8>,
+    pub k: usize,
+    pub n: usize,
+    /// Coarse-pruning block mask (1×α blocks along filters).
+    pub mask: BlockMask,
+    /// FTA thresholds per filter.
+    pub thresholds: Vec<u8>,
+    /// Fixed-point requantization multiplier (shift = 16).
+    pub requant_mul: i32,
+    /// Conv geometry; `None` for the FC layer.
+    pub conv: Option<ConvInfo>,
+}
+
+/// Conv attributes from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvInfo {
+    pub out_ch: usize,
+    pub in_ch: usize,
+    pub geom: ConvGeom,
+    pub pool: bool,
+}
+
+/// The full loaded model + verification fixtures.
+#[derive(Debug, Clone)]
+pub struct MiniNet {
+    pub alpha: usize,
+    pub batch: usize,
+    pub input_ch: usize,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub layers: Vec<MiniNetLayer>,
+    /// Fixed input batch (NCHW int8) used by the golden run.
+    pub input: Vec<i8>,
+    /// Golden logits [batch, num_classes] int32 from the jnp oracle.
+    pub golden: Vec<i32>,
+    /// Path to the golden HLO text (for the PJRT runtime).
+    pub hlo_path: PathBuf,
+    /// Path to the golden tile-matmul HLO text.
+    pub tile_hlo_path: PathBuf,
+}
+
+/// Load MiniNet from an artifacts directory (`make artifacts` output).
+pub fn load_mininet(artifacts_dir: &Path) -> crate::Result<MiniNet> {
+    let manifest_path = artifacts_dir.join("mininet_manifest.json");
+    let text = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+    let m = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+    let alpha = m.req("alpha").as_usize().context("alpha")?;
+    let input_obj = m.req("input");
+    let batch = input_obj.req("batch").as_usize().context("batch")?;
+    let input_ch = input_obj.req("ch").as_usize().context("ch")?;
+    let input_hw = input_obj.req("hw").as_usize().context("hw")?;
+    let num_classes = m.req("num_classes").as_usize().context("classes")?;
+
+    let files = m.req("files");
+    let read_bin = |key: &str| -> crate::Result<Vec<u8>> {
+        let name = files.req(key).as_str().context("file name")?;
+        std::fs::read(artifacts_dir.join(name)).with_context(|| format!("reading {name}"))
+    };
+    let weights_bin = read_bin("weights")?;
+    let masks_bin = read_bin("masks")?;
+    let input_bin = read_bin("input")?;
+    let golden_bin = read_bin("golden")?;
+
+    let mut layers = Vec::new();
+    for layer in m.req("layers").as_arr().context("layers")? {
+        let name = layer.req("name").as_str().context("name")?.to_string();
+        let k = layer.req("k").as_usize().context("k")?;
+        let n = layer.req("n").as_usize().context("n")?;
+        let woff = layer.req("weight_offset").as_usize().context("woff")?;
+        let moff = layer.req("mask_offset").as_usize().context("moff")?;
+        if woff + k * n > weights_bin.len() {
+            bail!("weight pack too short for layer {name}");
+        }
+        let weights: Vec<i8> =
+            weights_bin[woff..woff + k * n].iter().map(|&b| b as i8).collect();
+        let groups = n / alpha;
+        let mask = BlockMask::from_bytes(k, groups, alpha, &masks_bin[moff..moff + k * groups]);
+        let thresholds: Vec<u8> = layer
+            .req("thresholds")
+            .as_arr()
+            .context("thresholds")?
+            .iter()
+            .map(|v| v.as_i64().unwrap_or(0) as u8)
+            .collect();
+        if thresholds.len() != n {
+            bail!("layer {name}: {} thresholds for n={n}", thresholds.len());
+        }
+        let requant_mul = layer.req("requant_mul").as_i64().context("mul")? as i32;
+        let conv = match layer.get("conv") {
+            Some(c) if *c != json::Value::Null => Some(ConvInfo {
+                out_ch: c.req("out_ch").as_usize().context("out_ch")?,
+                in_ch: c.req("in_ch").as_usize().context("in_ch")?,
+                geom: ConvGeom {
+                    kh: c.req("kernel").as_usize().context("kernel")?,
+                    kw: c.req("kernel").as_usize().context("kernel")?,
+                    stride: c.req("stride").as_usize().context("stride")?,
+                    pad: c.req("pad").as_usize().context("pad")?,
+                },
+                pool: c.req("pool").as_bool().context("pool")?,
+            }),
+            _ => None,
+        };
+        layers.push(MiniNetLayer { name, weights, k, n, mask, thresholds, requant_mul, conv });
+    }
+
+    let input: Vec<i8> = input_bin.iter().map(|&b| b as i8).collect();
+    if input.len() != batch * input_ch * input_hw * input_hw {
+        bail!("input pack size mismatch");
+    }
+    let golden: Vec<i32> = golden_bin
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    if golden.len() != batch * num_classes {
+        bail!("golden pack size mismatch");
+    }
+
+    let hlo_path = artifacts_dir.join(files.req("hlo").as_str().context("hlo")?);
+    let tile_hlo_path =
+        artifacts_dir.join(files.req("tile_hlo").as_str().context("tile_hlo")?);
+    Ok(MiniNet {
+        alpha,
+        batch,
+        input_ch,
+        input_hw,
+        num_classes,
+        layers,
+        input,
+        golden,
+        hlo_path,
+        tile_hlo_path,
+    })
+}
+
+/// Default artifacts directory (repo-root/artifacts), overridable via
+/// the `DBPIM_ARTIFACTS` environment variable.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("DBPIM_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // CARGO_MANIFEST_DIR is the repo root (Cargo.toml lives there).
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{csd, fta};
+
+    fn artifacts() -> Option<MiniNet> {
+        let dir = default_artifacts_dir();
+        load_mininet(&dir).ok()
+    }
+
+    #[test]
+    fn loads_manifest_and_shapes_line_up() {
+        let Some(net) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(net.alpha, 8);
+        assert_eq!(net.layers.len(), 4);
+        assert_eq!(net.golden.len(), net.batch * net.num_classes);
+        for l in &net.layers {
+            assert_eq!(l.weights.len(), l.k * l.n);
+            assert_eq!(l.thresholds.len(), l.n);
+            assert_eq!(l.mask.k, l.k);
+            assert_eq!(l.mask.groups * l.mask.alpha, l.n);
+        }
+    }
+
+    #[test]
+    fn loaded_weights_are_fta_compliant() {
+        let Some(net) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for l in &net.layers {
+            let expand = l.mask.expand();
+            for col in 0..l.n {
+                let th = l.thresholds[col];
+                for row in 0..l.k {
+                    let w = l.weights[row * l.n + col];
+                    if !expand[row * l.n + col] {
+                        assert_eq!(w, 0, "{}: pruned weight nonzero", l.name);
+                    } else if th > 0 {
+                        assert_eq!(csd::phi(w), th, "{}: phi mismatch at ({row},{col})", l.name);
+                    } else {
+                        assert_eq!(w, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loaded_weights_match_rust_fta_projection() {
+        // FTA is idempotent, so re-projecting loaded weights must be a
+        // no-op — this pins the python and rust implementations together.
+        let Some(net) = artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        for l in &net.layers {
+            let mask = l.mask.expand();
+            let (reproj, ths) = fta::fta_layer(&l.weights, l.k, l.n, Some(&mask));
+            assert_eq!(reproj, l.weights, "{} not FTA-stable", l.name);
+            // thresholds match wherever the filter is non-empty
+            for (col, (&a, &b)) in ths.iter().zip(&l.thresholds).enumerate() {
+                assert_eq!(a, b, "{} threshold mismatch at filter {col}", l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! Network descriptors: the five evaluation CNNs of the paper
+//! (CIFAR-100 geometry) plus the MiniNet e2e-verification model loaded
+//! from the python-exported artifact manifest.
+//!
+//! A [`Network`] is a flat list of [`Layer`]s. Conv/pointwise/FC layers
+//! run on the PIM array; depthwise conv, pooling, ReLU, residual adds
+//! and element-wise multiplies run on the SIMD core (exactly the split
+//! the paper uses — Fig. 13's execution-time breakdown falls out of
+//! this partition).
+
+pub mod mininet;
+mod zoo;
+
+pub use mininet::{default_artifacts_dir, load_mininet, MiniNet, MiniNetLayer};
+pub use zoo::{alexnet, by_name, efficientnet_b0, mobilenet_v2, resnet18, vgg19, zoo};
+
+use crate::util::Rng;
+
+/// One network layer (geometry only; weights are synthesized or loaded
+/// separately).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+}
+
+/// Layer taxonomy. Spatial sizes are single-image (batch handled by M).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Standard or pointwise convolution (PIM). `in_hw` is the input
+    /// spatial size; pointwise ⇔ kernel == 1.
+    Conv { in_ch: usize, out_ch: usize, kernel: usize, stride: usize, pad: usize, in_hw: usize },
+    /// Depthwise convolution (SIMD core).
+    DwConv { ch: usize, kernel: usize, stride: usize, pad: usize, in_hw: usize },
+    /// Fully-connected layer (PIM).
+    Fc { in_features: usize, out_features: usize },
+    /// Max/avg pooling over `elems` input elements (SIMD core).
+    Pool { elems: usize },
+    /// ReLU / activation over `elems` elements (SIMD core).
+    Act { elems: usize },
+    /// Residual addition over `elems` elements (SIMD core).
+    ResAdd { elems: usize },
+    /// Element-wise multiply over `elems` elements (SIMD core; SE
+    /// blocks and the paper's "Mul" category in Fig. 13).
+    Mul { elems: usize },
+}
+
+impl LayerKind {
+    /// Is this layer mapped onto the PIM array (std/pw-conv + FC)?
+    pub fn is_pim(&self) -> bool {
+        matches!(self, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    /// im2col problem size (M, K, N) for PIM layers; None otherwise.
+    pub fn matmul_dims(&self) -> Option<(usize, usize, usize)> {
+        match *self {
+            LayerKind::Conv { in_ch, out_ch, kernel, stride, pad, in_hw } => {
+                let out_hw = (in_hw + 2 * pad - kernel) / stride + 1;
+                Some((out_hw * out_hw, in_ch * kernel * kernel, out_ch))
+            }
+            LayerKind::Fc { in_features, out_features } => Some((1, in_features, out_features)),
+            _ => None,
+        }
+    }
+
+    /// MAC count (for OPS accounting; 1 MAC = 2 OPs).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
+                let (m, k, n) = self.matmul_dims().unwrap();
+                (m * k * n) as u64
+            }
+            LayerKind::DwConv { ch, kernel, stride, pad, in_hw } => {
+                let out_hw = (in_hw + 2 * pad - kernel) / stride + 1;
+                (ch * out_hw * out_hw * kernel * kernel) as u64
+            }
+            LayerKind::Pool { elems }
+            | LayerKind::Act { elems }
+            | LayerKind::ResAdd { elems }
+            | LayerKind::Mul { elems } => elems as u64,
+        }
+    }
+}
+
+/// A whole network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_ch: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Total MACs over PIM layers (std/pw conv + FC).
+    pub fn pim_macs(&self) -> u64 {
+        self.layers.iter().filter(|l| l.kind.is_pim()).map(|l| l.kind.macs()).sum()
+    }
+
+    /// Total MACs/element-ops over SIMD layers.
+    pub fn simd_macs(&self) -> u64 {
+        self.layers.iter().filter(|l| !l.kind.is_pim()).map(|l| l.kind.macs()).sum()
+    }
+
+    pub fn pim_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind.is_pim())
+    }
+}
+
+/// Synthesized INT8 weights for one PIM layer, im2col layout [K, N]
+/// row-major, drawn from a clipped Gaussian (trained-CNN-like; the
+/// substitution for the paper's trained CIFAR-100 checkpoints — see
+/// DESIGN.md §3).
+pub fn synthesize_weights(layer_seed: u64, k: usize, n: usize) -> Vec<i8> {
+    let mut rng = Rng::new(layer_seed);
+    // Per-filter magnitude spread (log-normal): trained CNNs quantized
+    // per-layer have filters of widely varying norms, which is what
+    // makes FTA thresholds land on a mix of φ_th ∈ {1, 2} (the paper's
+    // "filter thresholds vary between 0 and 2" for redundant models).
+    let sigmas: Vec<f64> = (0..n)
+        .map(|_| (20.0 * (0.9 * rng.normal()).exp()).clamp(2.5, 60.0))
+        .collect();
+    let mut out = vec![0i8; k * n];
+    for row in 0..k {
+        for (col, &sigma) in sigmas.iter().enumerate() {
+            out[row * n + col] = rng.weight_int8(sigma);
+        }
+    }
+    out
+}
+
+/// Synthesized INT8 activations with ReLU-like statistics (~half zeros,
+/// small magnitudes) — used where real activations are not available.
+pub fn synthesize_activations(seed: u64, len: usize) -> Vec<i8> {
+    let mut rng = Rng::new(seed ^ 0xAC71_1A7E);
+    (0..len)
+        .map(|_| {
+            if rng.f64() < 0.5 {
+                0
+            } else {
+                // heavy-tailed small magnitudes: quantized post-ReLU
+                // activations concentrate near zero (bits 4–7 rarely
+                // set), which is what makes the IPU's group-wise
+                // zero-column skipping pay off (Fig. 3b).
+                (1.0 + rng.normal().abs() * 6.0).min(127.0) as i8
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_matmul_dims() {
+        let k = LayerKind::Conv { in_ch: 64, out_ch: 128, kernel: 3, stride: 1, pad: 1, in_hw: 16 };
+        assert_eq!(k.matmul_dims(), Some((256, 576, 128)));
+        assert!(k.is_pim());
+        assert_eq!(k.macs(), 256 * 576 * 128);
+    }
+
+    #[test]
+    fn fc_dims() {
+        let k = LayerKind::Fc { in_features: 512, out_features: 100 };
+        assert_eq!(k.matmul_dims(), Some((1, 512, 100)));
+    }
+
+    #[test]
+    fn dwconv_is_simd() {
+        let k = LayerKind::DwConv { ch: 32, kernel: 3, stride: 1, pad: 1, in_hw: 8 };
+        assert!(!k.is_pim());
+        assert_eq!(k.macs(), 32 * 64 * 9);
+    }
+
+    #[test]
+    fn synthesized_weights_distribution() {
+        let w = synthesize_weights(1, 128, 64);
+        assert_eq!(w.len(), 128 * 64);
+        let nonzero = w.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero > w.len() / 2, "too many zeros: {nonzero}");
+        assert!(w.iter().any(|&v| v.abs() > 60), "no tails");
+    }
+
+    #[test]
+    fn synthesized_activations_relu_like() {
+        let a = synthesize_activations(7, 4096);
+        assert!(a.iter().all(|&v| v >= 0));
+        let zeros = a.iter().filter(|&&v| v == 0).count();
+        assert!((0.4..0.6).contains(&(zeros as f64 / a.len() as f64)));
+    }
+
+    #[test]
+    fn weights_deterministic_per_seed() {
+        assert_eq!(synthesize_weights(5, 16, 16), synthesize_weights(5, 16, 16));
+        assert_ne!(synthesize_weights(5, 16, 16), synthesize_weights(6, 16, 16));
+    }
+}

@@ -1,0 +1,341 @@
+//! The five evaluation networks of the paper, in their common CIFAR-100
+//! adaptations (32×32×3 inputs, 100 classes). Geometry — not trained
+//! weights — is what the hardware experiments need; weights are
+//! synthesized per layer with trained-like statistics (DESIGN.md §3).
+
+use super::{Layer, LayerKind, Network};
+
+fn conv(name: &str, in_ch: usize, out_ch: usize, k: usize, s: usize, p: usize, hw: usize) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Conv { in_ch, out_ch, kernel: k, stride: s, pad: p, in_hw: hw },
+    }
+}
+
+fn dwconv(name: &str, ch: usize, k: usize, s: usize, p: usize, hw: usize) -> Layer {
+    Layer { name: name.to_string(), kind: LayerKind::DwConv { ch, kernel: k, stride: s, pad: p, in_hw: hw } }
+}
+
+fn fc(name: &str, i: usize, o: usize) -> Layer {
+    Layer { name: name.to_string(), kind: LayerKind::Fc { in_features: i, out_features: o } }
+}
+
+fn act(name: &str, elems: usize) -> Layer {
+    Layer { name: name.to_string(), kind: LayerKind::Act { elems } }
+}
+
+fn pool(name: &str, elems: usize) -> Layer {
+    Layer { name: name.to_string(), kind: LayerKind::Pool { elems } }
+}
+
+fn resadd(name: &str, elems: usize) -> Layer {
+    Layer { name: name.to_string(), kind: LayerKind::ResAdd { elems } }
+}
+
+fn mul(name: &str, elems: usize) -> Layer {
+    Layer { name: name.to_string(), kind: LayerKind::Mul { elems } }
+}
+
+fn out_hw(hw: usize, k: usize, s: usize, p: usize) -> usize {
+    (hw + 2 * p - k) / s + 1
+}
+
+/// AlexNet (CIFAR variant: 5 convs + 3 FCs, pools after 1/2/5).
+pub fn alexnet() -> Network {
+    let mut l = Vec::new();
+    l.push(conv("conv1", 3, 64, 3, 1, 1, 32));
+    l.push(act("relu1", 64 * 32 * 32));
+    l.push(pool("pool1", 64 * 32 * 32)); // -> 16
+    l.push(conv("conv2", 64, 192, 3, 1, 1, 16));
+    l.push(act("relu2", 192 * 16 * 16));
+    l.push(pool("pool2", 192 * 16 * 16)); // -> 8
+    l.push(conv("conv3", 192, 384, 3, 1, 1, 8));
+    l.push(act("relu3", 384 * 8 * 8));
+    l.push(conv("conv4", 384, 256, 3, 1, 1, 8));
+    l.push(act("relu4", 256 * 8 * 8));
+    l.push(conv("conv5", 256, 256, 3, 1, 1, 8));
+    l.push(act("relu5", 256 * 8 * 8));
+    l.push(pool("pool5", 256 * 8 * 8)); // -> 4
+    l.push(fc("fc6", 256 * 4 * 4, 4096));
+    l.push(act("relu6", 4096));
+    l.push(fc("fc7", 4096, 4096));
+    l.push(act("relu7", 4096));
+    l.push(fc("fc8", 4096, 100));
+    Network { name: "alexnet".into(), input_hw: 32, input_ch: 3, layers: l }
+}
+
+/// VGG19 (CIFAR variant: 16 convs, pool after each block, one FC).
+pub fn vgg19() -> Network {
+    let cfg: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256, 256], &[512, 512, 512, 512], &[512, 512, 512, 512]];
+    let mut l = Vec::new();
+    let mut hw = 32;
+    let mut in_ch = 3;
+    let mut idx = 0;
+    for (b, block) in cfg.iter().enumerate() {
+        for &out_ch in *block {
+            idx += 1;
+            l.push(conv(&format!("conv{}_{idx}", b + 1), in_ch, out_ch, 3, 1, 1, hw));
+            l.push(act(&format!("relu{idx}"), out_ch * hw * hw));
+            in_ch = out_ch;
+        }
+        l.push(pool(&format!("pool{}", b + 1), in_ch * hw * hw));
+        hw /= 2;
+    }
+    // hw == 1 after five pools
+    l.push(fc("fc", 512, 100));
+    Network { name: "vgg19".into(), input_hw: 32, input_ch: 3, layers: l }
+}
+
+/// ResNet18 (CIFAR variant: 3×3 stem, 4 stages of 2 basic blocks).
+pub fn resnet18() -> Network {
+    let mut l = Vec::new();
+    l.push(conv("conv1", 3, 64, 3, 1, 1, 32));
+    l.push(act("relu1", 64 * 32 * 32));
+    let stages: &[(usize, usize)] = &[(64, 1), (128, 2), (256, 2), (512, 2)];
+    let mut in_ch = 64;
+    let mut hw = 32;
+    for (s, &(ch, first_stride)) in stages.iter().enumerate() {
+        for b in 0..2 {
+            let stride = if b == 0 { first_stride } else { 1 };
+            let name = |p: &str| format!("layer{}_{b}_{p}", s + 1);
+            let hw_out = out_hw(hw, 3, stride, 1);
+            l.push(conv(&name("conv1"), in_ch, ch, 3, stride, 1, hw));
+            l.push(act(&name("relu1"), ch * hw_out * hw_out));
+            l.push(conv(&name("conv2"), ch, ch, 3, 1, 1, hw_out));
+            if stride != 1 || in_ch != ch {
+                l.push(conv(&name("down"), in_ch, ch, 1, stride, 0, hw));
+            }
+            l.push(resadd(&name("add"), ch * hw_out * hw_out));
+            l.push(act(&name("relu2"), ch * hw_out * hw_out));
+            in_ch = ch;
+            hw = hw_out;
+        }
+    }
+    l.push(pool("avgpool", 512 * hw * hw)); // hw == 4
+    l.push(fc("fc", 512, 100));
+    Network { name: "resnet18".into(), input_hw: 32, input_ch: 3, layers: l }
+}
+
+/// One MobileNetV2 inverted-residual block. Returns (layers, out_hw).
+fn inverted_residual(
+    name: &str,
+    in_ch: usize,
+    out_ch: usize,
+    hw: usize,
+    stride: usize,
+    expand: usize,
+) -> (Vec<Layer>, usize) {
+    let mut l = Vec::new();
+    let mid = in_ch * expand;
+    let hw_out = out_hw(hw, 3, stride, 1);
+    if expand != 1 {
+        l.push(conv(&format!("{name}_pw1"), in_ch, mid, 1, 1, 0, hw));
+        l.push(act(&format!("{name}_relu1"), mid * hw * hw));
+    }
+    l.push(dwconv(&format!("{name}_dw"), mid, 3, stride, 1, hw));
+    l.push(act(&format!("{name}_relu2"), mid * hw_out * hw_out));
+    l.push(conv(&format!("{name}_pw2"), mid, out_ch, 1, 1, 0, hw_out));
+    if stride == 1 && in_ch == out_ch {
+        l.push(resadd(&format!("{name}_add"), out_ch * hw_out * hw_out));
+    }
+    (l, hw_out)
+}
+
+/// MobileNetV2 (CIFAR variant: stride-1 stem, first downsamples moved).
+pub fn mobilenet_v2() -> Network {
+    // (expand t, out channels c, repeats n, first stride s)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 1),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut l = Vec::new();
+    l.push(conv("stem", 3, 32, 3, 1, 1, 32));
+    l.push(act("stem_relu", 32 * 32 * 32));
+    let mut in_ch = 32;
+    let mut hw = 32;
+    for (bi, &(t, c, n, s)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let (layers, hw_out) =
+                inverted_residual(&format!("b{bi}_{r}"), in_ch, c, hw, stride, t);
+            l.extend(layers);
+            in_ch = c;
+            hw = hw_out;
+        }
+    }
+    l.push(conv("head", 320, 1280, 1, 1, 0, hw));
+    l.push(act("head_relu", 1280 * hw * hw));
+    l.push(pool("avgpool", 1280 * hw * hw));
+    l.push(fc("fc", 1280, 100));
+    Network { name: "mobilenet_v2".into(), input_hw: 32, input_ch: 3, layers: l }
+}
+
+/// One EfficientNet MBConv block with squeeze-and-excitation.
+fn mbconv(
+    name: &str,
+    in_ch: usize,
+    out_ch: usize,
+    hw: usize,
+    stride: usize,
+    expand: usize,
+    kernel: usize,
+) -> (Vec<Layer>, usize) {
+    let mut l = Vec::new();
+    let mid = in_ch * expand;
+    let pad = kernel / 2;
+    let hw_out = out_hw(hw, kernel, stride, pad);
+    if expand != 1 {
+        l.push(conv(&format!("{name}_pw1"), in_ch, mid, 1, 1, 0, hw));
+        l.push(act(&format!("{name}_swish1"), mid * hw * hw));
+    }
+    l.push(dwconv(&format!("{name}_dw"), mid, kernel, stride, pad, hw));
+    l.push(act(&format!("{name}_swish2"), mid * hw_out * hw_out));
+    // Squeeze-and-excitation: global pool + 2 tiny FCs + channel mul.
+    let se = (in_ch / 4).max(8);
+    l.push(pool(&format!("{name}_se_pool"), mid * hw_out * hw_out));
+    l.push(fc(&format!("{name}_se_fc1"), mid, se));
+    l.push(fc(&format!("{name}_se_fc2"), se, mid));
+    l.push(mul(&format!("{name}_se_mul"), mid * hw_out * hw_out));
+    l.push(conv(&format!("{name}_pw2"), mid, out_ch, 1, 1, 0, hw_out));
+    if stride == 1 && in_ch == out_ch {
+        l.push(resadd(&format!("{name}_add"), out_ch * hw_out * hw_out));
+    }
+    (l, hw_out)
+}
+
+/// EfficientNet-B0 (CIFAR variant: reduced downsampling).
+pub fn efficientnet_b0() -> Network {
+    // (expand, out_ch, repeats, first stride, kernel)
+    let cfg: &[(usize, usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 1, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    let mut l = Vec::new();
+    l.push(conv("stem", 3, 32, 3, 1, 1, 32));
+    l.push(act("stem_swish", 32 * 32 * 32));
+    let mut in_ch = 32;
+    let mut hw = 32;
+    for (bi, &(t, c, n, s, k)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s } else { 1 };
+            let (layers, hw_out) = mbconv(&format!("mb{bi}_{r}"), in_ch, c, hw, stride, t, k);
+            l.extend(layers);
+            in_ch = c;
+            hw = hw_out;
+        }
+    }
+    l.push(conv("head", 320, 1280, 1, 1, 0, hw));
+    l.push(act("head_swish", 1280 * hw * hw));
+    l.push(pool("avgpool", 1280 * hw * hw));
+    l.push(fc("fc", 1280, 100));
+    Network { name: "efficientnet_b0".into(), input_hw: 32, input_ch: 3, layers: l }
+}
+
+/// All five paper networks.
+pub fn zoo() -> Vec<Network> {
+    vec![alexnet(), vgg19(), resnet18(), mobilenet_v2(), efficientnet_b0()]
+}
+
+/// Lookup by name (CLI entry point).
+pub fn by_name(name: &str) -> Option<Network> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "vgg19" => Some(vgg19()),
+        "resnet18" => Some(resnet18()),
+        "mobilenet_v2" | "mobilenetv2" => Some(mobilenet_v2()),
+        "efficientnet_b0" | "efficientnetb0" => Some(efficientnet_b0()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_five_networks() {
+        let z = zoo();
+        assert_eq!(z.len(), 5);
+        for n in &z {
+            assert!(!n.layers.is_empty());
+            assert!(n.pim_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn vgg19_has_16_convs_and_1_fc() {
+        let n = vgg19();
+        let convs = n.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv { .. })).count();
+        let fcs = n.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count();
+        assert_eq!(convs, 16);
+        assert_eq!(fcs, 1);
+    }
+
+    #[test]
+    fn resnet18_shapes_consistent() {
+        let n = resnet18();
+        // final FC must be 512 -> 100
+        let fc = n.layers.iter().rev().find(|l| matches!(l.kind, LayerKind::Fc { .. })).unwrap();
+        assert_eq!(fc.kind.matmul_dims(), Some((1, 512, 100)));
+        // 20 convs total (16 block + stem + 3 downsamples)
+        let convs = n.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv { .. })).count();
+        assert_eq!(convs, 20);
+    }
+
+    #[test]
+    fn compact_models_have_dwconv_and_mul() {
+        let m = mobilenet_v2();
+        assert!(m.layers.iter().any(|l| matches!(l.kind, LayerKind::DwConv { .. })));
+        let e = efficientnet_b0();
+        assert!(e.layers.iter().any(|l| matches!(l.kind, LayerKind::Mul { .. })));
+        // dw-conv MACs are a visible fraction of compact models (Fig. 13)
+        assert!(m.simd_macs() > 0);
+    }
+
+    #[test]
+    fn vgg_dominates_mac_count() {
+        // VGG19 ~ 400M MACs at CIFAR scale; MobileNetV2 much smaller.
+        let v = vgg19().pim_macs();
+        let m = mobilenet_v2().pim_macs();
+        assert!(v > 300_000_000, "vgg19 {v}");
+        assert!(m < v / 3, "mobilenet {m} vs vgg {v}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in zoo() {
+            assert_eq!(by_name(&n.name).unwrap().name, n.name);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn mobilenet_spatial_chain_valid() {
+        // all conv in_hw values must be consistent: recompute by walking
+        let n = mobilenet_v2();
+        let mut hw = 32usize;
+        for l in &n.layers {
+            match l.kind {
+                LayerKind::Conv { in_hw, kernel, stride, pad, .. } => {
+                    assert_eq!(in_hw, hw, "layer {} expected hw {hw}", l.name);
+                    hw = (hw + 2 * pad - kernel) / stride + 1;
+                }
+                LayerKind::DwConv { in_hw, kernel, stride, pad, .. } => {
+                    assert_eq!(in_hw, hw, "layer {} expected hw {hw}", l.name);
+                    hw = (hw + 2 * pad - kernel) / stride + 1;
+                }
+                _ => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! Coarse-grained block-wise pruning (value-level sparsity) — mirror of
+//! `python/compile/pruning.py`.
+//!
+//! A layer's [K, N] im2col weight matrix is partitioned into 1×α blocks
+//! along the filter axis (α = 8, the macro column / FTA budget); blocks
+//! are ranked by L2 norm and the lowest `sparsity` fraction is pruned.
+//! A pruned block zeroes input position k for a whole α-filter group, so
+//! the sparse allocation network can skip that input feature entirely.
+
+/// DB-PIM pruning granularity.
+pub const ALPHA: usize = 8;
+
+/// Block keep-mask for a [K, N] layer: `mask[k * groups + g]` is true
+/// when block (k, g) survives; `groups = N / α`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockMask {
+    pub k: usize,
+    pub groups: usize,
+    pub alpha: usize,
+    pub keep: Vec<bool>,
+}
+
+impl BlockMask {
+    pub fn all_kept(k: usize, n: usize, alpha: usize) -> Self {
+        assert_eq!(n % alpha, 0, "N={n} not divisible by alpha={alpha}");
+        Self { k, groups: n / alpha, alpha, keep: vec![true; k * n / alpha] }
+    }
+
+    #[inline]
+    pub fn kept(&self, k: usize, group: usize) -> bool {
+        self.keep[k * self.groups + group]
+    }
+
+    /// Per-weight keep mask of shape [K, N] (row-major).
+    pub fn expand(&self) -> Vec<bool> {
+        let n = self.groups * self.alpha;
+        let mut out = vec![false; self.k * n];
+        for k in 0..self.k {
+            for g in 0..self.groups {
+                if self.kept(k, g) {
+                    for a in 0..self.alpha {
+                        out[k * n + g * self.alpha + a] = true;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of pruned blocks.
+    pub fn sparsity(&self) -> f64 {
+        let pruned = self.keep.iter().filter(|&&m| !m).count();
+        pruned as f64 / self.keep.len() as f64
+    }
+
+    /// Number of kept rows (k positions) for one filter group — the
+    /// effective K the allocation network streams to that group.
+    pub fn kept_rows(&self, group: usize) -> usize {
+        (0..self.k).filter(|&k| self.kept(k, group)).count()
+    }
+
+    /// Raw u8 encoding (1 = keep), matching the python export layout.
+    pub fn from_bytes(k: usize, groups: usize, alpha: usize, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len(), k * groups);
+        Self { k, groups, alpha, keep: bytes.iter().map(|&b| b != 0).collect() }
+    }
+}
+
+/// L2 norm of each 1×α block of a [K, N] matrix (row-major i8 weights).
+pub fn block_l2(weights: &[i8], k: usize, n: usize, alpha: usize) -> Vec<f64> {
+    assert_eq!(weights.len(), k * n);
+    assert_eq!(n % alpha, 0, "N={n} not divisible by alpha={alpha}");
+    let groups = n / alpha;
+    let mut norms = vec![0f64; k * groups];
+    for row in 0..k {
+        for g in 0..groups {
+            let mut acc = 0f64;
+            for a in 0..alpha {
+                let w = weights[row * n + g * alpha + a] as f64;
+                acc += w * w;
+            }
+            norms[row * groups + g] = acc.sqrt();
+        }
+    }
+    norms
+}
+
+/// Prune the lowest-L2 `sparsity` fraction of blocks in place.
+/// Ties break by block order (stable sort), matching numpy's stable
+/// argsort in the python mirror.
+pub fn prune_blocks(
+    weights: &mut [i8],
+    k: usize,
+    n: usize,
+    sparsity: f64,
+    alpha: usize,
+) -> BlockMask {
+    assert!((0.0..1.0).contains(&sparsity), "sparsity {sparsity}");
+    let norms = block_l2(weights, k, n, alpha);
+    let groups = n / alpha;
+    let mut mask = BlockMask::all_kept(k, n, alpha);
+    let n_prune = (sparsity * (k * groups) as f64).round() as usize;
+    if n_prune > 0 {
+        // Selection instead of a full sort (perf §Perf): we only need
+        // the n_prune smallest blocks; (norm, index) ordering matches
+        // numpy's stable argsort tie-break in the python mirror.
+        let mut order: Vec<usize> = (0..norms.len()).collect();
+        let cmp = |&a: &usize, &b: &usize| {
+            norms[a].partial_cmp(&norms[b]).unwrap().then(a.cmp(&b))
+        };
+        if n_prune < order.len() {
+            order.select_nth_unstable_by(n_prune, cmp);
+        }
+        for &idx in order.iter().take(n_prune) {
+            mask.keep[idx] = false;
+            let (row, g) = (idx / groups, idx % groups);
+            for a in 0..alpha {
+                weights[row * n + g * alpha + a] = 0;
+            }
+        }
+    }
+    mask
+}
+
+/// Fraction of exactly-zero weights.
+pub fn value_sparsity(weights: &[i8]) -> f64 {
+    if weights.is_empty() {
+        return 0.0;
+    }
+    let zeros = weights.iter().filter(|&&w| w == 0).count();
+    zeros as f64 / weights.len() as f64
+}
+
+/// Fig. 3(b): fraction of all-zero bit columns across groups of `group`
+/// consecutive activations (the IPU's skippable columns).
+pub fn group_zero_column_fraction(acts: &[i8], group: usize) -> f64 {
+    if acts.is_empty() || acts.len() < group {
+        return 0.0;
+    }
+    let usable = (acts.len() / group) * group;
+    let mut zero_cols = 0usize;
+    let mut total_cols = 0usize;
+    for chunk in acts[..usable].chunks_exact(group) {
+        let or: u8 = chunk.iter().fold(0u8, |acc, &v| acc | (v.unsigned_abs()));
+        zero_cols += or.count_zeros() as usize;
+        total_cols += 8;
+    }
+    zero_cols as f64 / total_cols as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check_cases;
+
+    #[test]
+    fn block_l2_values() {
+        // one row: [3;8] then [4;8]
+        let mut w = vec![3i8; 8];
+        w.extend(vec![4i8; 8]);
+        let norms = block_l2(&w, 1, 16, 8);
+        assert!((norms[0] - (9.0f64 * 8.0).sqrt()).abs() < 1e-12);
+        assert!((norms[1] - (16.0f64 * 8.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prunes_exact_fraction_and_lowest_norm() {
+        let mut w = vec![0i8; 2 * 16];
+        for a in 0..8 {
+            w[a] = 10; // row0 g0: strong
+            w[8 + a] = 1; // row0 g1: weak
+            w[16 + a] = 5; // row1 g0
+            w[24 + a] = 2; // row1 g1
+        }
+        let mask = prune_blocks(&mut w, 2, 16, 0.5, 8);
+        assert!(mask.kept(0, 0) && mask.kept(1, 0));
+        assert!(!mask.kept(0, 1) && !mask.kept(1, 1));
+        assert!((mask.sparsity() - 0.5).abs() < 1e-12);
+        assert!(w[8..16].iter().all(|&v| v == 0));
+        assert!(w[24..32].iter().all(|&v| v == 0));
+        assert!(w[..8].iter().all(|&v| v == 10));
+    }
+
+    #[test]
+    fn zero_sparsity_keeps_everything() {
+        let mut w = vec![1i8; 32];
+        let mask = prune_blocks(&mut w, 2, 16, 0.0, 8);
+        assert!(mask.keep.iter().all(|&m| m));
+        assert!(w.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn expand_mask_layout() {
+        let mut mask = BlockMask::all_kept(2, 8, 4);
+        mask.keep = vec![true, false, false, true];
+        let e = mask.expand();
+        assert_eq!(e[..8], [true, true, true, true, false, false, false, false]);
+        assert_eq!(e[8..], [false, false, false, false, true, true, true, true]);
+    }
+
+    #[test]
+    fn kept_rows_counts() {
+        let mut mask = BlockMask::all_kept(3, 8, 8);
+        mask.keep = vec![true, false, true];
+        assert_eq!(mask.kept_rows(0), 2);
+    }
+
+    #[test]
+    fn group_zero_columns_extremes() {
+        assert_eq!(group_zero_column_fraction(&vec![0i8; 64], 8), 1.0);
+        // 127 = 0111_1111: only bit 7 is a zero column
+        let f = group_zero_column_fraction(&vec![127i8; 64], 8);
+        assert!((f - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_zero_columns_monotone_in_group_size() {
+        let mut rng = crate::util::Rng::new(1);
+        let acts: Vec<i8> = (0..4096)
+            .map(|_| if rng.f64() < 0.5 { 0 } else { rng.range_i64(0, 31) as i8 })
+            .collect();
+        let f1 = group_zero_column_fraction(&acts, 1);
+        let f8 = group_zero_column_fraction(&acts, 8);
+        let f16 = group_zero_column_fraction(&acts, 16);
+        assert!(f1 >= f8 && f8 >= f16, "{f1} {f8} {f16}");
+        assert!(f8 > 0.2);
+    }
+
+    #[test]
+    fn prune_fraction_property() {
+        check_cases(24, |rng| {
+            let k = 4 + rng.below(12) as usize;
+            let groups = 1 + rng.below(6) as usize;
+            let n = groups * ALPHA;
+            let sparsity = rng.f64() * 0.9;
+            let mut w: Vec<i8> = (0..k * n).map(|_| rng.int8()).collect();
+            let mask = prune_blocks(&mut w, k, n, sparsity, ALPHA);
+            let expect = (sparsity * (k * groups) as f64).round() as usize;
+            let pruned = mask.keep.iter().filter(|&&m| !m).count();
+            if pruned != expect {
+                return Err(format!("pruned {pruned} != {expect}"));
+            }
+            // pruned blocks are fully zero
+            for kk in 0..k {
+                for g in 0..groups {
+                    if !mask.kept(kk, g) {
+                        for a in 0..ALPHA {
+                            if w[kk * n + g * ALPHA + a] != 0 {
+                                return Err("pruned block not zeroed".into());
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

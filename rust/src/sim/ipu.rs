@@ -1,0 +1,83 @@
+//! Input pre-processing unit (IPU): block-wise zero bit-column
+//! detection and skipping (Fig. 8 ①).
+//!
+//! The macro receives 16 input features per row-step (one per
+//! compartment) and processes them bit-serially. The IPU ORs the 16
+//! values; any bit position where the OR is zero is an all-zero column
+//! whose bit-cycle can be skipped (the input-selection MUXes compact
+//! the non-zero columns). With skipping disabled every row-step costs
+//! the full `input_bits` cycles.
+
+/// OR-reduce a group of INT8 inputs to its column-occupancy byte.
+#[inline]
+pub fn column_occupancy(inputs: &[i8]) -> u8 {
+    inputs.iter().fold(0u8, |acc, &v| acc | (v as u8))
+}
+
+/// Number of bit-serial cycles needed for one 16-input row-step.
+#[inline]
+pub fn effective_bit_cycles(inputs: &[i8], input_bits: usize, skipping: bool) -> u32 {
+    if skipping {
+        u32::from(column_occupancy(inputs).count_ones())
+    } else {
+        input_bits as u32
+    }
+}
+
+/// Fraction of skippable (all-zero) columns over a stream of groups —
+/// the Fig. 3(b) statistic as measured by the IPU itself.
+pub fn skippable_fraction(acts: &[i8], group: usize, input_bits: usize) -> f64 {
+    if acts.len() < group || group == 0 {
+        return 0.0;
+    }
+    let mut zero = 0u64;
+    let mut total = 0u64;
+    for chunk in acts.chunks(group) {
+        let occ = column_occupancy(chunk);
+        zero += u64::from(occ.count_zeros()) - (8 - input_bits as u64);
+        total += input_bits as u64;
+    }
+    zero as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_or_semantics() {
+        assert_eq!(column_occupancy(&[0, 0, 0]), 0);
+        assert_eq!(column_occupancy(&[1, 2, 4]), 7);
+        assert_eq!(column_occupancy(&[0x7F]), 0x7F);
+        // negative values contribute their two's-complement bits
+        assert_eq!(column_occupancy(&[-128]), 0x80);
+    }
+
+    #[test]
+    fn effective_cycles_skipping() {
+        assert_eq!(effective_bit_cycles(&[0; 16], 8, true), 0);
+        assert_eq!(effective_bit_cycles(&[0; 16], 8, false), 8);
+        assert_eq!(effective_bit_cycles(&[1, 2], 8, true), 2);
+        assert_eq!(effective_bit_cycles(&[127; 16], 8, true), 7);
+        assert_eq!(effective_bit_cycles(&[-1], 8, true), 8);
+    }
+
+    #[test]
+    fn skipping_never_exceeds_full_cost() {
+        let mut rng = crate::util::Rng::new(2);
+        for _ in 0..100 {
+            let group: Vec<i8> = (0..16).map(|_| rng.int8()).collect();
+            assert!(effective_bit_cycles(&group, 8, true) <= 8);
+        }
+    }
+
+    #[test]
+    fn skippable_fraction_matches_pruning_mirror() {
+        // must agree with pruning::group_zero_column_fraction on
+        // non-negative activations (the mirror uses unsigned_abs).
+        let acts = crate::models::synthesize_activations(11, 2048);
+        let a = skippable_fraction(&acts, 16, 8);
+        let b = crate::pruning::group_zero_column_fraction(&acts, 16);
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Functional end-to-end MiniNet execution on the simulated machine.
+//!
+//! Runs the python-exported model layer by layer through the compiler +
+//! cycle-accurate machine with `functional = true`, applying the exact
+//! integer post-ops (requant → ReLU → pool) of the golden graph. The
+//! resulting logits must equal `mininet_golden.bin` bit-for-bit — and,
+//! through the PJRT runtime, the output of executing the golden HLO.
+
+use anyhow::Context;
+
+use crate::arch::ArchConfig;
+use crate::compiler::{self, SparsityConfig};
+use crate::energy::EventCounts;
+use crate::isa::SimdOp;
+use crate::models::MiniNet;
+use crate::sim::machine::{LayerStats, Machine};
+use crate::sim::simd;
+use crate::tensor::{self, TensorI8};
+
+/// Result of a functional MiniNet run.
+#[derive(Debug, Clone)]
+pub struct MiniNetRun {
+    /// Raw INT32 logits, [batch, num_classes] row-major.
+    pub logits: Vec<i32>,
+    pub layers: Vec<LayerStats>,
+    pub totals: EventCounts,
+    pub arch: ArchConfig,
+}
+
+impl MiniNetRun {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.elapsed).sum()
+    }
+
+    pub fn time_us(&self) -> f64 {
+        self.total_cycles() as f64 * self.arch.clock_ns() / 1e3
+    }
+
+    pub fn energy_uj(&self) -> f64 {
+        self.totals.energy_pj(&crate::energy::EnergyTable::default28nm()) / 1e6
+    }
+
+    /// Bit-exact comparison against the loaded golden logits.
+    pub fn matches_golden(&self, net: &MiniNet) -> bool {
+        self.logits == net.golden
+    }
+}
+
+/// Execute MiniNet functionally on `arch`.
+pub fn run_mininet(net: &MiniNet, arch: &ArchConfig) -> crate::Result<MiniNetRun> {
+    let machine = Machine::new(arch.clone());
+    let mut layers = Vec::new();
+    let mut totals = EventCounts::default();
+    let mut x = TensorI8::from_vec(
+        net.batch,
+        net.input_ch,
+        net.input_hw,
+        net.input_hw,
+        net.input.clone(),
+    );
+    let mut logits: Option<Vec<i32>> = None;
+
+    for (li, l) in net.layers.iter().enumerate() {
+        let is_fc = l.conv.is_none();
+        let mut prep = compiler::prepare_from_mininet(l, net.batch, !is_fc);
+        if let Some(info) = &l.conv {
+            // conv: im2col the current activation
+            let (cols, oh, ow) = tensor::im2col(&x, info.geom);
+            prep.m = cols.rows;
+            let compiled = compiler::compile_layer(prep, arch);
+            let (stats, acc) = machine.run_pim_layer(&compiled, Some(&cols), true);
+            totals.add(&stats.events);
+            layers.push(stats);
+            let acc = acc.context("functional run returned no accumulators")?;
+            // SIMD: requant + ReLU
+            let out = simd::requant_relu(&acc, l.requant_mul, true);
+            let s = machine.run_simd_layer(
+                &format!("{}_requant", l.name),
+                SimdOp::Requant,
+                acc.data.len() as u64,
+            );
+            totals.add(&s.events);
+            layers.push(s);
+            let mut t = tensor::cols2im(&out, net.batch, oh, ow, info.out_ch);
+            if info.pool {
+                let s = machine.run_simd_layer(
+                    &format!("{}_pool", l.name),
+                    SimdOp::MaxPool,
+                    t.len() as u64,
+                );
+                totals.add(&s.events);
+                layers.push(s);
+                t = simd::maxpool(&t);
+            }
+            x = t;
+        } else {
+            // FC: HWC flatten, raw INT32 logits (no requant — matches
+            // the golden graph)
+            let flat = x.flatten_hwc();
+            assert_eq!(flat.cols, l.k, "fc features mismatch at layer {li}");
+            prep.m = flat.rows;
+            let compiled = compiler::compile_layer(prep, arch);
+            let (stats, acc) = machine.run_pim_layer(&compiled, Some(&flat), true);
+            totals.add(&stats.events);
+            layers.push(stats);
+            let acc = acc.context("functional run returned no accumulators")?;
+            let mut out = Vec::with_capacity(net.batch * net.num_classes);
+            for b in 0..net.batch {
+                for c in 0..net.num_classes {
+                    out.push(acc.get(b, c));
+                }
+            }
+            logits = Some(out);
+        }
+    }
+
+    Ok(MiniNetRun {
+        logits: logits.context("manifest has no FC layer")?,
+        layers,
+        totals,
+        arch: arch.clone(),
+    })
+}
+
+/// Dense-baseline sparsity config used when re-sparsifying is needed
+/// (MiniNet weights are already sparsified; this is for documentation
+/// symmetry with `simulate_network`).
+pub fn mininet_sparsity() -> SparsityConfig {
+    SparsityConfig::hybrid(0.6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{load_mininet, mininet::default_artifacts_dir};
+
+    fn net() -> Option<MiniNet> {
+        load_mininet(&default_artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn dbpim_run_matches_golden_bit_exact() {
+        let Some(net) = net() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let run = run_mininet(&net, &ArchConfig::db_pim()).unwrap();
+        assert_eq!(run.logits, net.golden, "DB-PIM logits diverge from golden HLO");
+    }
+
+    #[test]
+    fn baseline_run_matches_golden_bit_exact() {
+        let Some(net) = net() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let run = run_mininet(&net, &ArchConfig::dense_baseline()).unwrap();
+        assert_eq!(run.logits, net.golden, "baseline logits diverge from golden HLO");
+    }
+
+    #[test]
+    fn all_ablation_archs_agree_functionally() {
+        let Some(net) = net() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let archs = [
+            ArchConfig::db_pim(),
+            ArchConfig::bit_only(),
+            ArchConfig::value_only(),
+            ArchConfig::weights_only(),
+        ];
+        let golden = &net.golden;
+        for arch in archs {
+            let run = run_mininet(&net, &arch).unwrap();
+            assert_eq!(&run.logits, golden, "{} functional divergence", run.arch.name);
+        }
+    }
+
+    #[test]
+    fn dbpim_faster_and_cheaper_than_baseline_e2e() {
+        let Some(net) = net() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let d = run_mininet(&net, &ArchConfig::db_pim()).unwrap();
+        let b = run_mininet(&net, &ArchConfig::dense_baseline()).unwrap();
+        let speedup = b.total_cycles() as f64 / d.total_cycles() as f64;
+        assert!(speedup > 2.0, "e2e speedup {speedup}");
+        assert!(d.energy_uj() < b.energy_uj());
+    }
+}

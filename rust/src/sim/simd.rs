@@ -1,0 +1,80 @@
+//! SIMD-core cost model + functional post-ops.
+//!
+//! The SIMD core (Sec. V-A / VII) executes everything the PIM array
+//! does not: depthwise conv, pooling, ReLU, requantization, residual
+//! adds, element-wise multiplies. It is identical in every
+//! configuration, so compact models' dw-conv/elementwise time is an
+//! Amdahl floor on end-to-end speedup — the Fig. 13 effect.
+
+use crate::arch::ArchConfig;
+use crate::isa::SimdOp;
+use crate::quant;
+use crate::tensor::{self, MatI32, TensorI8};
+
+/// Lane-ops performed for `elems` elements of the given op.
+pub fn lane_ops(op: SimdOp, elems: u64) -> u64 {
+    match op {
+        // 2×2 max pool: 3 compares per output = 3/4 per input element
+        SimdOp::MaxPool => elems * 3 / 4,
+        // requant: multiply + shift + clamp ≈ 2 lane-ops
+        SimdOp::Requant => elems * 2,
+        // one lane-op per element (dw-conv `elems` is its MAC count)
+        _ => elems,
+    }
+}
+
+/// Cycles to execute the op over `elems` elements.
+pub fn simd_cycles(op: SimdOp, elems: u64, arch: &ArchConfig) -> u64 {
+    crate::util::ceil_div(lane_ops(op, elems) as usize, arch.simd_lanes) as u64
+}
+
+/// Functional: requantize + optional ReLU an accumulator matrix into i8.
+pub fn requant_relu(acc: &MatI32, mul: i32, relu: bool) -> Vec<i8> {
+    acc.data
+        .iter()
+        .map(|&a| {
+            let q = quant::requantize(a, mul);
+            if relu && q < 0 {
+                0
+            } else {
+                q
+            }
+        })
+        .collect()
+}
+
+/// Functional 2×2 max pool (thin wrapper for pipeline symmetry).
+pub fn maxpool(x: &TensorI8) -> TensorI8 {
+    tensor::maxpool2x2(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_divide_by_lanes() {
+        let arch = ArchConfig::db_pim();
+        assert_eq!(simd_cycles(SimdOp::Relu, 64, &arch), 1);
+        assert_eq!(simd_cycles(SimdOp::Relu, 65, &arch), 2);
+        assert_eq!(simd_cycles(SimdOp::Requant, 64, &arch), 2);
+    }
+
+    #[test]
+    fn requant_relu_clamps() {
+        let acc = MatI32 { rows: 1, cols: 4, data: vec![100_000, -100_000, 0, 6553] };
+        let mul = quant::requant_mul(0.01);
+        let out = requant_relu(&acc, mul, true);
+        assert_eq!(out[0], 127); // clamped high
+        assert_eq!(out[1], 0); // relu'd
+        assert_eq!(out[2], 0);
+        assert!(out[3] > 0);
+        let out_norelu = requant_relu(&acc, mul, false);
+        assert_eq!(out_norelu[1], -128);
+    }
+
+    #[test]
+    fn dwconv_lane_ops_equal_macs() {
+        assert_eq!(lane_ops(SimdOp::DwConv, 12345), 12345);
+    }
+}

@@ -1,0 +1,129 @@
+//! Execution trace export — Chrome/Perfetto `trace_event` JSON so a
+//! simulated run's per-layer timeline (per core, per category) can be
+//! inspected visually. One complete span per layer per busy core, plus
+//! a counter track for cumulative energy.
+
+use std::fmt::Write as _;
+
+use crate::sim::{LayerStats, OpCategory, SimReport};
+
+/// Render a Chrome-tracing JSON document for a simulation report.
+/// Timestamps are simulated nanoseconds (cycles × clock period).
+pub fn chrome_trace(report: &SimReport) -> String {
+    let ns_per_cycle = report.arch.clock_ns();
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut t_cursor = 0.0f64; // layer start (layers run back-to-back)
+    let mut energy_pj = 0.0f64;
+    let table = crate::energy::EnergyTable::default28nm();
+    for layer in &report.layers {
+        let dur = layer.elapsed as f64 * ns_per_cycle / 1e3; // µs
+        let ts = t_cursor;
+        emit_span(&mut out, &mut first, layer, ts, dur);
+        energy_pj += layer.events.energy_pj(&table);
+        emit_counter(&mut out, &mut first, ts + dur, energy_pj);
+        t_cursor += dur;
+    }
+    out.push_str("]}");
+    out
+}
+
+fn tid_for(cat: OpCategory) -> u32 {
+    match cat {
+        OpCategory::PimConvFc => 0,
+        OpCategory::DwConv => 1,
+        OpCategory::Mul => 2,
+        OpCategory::Etc => 3,
+    }
+}
+
+fn emit_span(out: &mut String, first: &mut bool, layer: &LayerStats, ts: f64, dur: f64) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    let cat = match layer.category {
+        OpCategory::PimConvFc => "pim",
+        OpCategory::DwConv => "dwconv",
+        OpCategory::Mul => "mul",
+        OpCategory::Etc => "etc",
+    };
+    let _ = write!(
+        out,
+        "{{\"name\":{name:?},\"cat\":\"{cat}\",\"ph\":\"X\",\"ts\":{ts:.3},\"dur\":{dur:.3},\"pid\":1,\"tid\":{tid},\"args\":{{\"cycles\":{cycles},\"macs\":{macs}}}}}",
+        name = layer.name,
+        tid = tid_for(layer.category),
+        cycles = layer.elapsed,
+        macs = layer.events.macs,
+    );
+}
+
+fn emit_counter(out: &mut String, first: &mut bool, ts: f64, energy_pj: f64) {
+    if !*first {
+        out.push(',');
+    }
+    *first = false;
+    let _ = write!(
+        out,
+        "{{\"name\":\"energy_uj\",\"ph\":\"C\",\"ts\":{ts:.3},\"pid\":1,\"args\":{{\"uJ\":{:.4}}}}}",
+        energy_pj / 1e6
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::compiler::SparsityConfig;
+    use crate::models;
+
+    fn tiny_report() -> SimReport {
+        let net = models::Network {
+            name: "t".into(),
+            input_hw: 8,
+            input_ch: 8,
+            layers: vec![
+                models::Layer {
+                    name: "c".into(),
+                    kind: models::LayerKind::Conv {
+                        in_ch: 8,
+                        out_ch: 16,
+                        kernel: 3,
+                        stride: 1,
+                        pad: 1,
+                        in_hw: 8,
+                    },
+                },
+                models::Layer { name: "relu".into(), kind: models::LayerKind::Act { elems: 1024 } },
+            ],
+        };
+        crate::sim::simulate_network(&net, SparsityConfig::hybrid(0.5), &ArchConfig::db_pim(), 1)
+    }
+
+    #[test]
+    fn trace_is_valid_json_with_all_layers() {
+        let r = tiny_report();
+        let text = chrome_trace(&r);
+        let v = crate::json::parse(&text).expect("trace must parse as JSON");
+        let events = v.req("traceEvents").as_arr().unwrap();
+        // one span + one counter per layer
+        assert_eq!(events.len(), 2 * r.layers.len());
+        let span = &events[0];
+        assert_eq!(span.req("ph").as_str(), Some("X"));
+        assert!(span.req("dur").as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn spans_are_contiguous() {
+        let r = tiny_report();
+        let v = crate::json::parse(&chrome_trace(&r)).unwrap();
+        let events = v.req("traceEvents").as_arr().unwrap();
+        let spans: Vec<_> = events.iter().filter(|e| e.req("ph").as_str() == Some("X")).collect();
+        let mut expect_ts = 0.0;
+        for s in spans {
+            let ts = s.req("ts").as_f64().unwrap();
+            assert!((ts - expect_ts).abs() < 1e-6, "gap at {ts}");
+            expect_ts = ts + s.req("dur").as_f64().unwrap();
+        }
+    }
+}

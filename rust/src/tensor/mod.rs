@@ -1,0 +1,431 @@
+//! Minimal integer tensor types + im2col + exact conv references.
+//!
+//! Layouts match `python/compile/kernels/ref.py` exactly: activations
+//! are NCHW, im2col rows are ordered (n, oh, ow) with columns ordered
+//! (c, kh, kw) row-major, and the flatten before an FC layer is HWC —
+//! so every integer the simulator produces can be compared bit-for-bit
+//! with the golden jnp graphs.
+
+/// A dense NCHW INT8 activation tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorI8 {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Self { n, c, h, w, data: vec![0; n * c * h * w] }
+    }
+
+    pub fn from_vec(n: usize, c: usize, h: usize, w: usize, data: Vec<i8>) -> Self {
+        assert_eq!(data.len(), n * c * h * w, "shape/data mismatch");
+        Self { n, c, h, w, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, c: usize, y: usize, x: usize) -> usize {
+        ((n * self.c + c) * self.h + y) * self.w + x
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, c: usize, y: usize, x: usize) -> i8 {
+        self.data[self.idx(n, c, y, x)]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// HWC flatten per batch element (matches the jnp golden graph's
+    /// `transpose(0,2,3,1).reshape(n, -1)` before the FC layer).
+    pub fn flatten_hwc(&self) -> MatI8 {
+        let cols = self.c * self.h * self.w;
+        let mut out = vec![0i8; self.n * cols];
+        for n in 0..self.n {
+            let mut j = 0;
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    for c in 0..self.c {
+                        out[n * cols + j] = self.get(n, c, y, x);
+                        j += 1;
+                    }
+                }
+            }
+        }
+        MatI8 { rows: self.n, cols, data: out }
+    }
+}
+
+/// Row-major INT8 matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i8>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i8) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Row-major INT32 matrix (accumulators).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn add(&mut self, r: usize, c: usize, v: i32) {
+        self.data[r * self.cols + c] += v;
+    }
+}
+
+/// Geometry of one conv (im2col) problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+}
+
+/// im2col: NCHW -> [N*OH*OW, C*KH*KW], column order (c, kh, kw).
+pub fn im2col(x: &TensorI8, g: ConvGeom) -> (MatI8, usize, usize) {
+    let (oh, ow) = g.out_hw(x.h, x.w);
+    let cols = x.c * g.kh * g.kw;
+    let mut out = vec![0i8; x.n * oh * ow * cols];
+    let mut row = 0;
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = row * cols;
+                let mut j = 0;
+                for c in 0..x.c {
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            let iy = oy * g.stride + ky;
+                            let ix = ox * g.stride + kx;
+                            let v = if iy < g.pad
+                                || ix < g.pad
+                                || iy - g.pad >= x.h
+                                || ix - g.pad >= x.w
+                            {
+                                0
+                            } else {
+                                x.get(n, c, iy - g.pad, ix - g.pad)
+                            };
+                            out[base + j] = v;
+                            j += 1;
+                        }
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    (MatI8 { rows: x.n * oh * ow, cols, data: out }, oh, ow)
+}
+
+/// Exact INT8 matmul reference: [M, K] x [K, N] -> [M, N] i32.
+pub fn matmul_i8(x: &MatI8, w: &MatI8) -> MatI32 {
+    assert_eq!(x.cols, w.rows, "K mismatch");
+    let mut out = MatI32::zeros(x.rows, w.cols);
+    for m in 0..x.rows {
+        let xrow = x.row(m);
+        let orow = &mut out.data[m * w.cols..(m + 1) * w.cols];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i32;
+            let wrow = w.row(k);
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Reshape a matmul output [N*OH*OW, O] back to NCHW.
+pub fn cols2im(out: &[i8], n: usize, oh: usize, ow: usize, o: usize) -> TensorI8 {
+    assert_eq!(out.len(), n * oh * ow * o);
+    let mut t = TensorI8::zeros(n, o, oh, ow);
+    for nn in 0..n {
+        for y in 0..oh {
+            for x in 0..ow {
+                let row = (nn * oh + y) * ow + x;
+                for c in 0..o {
+                    let idx = t.idx(nn, c, y, x);
+                    t.data[idx] = out[row * o + c];
+                }
+            }
+        }
+    }
+    t
+}
+
+/// 2x2/2 max pool.
+pub fn maxpool2x2(x: &TensorI8) -> TensorI8 {
+    let mut out = TensorI8::zeros(x.n, x.c, x.h / 2, x.w / 2);
+    for n in 0..x.n {
+        for c in 0..x.c {
+            for y in 0..x.h / 2 {
+                for xx in 0..x.w / 2 {
+                    let m = x
+                        .get(n, c, 2 * y, 2 * xx)
+                        .max(x.get(n, c, 2 * y, 2 * xx + 1))
+                        .max(x.get(n, c, 2 * y + 1, 2 * xx))
+                        .max(x.get(n, c, 2 * y + 1, 2 * xx + 1));
+                    let idx = out.idx(n, c, y, xx);
+                    out.data[idx] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// ReLU in place.
+pub fn relu_i8(xs: &mut [i8]) {
+    for v in xs {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// Exact depthwise conv (runs on the SIMD core, not the PIM array).
+/// x: [N, C, H, W], w: per-channel [C, KH*KW] i8 -> i32 accumulators.
+pub fn dwconv_i8(x: &TensorI8, w: &MatI8, g: ConvGeom) -> Vec<i32> {
+    assert_eq!(w.rows, x.c);
+    assert_eq!(w.cols, g.kh * g.kw);
+    let (oh, ow) = g.out_hw(x.h, x.w);
+    let mut out = vec![0i32; x.n * x.c * oh * ow];
+    let mut i = 0;
+    for n in 0..x.n {
+        for c in 0..x.c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0i32;
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            let iy = oy * g.stride + ky;
+                            let ix = ox * g.stride + kx;
+                            if iy >= g.pad && ix >= g.pad && iy - g.pad < x.h && ix - g.pad < x.w {
+                                acc += x.get(n, c, iy - g.pad, ix - g.pad) as i32
+                                    * w.get(c, ky * g.kw + kx) as i32;
+                            }
+                        }
+                    }
+                    out[i] = acc;
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{check_cases, Rng};
+
+    fn rand_tensor(rng: &mut Rng, n: usize, c: usize, h: usize, w: usize) -> TensorI8 {
+        let data = (0..n * c * h * w).map(|_| rng.int8()).collect();
+        TensorI8::from_vec(n, c, h, w, data)
+    }
+
+    #[test]
+    fn im2col_identity_1x1() {
+        let mut rng = Rng::new(1);
+        let x = rand_tensor(&mut rng, 1, 3, 4, 4);
+        let (cols, oh, ow) = im2col(&x, ConvGeom { kh: 1, kw: 1, stride: 1, pad: 0 });
+        assert_eq!((oh, ow), (4, 4));
+        assert_eq!(cols.rows, 16);
+        assert_eq!(cols.cols, 3);
+        // row (y, x) must equal the channel vector at that pixel
+        for y in 0..4 {
+            for x2 in 0..4 {
+                for c in 0..3 {
+                    assert_eq!(cols.get(y * 4 + x2, c), x.get(0, c, y, x2));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        let mut rng = Rng::new(2);
+        let x = rand_tensor(&mut rng, 2, 4, 6, 6);
+        let g = ConvGeom { kh: 3, kw: 3, stride: 1, pad: 1 };
+        let o = 5;
+        let wdata: Vec<i8> = (0..4 * 9 * o).map(|_| rng.int8()).collect();
+        // weight as [K=36, N=o], column n = filter n, rows ordered (c,kh,kw)
+        let wmat = MatI8::from_vec(36, o, {
+            let mut m = vec![0i8; 36 * o];
+            for n in 0..o {
+                for k in 0..36 {
+                    m[k * o + n] = wdata[n * 36 + k];
+                }
+            }
+            m
+        });
+        let (cols, oh, ow) = im2col(&x, g);
+        let got = matmul_i8(&cols, &wmat);
+        // direct conv
+        for n in 0..2 {
+            for f in 0..o {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0i32;
+                        for c in 0..4 {
+                            for ky in 0..3 {
+                                for kx in 0..3 {
+                                    let iy = oy as i32 + ky as i32 - 1;
+                                    let ix = ox as i32 + kx as i32 - 1;
+                                    if iy >= 0 && ix >= 0 && iy < 6 && ix < 6 {
+                                        acc += x.get(n, c, iy as usize, ix as usize) as i32
+                                            * wdata[f * 36 + (c * 3 + ky) * 3 + kx] as i32;
+                                    }
+                                }
+                            }
+                        }
+                        let row = (n * oh + oy) * ow + ox;
+                        assert_eq!(got.get(row, f), acc, "n{n} f{f} {oy},{ox}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_property_vs_naive() {
+        check_cases(16, |rng| {
+            let (m, k, n) = (
+                1 + rng.below(8) as usize,
+                1 + rng.below(16) as usize,
+                1 + rng.below(8) as usize,
+            );
+            let x = MatI8::from_vec(m, k, (0..m * k).map(|_| rng.int8()).collect());
+            let w = MatI8::from_vec(k, n, (0..k * n).map(|_| rng.int8()).collect());
+            let got = matmul_i8(&x, &w);
+            for mm in 0..m {
+                for nn in 0..n {
+                    let want: i32 =
+                        (0..k).map(|kk| x.get(mm, kk) as i32 * w.get(kk, nn) as i32).sum();
+                    if got.get(mm, nn) != want {
+                        return Err(format!("({mm},{nn}): {} != {want}", got.get(mm, nn)));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let x = TensorI8::from_vec(1, 1, 2, 2, vec![1, -5, 3, 2]);
+        let p = maxpool2x2(&x);
+        assert_eq!(p.data, vec![3]);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut xs = vec![-3i8, 0, 7];
+        relu_i8(&mut xs);
+        assert_eq!(xs, vec![0, 0, 7]);
+    }
+
+    #[test]
+    fn flatten_hwc_order() {
+        // c=2, h=1, w=2 -> order (y0x0c0, y0x0c1, y0x1c0, y0x1c1)
+        let x = TensorI8::from_vec(1, 2, 1, 2, vec![1, 2, 3, 4]); // c0: [1,2], c1: [3,4]
+        let f = x.flatten_hwc();
+        assert_eq!(f.data, vec![1, 3, 2, 4]);
+    }
+
+    #[test]
+    fn cols2im_roundtrip() {
+        let mut rng = Rng::new(4);
+        let x = rand_tensor(&mut rng, 2, 3, 4, 4);
+        // 1x1 conv with identity-ish weight (delta on channel) reconstructs
+        let (cols, oh, ow) = im2col(&x, ConvGeom { kh: 1, kw: 1, stride: 1, pad: 0 });
+        let flat: Vec<i8> = cols.data.clone();
+        let t = cols2im(&flat, 2, oh, ow, 3);
+        assert_eq!(t, x);
+    }
+
+    #[test]
+    fn dwconv_matches_naive_3x3() {
+        let mut rng = Rng::new(5);
+        let x = rand_tensor(&mut rng, 1, 2, 4, 4);
+        let w = MatI8::from_vec(2, 9, (0..18).map(|_| rng.int8()).collect());
+        let g = ConvGeom { kh: 3, kw: 3, stride: 1, pad: 1 };
+        let out = dwconv_i8(&x, &w, g);
+        // spot check center position channel 1
+        let (oy, ox, c) = (2usize, 1usize, 1usize);
+        let mut acc = 0i32;
+        for ky in 0..3 {
+            for kx in 0..3 {
+                let iy = oy + ky;
+                let ix = ox + kx;
+                if iy >= 1 && ix >= 1 && iy - 1 < 4 && ix - 1 < 4 {
+                    acc += x.get(0, c, iy - 1, ix - 1) as i32 * w.get(c, ky * 3 + kx) as i32;
+                }
+            }
+        }
+        assert_eq!(out[(c * 4 + oy) * 4 + ox], acc);
+    }
+}

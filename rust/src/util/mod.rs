@@ -1,0 +1,183 @@
+//! Small shared utilities: a deterministic PRNG (the vendored registry
+//! has no `rand`), float summaries, and a tiny property-testing helper
+//! used across the crate's unit tests (proptest is unavailable offline —
+//! `Cases` provides the same "many random cases + shrink-free minimal
+//! reporting" workflow).
+
+/// SplitMix64 PRNG — deterministic, fast, good enough for weight
+/// synthesis and randomized tests. Not cryptographic.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box–Muller output (perf: halves the cos/log cost
+    /// of `normal`, the weight-synthesis hot spot — EXPERIMENTS.md §Perf).
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15), spare_normal: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free (bias negligible for our n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Uniform float in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box–Muller (both outputs used).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (std::f64::consts::TAU * u2).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Random INT8 value.
+    #[inline]
+    pub fn int8(&mut self) -> i8 {
+        self.range_i64(-128, 127) as i8
+    }
+
+    /// Clipped-Gaussian INT8 weight (trained-CNN-like distribution).
+    pub fn weight_int8(&mut self, sigma: f64) -> i8 {
+        (self.normal() * sigma).round().clamp(-127.0, 127.0) as i8
+    }
+}
+
+/// Minimal randomized-property harness: run `n` seeded cases; on failure
+/// report the failing seed so the case is reproducible.
+pub fn check_cases(n: u64, mut prop: impl FnMut(&mut Rng) -> std::result::Result<(), String>) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0xD0E5_0000 ^ seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// ceil(a / b) for positive integers.
+#[inline]
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Round `x` up to a multiple of `m`.
+#[inline]
+pub const fn round_up(x: usize, m: usize) -> usize {
+    ceil_div(x, m) * m
+}
+
+/// Mean of an f64 slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Geometric mean (ignores non-positive entries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() { 0.0 } else { (logs.iter().sum::<f64>() / logs.len() as f64).exp() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(rng.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn range_i64_inclusive_covers_endpoints() {
+        let mut rng = Rng::new(3);
+        let (mut saw_lo, mut saw_hi) = (false, false);
+        for _ in 0..10_000 {
+            let v = rng.range_i64(-2, 2);
+            assert!((-2..=2).contains(&v));
+            saw_lo |= v == -2;
+            saw_hi |= v == 2;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.normal()).collect();
+        let m = mean(&xs);
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn weight_int8_clips() {
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            let w = rng.weight_int8(100.0);
+            assert!((-127..=127).contains(&(w as i32)));
+        }
+    }
+
+    #[test]
+    fn ceil_div_and_round_up() {
+        assert_eq!(ceil_div(7, 3), 3);
+        assert_eq!(ceil_div(6, 3), 2);
+        assert_eq!(round_up(5, 8), 8);
+        assert_eq!(round_up(16, 8), 16);
+    }
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn check_cases_runs_all() {
+        let mut count = 0;
+        check_cases(16, |_| { count += 1; Ok(()) });
+        assert_eq!(count, 16);
+    }
+}

@@ -1,0 +1,158 @@
+//! End-to-end integration: the exported MiniNet artifact through the
+//! full rust stack (load → compile → cycle-accurate functional sim) on
+//! every architecture, checked bit-for-bit against the exported golden
+//! logits, plus experiment-level shape checks on the zoo.
+//!
+//! Skips gracefully when `make artifacts` has not run.
+
+use dbpim::arch::ArchConfig;
+use dbpim::compiler::SparsityConfig;
+use dbpim::models::{self, MiniNet};
+use dbpim::sim::{self, pipeline::run_mininet};
+
+fn load() -> Option<MiniNet> {
+    models::load_mininet(&models::default_artifacts_dir()).ok()
+}
+
+#[test]
+fn mininet_all_archs_bit_exact() {
+    let Some(net) = load() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for arch in [
+        ArchConfig::db_pim(),
+        ArchConfig::dense_baseline(),
+        ArchConfig::bit_only(),
+        ArchConfig::value_only(),
+        ArchConfig::weights_only(),
+        ArchConfig::dac24(),
+    ] {
+        let run = run_mininet(&net, &arch).unwrap();
+        assert_eq!(run.logits, net.golden, "{} diverges from golden", arch.name);
+    }
+}
+
+#[test]
+fn mininet_speedup_and_energy_ordering() {
+    let Some(net) = load() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let d = run_mininet(&net, &ArchConfig::db_pim()).unwrap();
+    let bit = run_mininet(&net, &ArchConfig::bit_only()).unwrap();
+    let base = run_mininet(&net, &ArchConfig::dense_baseline()).unwrap();
+    // hybrid ≤ bit-only ≤ baseline in cycles (hybrid exploits strictly
+    // more sparsity than bit-only on this 60%-value-pruned model)
+    assert!(d.total_cycles() <= bit.total_cycles());
+    assert!(bit.total_cycles() < base.total_cycles());
+    assert!(d.energy_uj() < base.energy_uj());
+}
+
+#[test]
+fn mininet_utilization_beats_baseline() {
+    let Some(net) = load() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let arch = ArchConfig::db_pim();
+    let d = run_mininet(&net, &arch).unwrap();
+    let b = run_mininet(&net, &ArchConfig::dense_baseline()).unwrap();
+    let cells = arch.macro_columns * arch.compartments;
+    assert!(d.totals.u_act(cells) > 2.0 * b.totals.u_act(cells));
+}
+
+// ---------------------------------------------------------------------------
+// zoo-level experiment shape checks (the paper's qualitative claims)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig11_shape_vgg_beats_resnet_beats_mobilenet() {
+    let rows = dbpim::coordinator::experiments::fig11(7);
+    let speedup = |net: &str, total: f64| {
+        rows.iter()
+            .find(|r| r.network == net && (r.total_sparsity - total).abs() < 1e-9)
+            .map(|r| r.speedup)
+            .unwrap()
+    };
+    // at 90% compound sparsity: vgg > resnet > mobilenet (Fig. 11)
+    let v = speedup("vgg19", 0.90);
+    let r = speedup("resnet18", 0.90);
+    let m = speedup("mobilenet_v2", 0.90);
+    assert!(v > r && r > m, "ordering broke: vgg {v} resnet {r} mobilenet {m}");
+    // headline band: up to ~8x speedup at 90%
+    assert!(v > 6.0 && v < 14.0, "vgg 90% speedup {v} out of band");
+    // 75% point: roughly 4x or higher is NOT guaranteed for mobilenet,
+    // but vgg/resnet sit near 4x
+    assert!(speedup("vgg19", 0.75) > 3.0);
+    // energy savings in the paper's band (73–90%)
+    for row in &rows {
+        assert!(
+            row.energy_saving > 0.5 && row.energy_saving < 0.97,
+            "energy saving out of band: {row:?}"
+        );
+    }
+    // monotone in sparsity per network
+    for net in ["vgg19", "resnet18", "mobilenet_v2"] {
+        let mut pts: Vec<_> = rows.iter().filter(|r| r.network == net).collect();
+        pts.sort_by(|a, b| a.total_sparsity.partial_cmp(&b.total_sparsity).unwrap());
+        for w in pts.windows(2) {
+            assert!(w[1].speedup >= w[0].speedup * 0.98, "{net} not monotone");
+        }
+    }
+}
+
+#[test]
+fn fig12_hybrid_dominates_single_axis_approaches() {
+    let rows = dbpim::coordinator::experiments::fig12(7);
+    for net in ["alexnet", "vgg19", "resnet18", "mobilenet_v2", "efficientnet_b0"] {
+        let get = |ap: &str| rows.iter().find(|r| r.network == net && r.approach == ap).unwrap();
+        let hybrid = get("hybrid");
+        let bit = get("bit");
+        let value = get("value");
+        assert!(
+            hybrid.speedup >= bit.speedup && hybrid.speedup >= value.speedup,
+            "{net}: hybrid {} vs bit {} value {}",
+            hybrid.speedup,
+            bit.speedup,
+            value.speedup
+        );
+        assert!(hybrid.energy_norm <= bit.energy_norm * 1.02);
+        assert!(hybrid.energy_norm < 1.0 && hybrid.speedup > 1.0);
+    }
+    // compact models trail the big CNNs end-to-end (Fig. 12 discussion)
+    let hy = |net: &str| rows.iter().find(|r| r.network == net && r.approach == "hybrid").unwrap();
+    assert!(hy("mobilenet_v2").speedup < hy("vgg19").speedup);
+    assert!(hy("efficientnet_b0").speedup < hy("vgg19").speedup);
+}
+
+#[test]
+fn table3_hybrid_fastest_dac24_slowest() {
+    let rows = dbpim::coordinator::experiments::table3(7);
+    assert_eq!(rows.len(), 5);
+    for r in &rows {
+        assert!(
+            r.hybrid_ms < r.bit_level_ms && r.bit_level_ms < r.dac24_ms,
+            "{r:?}"
+        );
+        let total_speedup = r.dac24_ms / r.hybrid_ms;
+        assert!(total_speedup > 2.0 && total_speedup < 20.0, "{r:?}");
+    }
+}
+
+#[test]
+fn simd_bound_networks_keep_simd_time_constant_across_archs() {
+    // dw-conv time must be identical on DB-PIM and baseline — only PIM
+    // layers accelerate (this produces the Fig. 13 Amdahl floor).
+    let net = models::mobilenet_v2();
+    let a = sim::simulate_network(&net, SparsityConfig::hybrid(0.6), &ArchConfig::db_pim(), 3);
+    let b = sim::simulate_network(&net, SparsityConfig::dense(), &ArchConfig::dense_baseline(), 3);
+    let dw = |r: &sim::SimReport| {
+        r.layers
+            .iter()
+            .filter(|l| l.category == sim::OpCategory::DwConv)
+            .map(|l| l.elapsed)
+            .sum::<u64>()
+    };
+    assert_eq!(dw(&a), dw(&b), "dw-conv time should not depend on PIM config");
+}

@@ -1,0 +1,73 @@
+//! Integration: the PJRT runtime path. Loads the AOT HLO artifacts,
+//! executes them on the CPU PJRT client, and cross-checks against both
+//! the exported golden logits and the rust simulator.
+//!
+//! These tests exercise the xla crate and require the artifacts; they
+//! skip gracefully when `make artifacts` has not run.
+
+use dbpim::arch::ArchConfig;
+use dbpim::csd;
+use dbpim::models::{self, MiniNet};
+use dbpim::runtime;
+use dbpim::sim::pipeline::run_mininet;
+use dbpim::tensor::{matmul_i8, MatI8};
+use dbpim::util::Rng;
+
+fn load() -> Option<MiniNet> {
+    models::load_mininet(&models::default_artifacts_dir()).ok()
+}
+
+#[test]
+fn golden_hlo_executes_and_matches_export() {
+    let Some(net) = load() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let logits = runtime::run_golden_mininet(&net).expect("PJRT run failed");
+    assert_eq!(logits, net.golden, "PJRT output != exported golden logits");
+}
+
+#[test]
+fn simulator_matches_pjrt_bit_for_bit() {
+    let Some(net) = load() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let logits = runtime::run_golden_mininet(&net).expect("PJRT run failed");
+    let run = run_mininet(&net, &ArchConfig::db_pim()).unwrap();
+    assert_eq!(run.logits, logits, "three-layer stack round-trip broke");
+}
+
+#[test]
+fn tile_matmul_hlo_matches_rust_reference() {
+    // the Pallas dyadic-kernel tile graph vs the rust exact matmul, on
+    // random tiles of the exported geometry (64 x 128 x 64)
+    let Some(net) = load() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let (m, k, n) = (64, 128, 64);
+    let mut rng = Rng::new(99);
+    let x: Vec<i8> = (0..m * k).map(|_| rng.int8()).collect();
+    let w: Vec<i8> = (0..k * n).map(|_| rng.int8()).collect();
+    // dyadic digit planes [4, K, N] (same decomposition as python csd)
+    let mut planes = vec![0i8; 4 * k * n];
+    for r in 0..k {
+        for c in 0..n {
+            let blocks = csd::dyadic_blocks(w[r * n + c]);
+            for (d, &coef) in blocks.iter().enumerate() {
+                planes[(d * k + r) * n + c] = coef;
+            }
+        }
+    }
+    let got = runtime::run_golden_tile(&net, &x, m, k, &planes, n).expect("tile run failed");
+    let want = matmul_i8(&MatI8::from_vec(m, k, x), &MatI8::from_vec(k, n, w));
+    let want32: Vec<i32> = want.data;
+    assert_eq!(got, want32, "Pallas tile kernel != rust reference");
+}
+
+#[test]
+fn literal_shape_mismatch_is_rejected() {
+    let err = runtime::literal_i8(&[1, 2, 3], &[2, 2]);
+    assert!(err.is_err());
+}

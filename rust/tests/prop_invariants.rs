@@ -1,0 +1,225 @@
+//! Randomized property tests over coordinator/compiler/simulator
+//! invariants (proptest is not in the offline registry; the in-tree
+//! `util::check_cases` harness provides seeded-case reporting).
+//!
+//! Invariants covered:
+//! * routing: every kept filter reaches exactly one assignment; every
+//!   kept K row of a group is covered by exactly one tile
+//! * batching: Compute instructions partition [0, M) per tile
+//! * state: functional accumulators equal the exact matmul for random
+//!   shapes/sparsities/architectures
+//! * conservation: IPU can only reduce cycles; value pruning can only
+//!   reduce stored rows; energy is monotone in event counts
+
+use dbpim::arch::ArchConfig;
+use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
+use dbpim::isa::Instr;
+use dbpim::models::synthesize_weights;
+use dbpim::quant;
+use dbpim::sim::Machine;
+use dbpim::tensor::{matmul_i8, MatI8};
+use dbpim::util::{check_cases, Rng};
+
+fn random_arch(rng: &mut Rng) -> ArchConfig {
+    match rng.below(6) {
+        0 => ArchConfig::db_pim(),
+        1 => ArchConfig::dense_baseline(),
+        2 => ArchConfig::bit_only(),
+        3 => ArchConfig::value_only(),
+        4 => ArchConfig::weights_only(),
+        _ => ArchConfig::dac24(),
+    }
+}
+
+fn random_layer(
+    rng: &mut Rng,
+    arch: &ArchConfig,
+) -> (dbpim::compiler::CompiledLayer, MatI8) {
+    let m = 1 + rng.below(24) as usize;
+    let k = 1 + rng.below(512) as usize;
+    let n = 8 * (1 + rng.below(12) as usize);
+    let v = rng.f64() * 0.8;
+    let fta = rng.f64() < 0.7;
+    let w = synthesize_weights(rng.next_u64(), k, n);
+    let prep = prepare_layer(
+        "p",
+        m,
+        k,
+        n,
+        w,
+        SparsityConfig { value_sparsity: v, fta },
+        arch,
+        quant::requant_mul(0.01),
+        true,
+        None,
+    );
+    let layer = compile_layer(prep, arch);
+    let x = MatI8::from_vec(m, k, (0..m * k).map(|_| rng.int8()).collect());
+    (layer, x)
+}
+
+#[test]
+fn prop_functional_equals_reference() {
+    check_cases(40, |rng| {
+        let arch = random_arch(rng);
+        let (layer, x) = random_layer(rng, &arch);
+        let machine = Machine::new(arch.clone());
+        let (_, acc) = machine.run_pim_layer(&layer, Some(&x), true);
+        let want = matmul_i8(&x, &layer.prep.weights);
+        if acc.unwrap() != want {
+            return Err(format!(
+                "mismatch on {} m{} k{} n{}",
+                arch.name, layer.prep.m, layer.prep.k, layer.prep.n
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_tiles_partition_kept_rows() {
+    check_cases(60, |rng| {
+        let arch = random_arch(rng);
+        let (layer, _) = random_layer(rng, &arch);
+        for (ai, a) in layer.assignments.iter().enumerate() {
+            let mut covered = 0usize;
+            let mut last_end = 0usize;
+            for t in layer.tiles.iter().filter(|t| t.assignment == ai) {
+                if t.row_start != last_end {
+                    return Err(format!("tile gap at {}", t.row_start));
+                }
+                if t.rows() > arch.k_slots() {
+                    return Err("tile exceeds macro capacity".into());
+                }
+                covered += t.rows();
+                last_end = t.row_end;
+            }
+            if covered != a.kept_rows.len() {
+                return Err(format!("covered {covered} != kept {}", a.kept_rows.len()));
+            }
+            if a.active_cols() > arch.macro_columns {
+                return Err("column overflow".into());
+            }
+            // kept rows strictly ascending (gather order == row order)
+            if !a.kept_rows.windows(2).all(|w| w[0] < w[1]) {
+                return Err("kept rows not sorted".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batching_compute_instrs_partition_m() {
+    check_cases(40, |rng| {
+        let arch = random_arch(rng);
+        let (layer, _) = random_layer(rng, &arch);
+        let m_total = layer.prep.m.max(1) as u32;
+        for (ti, _) in layer.tiles.iter().enumerate() {
+            let mut next = 0u32;
+            for instr in &layer.instrs {
+                if let Instr::Compute { tile, m_base, m_count, .. } = *instr {
+                    if tile as usize == ti {
+                        if m_base != next {
+                            return Err(format!("m gap: {m_base} != {next}"));
+                        }
+                        if m_count as usize > arch.macros_per_core {
+                            return Err("chunk exceeds Tm".into());
+                        }
+                        next = m_base + m_count as u32;
+                    }
+                }
+            }
+            if next != m_total {
+                return Err(format!("tile {ti} covered {next} of {m_total} rows"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ipu_only_reduces_cycles() {
+    check_cases(25, |rng| {
+        // identical configs except for the IPU flag
+        let on = ArchConfig::bit_only();
+        let off = ArchConfig { input_skipping: false, ..ArchConfig::bit_only() };
+        let seed = rng.next_u64();
+        let mut r1 = Rng::new(seed);
+        let (l_on, x) = random_layer(&mut r1, &on);
+        let mut r2 = Rng::new(seed);
+        let (l_off, _) = random_layer(&mut r2, &off);
+        let (s_on, _) = Machine::new(on).run_pim_layer(&l_on, Some(&x), false);
+        let (s_off, _) = Machine::new(off).run_pim_layer(&l_off, Some(&x), false);
+        if s_on.elapsed > s_off.elapsed {
+            return Err(format!("IPU increased cycles: {} > {}", s_on.elapsed, s_off.elapsed));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_value_pruning_only_reduces_stored_rows() {
+    check_cases(30, |rng| {
+        let arch = ArchConfig::db_pim();
+        let k = 16 + rng.below(256) as usize;
+        let n = 16;
+        let w = synthesize_weights(rng.next_u64(), k, n);
+        let lo = prepare_layer("a", 2, k, n, w.clone(), SparsityConfig::hybrid(0.2), &arch,
+                               quant::requant_mul(0.01), true, None);
+        let hi = prepare_layer("b", 2, k, n, w, SparsityConfig::hybrid(0.8), &arch,
+                               quant::requant_mul(0.01), true, None);
+        let rows = |p: &dbpim::compiler::PreparedLayer| -> usize {
+            (0..p.mask.groups).map(|g| p.mask.kept_rows(g)).sum()
+        };
+        if rows(&hi) > rows(&lo) {
+            return Err("more pruning kept more rows".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_events() {
+    use dbpim::energy::{EnergyTable, EventCounts};
+    check_cases(50, |rng| {
+        let t = EnergyTable::default28nm();
+        let mut a = EventCounts::default();
+        a.macro_cycles = rng.below(1000);
+        a.macro_col_cycles = a.macro_cycles * 16;
+        a.input_buf_reads = rng.below(500);
+        a.simd_lane_ops = rng.below(500);
+        let mut b = a.clone();
+        b.macro_cycles += 1 + rng.below(100);
+        b.macro_col_cycles = b.macro_cycles * 16;
+        if b.energy_pj(&t) <= a.energy_pj(&t) {
+            return Err("energy not monotone".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_isa_roundtrip_random_streams() {
+    check_cases(50, |rng| {
+        let n = rng.below(64) as usize;
+        let instrs: Vec<Instr> = (0..n)
+            .map(|_| match rng.below(4) {
+                0 => Instr::LoadTile { core: rng.below(8) as u8, tile: rng.next_u64() as u32 },
+                1 => Instr::Compute {
+                    core: rng.below(8) as u8,
+                    tile: rng.next_u64() as u32,
+                    m_base: rng.next_u64() as u32,
+                    m_count: rng.next_u64() as u16,
+                },
+                2 => Instr::Sync,
+                _ => Instr::EndLayer,
+            })
+            .collect();
+        let bytes = dbpim::isa::encode_stream(&instrs);
+        if dbpim::isa::decode_stream(&bytes) != Some(instrs) {
+            return Err("stream roundtrip failed".into());
+        }
+        Ok(())
+    });
+}
