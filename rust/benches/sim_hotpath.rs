@@ -2,31 +2,40 @@
 //! §Perf): isolates the simulator inner loops so optimization deltas are
 //! measurable in isolation from experiment orchestration.
 //!
-//! * `row_loop` — the per-(m, tile) IPU gather + B_eff loop (dominant
-//!   cost with input skipping enabled)
+//! * `row_loop_ipu_on` — the per-(m, tile) occupancy + B_eff loop on the
+//!   parallel segmented engine (dominant cost with input skipping)
+//! * `row_loop_ipu_on_sequential` — same work on the sequential engine
+//! * `row_loop_ipu_on_legacy_interp` — same work on the legacy
+//!   flat-stream interpreter (the pre-refactor baseline)
 //! * `analytic` — the data-independent fast path
 //! * `functional` — accumulate path (MiniNet-style verification runs)
 //! * `compile`  — prune + FTA + pack + codegen for a VGG-sized layer
-//! * `e2e`      — one full ResNet18 perf simulation
+//! * `e2e`      — one full ResNet18 perf simulation (layer-parallel)
 //!
 //! ```bash
-//! cargo bench --bench sim_hotpath
+//! cargo bench --bench sim_hotpath            # full run
+//! DBPIM_BENCH_FAST=1 cargo bench --bench sim_hotpath   # CI smoke
+//! DBPIM_BENCH_JSON=. cargo bench --bench sim_hotpath   # + BENCH_sim_hotpath.json
 //! ```
 
 use dbpim::arch::ArchConfig;
-use dbpim::benchlib::bench;
+use dbpim::benchlib::{bench, fast_mode, write_bench_json, Sample};
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
 use dbpim::models::{synthesize_activations, synthesize_weights};
 use dbpim::quant;
-use dbpim::sim::Machine;
+use dbpim::sim::{Engine, Machine};
 use dbpim::tensor::MatI8;
 
 fn main() {
+    let fast = fast_mode();
+    let iters = |full: u32, quick: u32| if fast { quick } else { full };
+    let mut samples: Vec<Sample> = Vec::new();
+
     let (m, k, n) = (256, 1152, 128); // VGG-like conv layer
     let w = synthesize_weights(1, k, n);
     let x = MatI8::from_vec(m, k, synthesize_activations(2, m * k));
 
-    // --- row-loop path (IPU on) ---
+    // --- row-loop path (IPU on): parallel vs sequential vs legacy ---
     let arch = ArchConfig::db_pim();
     let prep = prepare_layer(
         "hot", m, k, n,
@@ -35,17 +44,32 @@ fn main() {
     );
     let layer = compile_layer(prep, &arch);
     let machine = Machine::new(arch.clone());
-    let s = bench("row_loop_ipu_on", 1, 10, || {
+    let machine_seq = Machine::with_engine(arch.clone(), Engine::Sequential);
+    let s_par = bench("row_loop_ipu_on", 1, iters(10, 3), || {
         machine.run_pim_layer(&layer, Some(&x), false)
     });
+    let s_seq = bench("row_loop_ipu_on_sequential", 1, iters(10, 3), || {
+        machine_seq.run_pim_layer(&layer, Some(&x), false)
+    });
+    let s_legacy = bench("row_loop_ipu_on_legacy_interp", 1, iters(10, 3), || {
+        machine.run_pim_layer_interp(&layer, Some(&x), false)
+    });
+    println!(
+        "  parallel speedup: {:.2}x vs sequential engine, {:.2}x vs legacy interp",
+        s_seq.median.as_secs_f64() / s_par.median.as_secs_f64().max(1e-12),
+        s_legacy.median.as_secs_f64() / s_par.median.as_secs_f64().max(1e-12),
+    );
     // report simulated-events-per-second for the perf log
     let (stats, _) = machine.run_pim_layer(&layer, Some(&x), false);
     let steps = stats.events.input_buf_reads; // one per row-step
     println!(
         "  row-steps {} -> {:.1} M row-steps/s",
         steps,
-        steps as f64 / s.median.as_secs_f64() / 1e6
+        steps as f64 / s_par.median.as_secs_f64() / 1e6
     );
+    samples.push(s_par);
+    samples.push(s_seq);
+    samples.push(s_legacy);
 
     // --- analytic path (IPU off) ---
     let arch2 = ArchConfig::weights_only();
@@ -56,25 +80,43 @@ fn main() {
     );
     let layer2 = compile_layer(prep2, &arch2);
     let machine2 = Machine::new(arch2);
-    bench("analytic_ipu_off", 1, 50, || machine2.run_pim_layer(&layer2, None, false));
+    samples.push(bench("analytic_ipu_off", 1, iters(50, 5), || {
+        machine2.run_pim_layer(&layer2, None, false)
+    }));
 
     // --- functional path ---
-    bench("functional_accumulate", 1, 5, || machine.run_pim_layer(&layer, Some(&x), true));
+    samples.push(bench("functional_accumulate", 1, iters(5, 2), || {
+        machine.run_pim_layer(&layer, Some(&x), true)
+    }));
 
     // --- compiler ---
     let arch3 = ArchConfig::db_pim();
-    bench("compile_layer_vgg_sized", 1, 10, || {
+    samples.push(bench("compile_layer_vgg_sized", 1, iters(10, 2), || {
         let prep = prepare_layer(
             "c", m, k, n,
             w.clone(), SparsityConfig::hybrid(0.6), &arch3,
             quant::requant_mul(0.01), true, None,
         );
         compile_layer(prep, &arch3)
-    });
+    }));
 
-    // --- end-to-end perf sim ---
-    bench("e2e_resnet18_hybrid", 0, 3, || {
+    // --- end-to-end perf sim (layer-parallel by default) ---
+    samples.push(bench("e2e_resnet18_hybrid", 0, iters(3, 1), || {
         let net = dbpim::models::resnet18();
         dbpim::sim::simulate_network(&net, SparsityConfig::hybrid(0.6), &ArchConfig::db_pim(), 42)
-    });
+    }));
+    if !fast {
+        samples.push(bench("e2e_resnet18_hybrid_sequential", 0, iters(3, 1), || {
+            let net = dbpim::models::resnet18();
+            dbpim::sim::simulate_network_with_engine(
+                &net,
+                SparsityConfig::hybrid(0.6),
+                &ArchConfig::db_pim(),
+                42,
+                Engine::Sequential,
+            )
+        }));
+    }
+
+    write_bench_json("sim_hotpath", &samples);
 }

@@ -67,6 +67,37 @@ pub fn fast_mode() -> bool {
     std::env::args().any(|a| a == "--fast") || std::env::var("DBPIM_BENCH_FAST").is_ok()
 }
 
+/// One sample as a JSON object (nanosecond timings).
+pub fn sample_json(s: &Sample) -> crate::json::Value {
+    crate::json::obj(vec![
+        ("name", crate::json::str_(&s.name)),
+        ("iters", crate::json::num(s.iters as f64)),
+        ("mean_ns", crate::json::num(s.mean.as_nanos() as f64)),
+        ("median_ns", crate::json::num(s.median.as_nanos() as f64)),
+        ("min_ns", crate::json::num(s.min.as_nanos() as f64)),
+    ])
+}
+
+/// Machine-readable bench output for the perf trajectory (EXPERIMENTS.md
+/// §Perf): when `DBPIM_BENCH_JSON` is set, write `BENCH_<bench>.json`
+/// into the directory it names ("" or "1" ⇒ current directory). CI
+/// uploads the file as the run's perf artifact.
+pub fn write_bench_json(bench: &str, samples: &[Sample]) {
+    let Ok(dir) = std::env::var("DBPIM_BENCH_JSON") else {
+        return;
+    };
+    let dir = if dir.is_empty() || dir == "1" { ".".to_string() } else { dir };
+    let doc = crate::json::obj(vec![
+        ("bench", crate::json::str_(bench)),
+        ("samples", crate::json::arr(samples.iter().map(sample_json).collect())),
+    ]);
+    let path = format!("{dir}/BENCH_{bench}.json");
+    match std::fs::write(&path, crate::json::to_string(&doc)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -15,9 +15,12 @@
 //! 4. **schedule** — balance assignments across the 8 cores (greedy
 //!    longest-first, equivalent in makespan to the paper's N-K-M loop
 //!    order for uniform groups).
-//! 5. **codegen** — emit LoadTile/Compute/Store/Sync instructions.
+//! 5. **codegen** — emit the segmented per-core [`Program`] (one
+//!    barrier-free `Segment` per core, closed by Sync/EndLayer); the
+//!    flat LoadTile/Compute/Store/Sync stream is its flattening.
 
 pub mod packing;
+pub mod program;
 
 use crate::arch::ArchConfig;
 use crate::fta;
@@ -29,6 +32,7 @@ use crate::tensor::{ConvGeom, MatI8};
 use crate::util::round_up;
 
 pub use packing::{Assignment, Tile};
+pub use program::{Barrier, Phase, Program};
 
 /// Execution attributes of a conv layer (geometry + fused post-ops).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -68,7 +72,11 @@ pub struct CompiledLayer {
     pub prep: PreparedLayer,
     pub assignments: Vec<Assignment>,
     pub tiles: Vec<Tile>,
+    /// Flat instruction stream (the segmented program's flattening;
+    /// kept for the instruction-buffer accounting and legacy interp).
     pub instrs: Vec<Instr>,
+    /// Segmented per-core program executed by the engines.
+    pub program: Program,
 }
 
 /// Sparsification settings for the offline pipeline.
@@ -183,39 +191,37 @@ pub fn prepare_from_mininet(l: &MiniNetLayer, batch: usize, relu: bool) -> Prepa
 /// Compile a prepared layer: pack, tile, schedule, codegen.
 pub fn compile_layer(prep: PreparedLayer, arch: &ArchConfig) -> CompiledLayer {
     let (assignments, tiles) = packing::pack_layer(&prep, arch);
-    let instrs = codegen(&prep, &assignments, &tiles, arch);
-    CompiledLayer { prep, assignments, tiles, instrs }
+    let program = program::codegen(&prep, &assignments, &tiles, arch);
+    let instrs = program.to_instrs();
+    CompiledLayer { prep, assignments, tiles, instrs, program }
 }
 
-/// Emit the per-layer instruction stream (N-K-M loop order, Fig. 9).
-fn codegen(
-    prep: &PreparedLayer,
-    assignments: &[Assignment],
-    tiles: &[Tile],
+/// Sparsify + compile the PIM layer at index `idx` of a zoo network
+/// (None for non-PIM layers). Deterministic per (seed, idx), so layer
+/// jobs can fan out across workers in any order.
+pub fn compile_network_layer(
+    net: &Network,
+    idx: usize,
+    sparsity: SparsityConfig,
     arch: &ArchConfig,
-) -> Vec<Instr> {
-    let mut instrs = Vec::new();
-    let m_total = prep.m.max(1);
-    let m_chunk = arch.macros_per_core as u32; // Tm rows in flight per core
-    for tile in tiles {
-        let a = &assignments[tile.assignment];
-        instrs.push(Instr::LoadTile { core: a.core as u8, tile: tile.id });
-        let mut m = 0u32;
-        while (m as usize) < m_total {
-            let count = (m_total as u32 - m).min(m_chunk) as u16;
-            instrs.push(Instr::Compute { core: a.core as u8, tile: tile.id, m_base: m, m_count: count });
-            m += count as u32;
-        }
-        instrs.push(Instr::Store {
-            core: a.core as u8,
-            tile: tile.id,
-            m_base: 0,
-            m_count: m_total.min(u16::MAX as usize) as u16,
-        });
-    }
-    instrs.push(Instr::Sync);
-    instrs.push(Instr::EndLayer);
-    instrs
+    seed: u64,
+) -> Option<CompiledLayer> {
+    let layer = &net.layers[idx];
+    let (m, k, n) = layer.kind.matmul_dims()?;
+    let raw = crate::models::synthesize_weights(seed ^ (idx as u64) << 8, k, n);
+    let conv = match layer.kind {
+        LayerKind::Conv { in_ch, out_ch, kernel, stride, pad, in_hw } => Some(ConvExec {
+            in_ch,
+            out_ch,
+            geom: ConvGeom { kh: kernel, kw: kernel, stride, pad },
+            in_hw,
+            pool: false,
+        }),
+        _ => None,
+    };
+    let mul = quant::requant_mul(1.0 / (k as f64).sqrt() / 6.0);
+    let prep = prepare_layer(&layer.name, m, k, n, raw, sparsity, arch, mul, true, conv);
+    Some(compile_layer(prep, arch))
 }
 
 /// Sparsify + compile every PIM layer of a zoo network (perf-mode
@@ -226,28 +232,9 @@ pub fn compile_network(
     arch: &ArchConfig,
     seed: u64,
 ) -> Vec<(usize, CompiledLayer)> {
-    let mut out = Vec::new();
-    for (idx, layer) in net.layers.iter().enumerate() {
-        if let Some((m, k, n)) = layer.kind.matmul_dims() {
-            let raw = crate::models::synthesize_weights(seed ^ (idx as u64) << 8, k, n);
-            let conv = match layer.kind {
-                LayerKind::Conv { in_ch, out_ch, kernel, stride, pad, in_hw } => Some(ConvExec {
-                    in_ch,
-                    out_ch,
-                    geom: ConvGeom { kh: kernel, kw: kernel, stride, pad },
-                    in_hw,
-                    pool: false,
-                }),
-                _ => None,
-            };
-            let mul = quant::requant_mul(1.0 / (k as f64).sqrt() / 6.0);
-            let prep = prepare_layer(
-                &layer.name, m, k, n, raw, sparsity, arch, mul, true, conv,
-            );
-            out.push((idx, compile_layer(prep, arch)));
-        }
-    }
-    out
+    (0..net.layers.len())
+        .filter_map(|idx| compile_network_layer(net, idx, sparsity, arch, seed).map(|c| (idx, c)))
+        .collect()
 }
 
 /// Effective K after value pruning, per α-group, averaged (diagnostics).

@@ -195,6 +195,23 @@ fn schedule(assignments: &mut [Assignment], n_cores: usize) {
     }
 }
 
+/// Tile indices grouped per core, preserving global tile order — the
+/// walk order of the segmented codegen when emitting per-core streams.
+/// Tiles of one assignment stay contiguous (they are generated that
+/// way), which lets the executor cache one occupancy table per
+/// assignment at a time.
+pub fn tiles_by_core(
+    assignments: &[Assignment],
+    tiles: &[Tile],
+    n_cores: usize,
+) -> Vec<Vec<usize>> {
+    let mut by_core: Vec<Vec<usize>> = vec![Vec::new(); n_cores];
+    for (ti, t) in tiles.iter().enumerate() {
+        by_core[assignments[t.assignment].core].push(ti);
+    }
+    by_core
+}
+
 /// U_act upper bound from the packing alone (column occupancy).
 pub fn packing_utilization(assignments: &[Assignment], arch: &ArchConfig) -> f64 {
     if assignments.is_empty() {
@@ -293,6 +310,25 @@ mod tests {
         let min = *loads.iter().min().unwrap() as f64;
         assert!(min > 0.0, "idle core with 16 groups");
         assert!(max / min.max(1.0) < 2.0, "imbalance {loads:?}");
+    }
+
+    #[test]
+    fn tiles_by_core_partitions_all_tiles_in_order() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(512, 64, SparsityConfig::hybrid(0.4), &arch);
+        let (asg, tiles) = pack_layer(&p, &arch);
+        let by_core = tiles_by_core(&asg, &tiles, arch.n_cores);
+        let mut seen = vec![false; tiles.len()];
+        for (core, tis) in by_core.iter().enumerate() {
+            // global tile order preserved within a core
+            assert!(tis.windows(2).all(|w| w[0] < w[1]));
+            for &ti in tis {
+                assert_eq!(asg[tiles[ti].assignment].core, core);
+                assert!(!seen[ti], "tile {ti} in two cores");
+                seen[ti] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "tile missing from partition");
     }
 
     #[test]

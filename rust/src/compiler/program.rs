@@ -1,0 +1,305 @@
+//! Segmented per-core programs.
+//!
+//! The flat per-layer instruction stream the original codegen emitted
+//! interleaves the 8 cores' work; the hardware, however, runs cores
+//! independently between barriers (machine.rs header, DESIGN.md §4).
+//! `Program` makes that structure explicit: a sequence of [`Phase`]s,
+//! each holding one barrier-free [`Segment`] per active core plus the
+//! barrier that closes the phase. The parallel engine (sim::engine)
+//! fans a phase's segments out over worker threads and applies the
+//! barrier once all of them have drained — bit-identical to walking the
+//! flat stream on one thread, because instructions of different cores
+//! never touch shared state between barriers.
+//!
+//! `Program::from_instrs` / `Program::to_instrs` convert between the
+//! two representations; `from_instrs(to_instrs(p)) == p` always holds
+//! (the flat order within a phase is normalized to ascending core id).
+
+use crate::arch::ArchConfig;
+use crate::isa::{Instr, Segment, SimdOp};
+
+use super::packing::{self, Assignment, Tile};
+use super::PreparedLayer;
+
+/// The synchronization event that closes a [`Phase`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Barrier {
+    /// All cores wait for the slowest (`Instr::Sync`).
+    Sync,
+    /// All cores wait, then the SIMD core runs `op` over `elems`
+    /// (`Instr::Simd`).
+    Simd { op: SimdOp, elems: u32 },
+    /// End of the layer's stream (`Instr::EndLayer`).
+    End,
+    /// No barrier instruction: the phase simply ends (trailing
+    /// instructions of a stream that is not barrier-terminated).
+    Open,
+}
+
+impl Barrier {
+    /// The instruction this barrier round-trips to (None for `Open`).
+    pub fn instr(self) -> Option<Instr> {
+        match self {
+            Barrier::Sync => Some(Instr::Sync),
+            Barrier::Simd { op, elems } => Some(Instr::Simd { op, elems }),
+            Barrier::End => Some(Instr::EndLayer),
+            Barrier::Open => None,
+        }
+    }
+}
+
+/// One barrier-delimited phase: per-core segments (ascending core id,
+/// idle cores omitted) plus the closing barrier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Phase {
+    pub segments: Vec<Segment>,
+    pub barrier: Barrier,
+}
+
+impl Phase {
+    /// Instructions in this phase, barrier included.
+    pub fn instr_count(&self) -> usize {
+        let body: usize = self.segments.iter().map(|s| s.instrs.len()).sum();
+        body + usize::from(self.barrier.instr().is_some())
+    }
+}
+
+/// A compiled layer's full segmented program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Program {
+    /// Core count the program was partitioned for.
+    pub n_cores: usize,
+    pub phases: Vec<Phase>,
+}
+
+impl Program {
+    /// Partition a flat instruction stream into per-core segments split
+    /// at `Sync`/`Simd`/`EndLayer` barriers.
+    ///
+    /// Panics if an instruction names a core `>= n_cores` (compiler
+    /// streams are constructed in-range; untrusted bytes go through
+    /// [`Program::decode`], which rejects them instead).
+    pub fn from_instrs(instrs: &[Instr], n_cores: usize) -> Program {
+        let mut phases = Vec::new();
+        let mut pending: Vec<Vec<Instr>> = vec![Vec::new(); n_cores];
+        for &instr in instrs {
+            match instr {
+                Instr::Sync => close_phase(&mut pending, Barrier::Sync, &mut phases),
+                Instr::EndLayer => close_phase(&mut pending, Barrier::End, &mut phases),
+                Instr::Simd { op, elems } => {
+                    close_phase(&mut pending, Barrier::Simd { op, elems }, &mut phases)
+                }
+                Instr::LoadTile { core, .. }
+                | Instr::Compute { core, .. }
+                | Instr::Store { core, .. } => pending[core as usize].push(instr),
+            }
+        }
+        if pending.iter().any(|v| !v.is_empty()) {
+            close_phase(&mut pending, Barrier::Open, &mut phases);
+        }
+        Program { n_cores, phases }
+    }
+
+    /// Flatten back to an instruction stream (segments in ascending
+    /// core order within each phase, then the barrier instruction).
+    pub fn to_instrs(&self) -> Vec<Instr> {
+        let mut out = Vec::with_capacity(self.instr_count());
+        for p in &self.phases {
+            for s in &p.segments {
+                out.extend_from_slice(&s.instrs);
+            }
+            if let Some(i) = p.barrier.instr() {
+                out.push(i);
+            }
+        }
+        out
+    }
+
+    /// Total instructions, barriers included.
+    pub fn instr_count(&self) -> usize {
+        self.phases.iter().map(Phase::instr_count).sum()
+    }
+
+    /// Encode to the instruction-buffer byte format (flat framing).
+    pub fn encode(&self) -> Vec<u8> {
+        crate::isa::encode_stream(&self.to_instrs())
+    }
+
+    /// Decode from the instruction-buffer byte format. Rejects streams
+    /// naming a core outside `0..n_cores` (corrupted/foreign buffers).
+    pub fn decode(bytes: &[u8], n_cores: usize) -> Option<Program> {
+        let instrs = crate::isa::decode_stream(bytes)?;
+        let in_range = instrs.iter().all(|i| match *i {
+            Instr::LoadTile { core, .. }
+            | Instr::Compute { core, .. }
+            | Instr::Store { core, .. } => (core as usize) < n_cores,
+            _ => true,
+        });
+        in_range.then(|| Program::from_instrs(&instrs, n_cores))
+    }
+}
+
+fn close_phase(pending: &mut [Vec<Instr>], barrier: Barrier, phases: &mut Vec<Phase>) {
+    let segments = pending
+        .iter_mut()
+        .enumerate()
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(core, v)| Segment { core: core as u8, instrs: std::mem::take(v) })
+        .collect();
+    phases.push(Phase { segments, barrier });
+}
+
+/// Emit the per-layer segmented program (N-K-M loop order per core,
+/// Fig. 9): every tile contributes LoadTile → Compute×chunks → Store to
+/// its core's segment; one Sync aligns the cores, then EndLayer.
+pub fn codegen(
+    prep: &PreparedLayer,
+    assignments: &[Assignment],
+    tiles: &[Tile],
+    arch: &ArchConfig,
+) -> Program {
+    let m_total = prep.m.max(1);
+    let m_chunk = arch.macros_per_core as u32; // Tm rows in flight per core
+    let mut per_core: Vec<Vec<Instr>> = vec![Vec::new(); arch.n_cores];
+    for (core, tile_ids) in packing::tiles_by_core(assignments, tiles, arch.n_cores)
+        .into_iter()
+        .enumerate()
+    {
+        let stream = &mut per_core[core];
+        for ti in tile_ids {
+            let tile = &tiles[ti];
+            stream.push(Instr::LoadTile { core: core as u8, tile: tile.id });
+            let mut m = 0u32;
+            while (m as usize) < m_total {
+                let count = (m_total as u32 - m).min(m_chunk) as u16;
+                stream.push(Instr::Compute {
+                    core: core as u8,
+                    tile: tile.id,
+                    m_base: m,
+                    m_count: count,
+                });
+                m += count as u32;
+            }
+            stream.push(Instr::Store {
+                core: core as u8,
+                tile: tile.id,
+                m_base: 0,
+                m_count: m_total.min(u16::MAX as usize) as u16,
+            });
+        }
+    }
+    let segments = per_core
+        .into_iter()
+        .enumerate()
+        .filter(|(_, v)| !v.is_empty())
+        .map(|(core, instrs)| Segment { core: core as u8, instrs })
+        .collect();
+    Program {
+        n_cores: arch.n_cores,
+        phases: vec![
+            Phase { segments, barrier: Barrier::Sync },
+            Phase { segments: Vec::new(), barrier: Barrier::End },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_layer, prepare_layer, SparsityConfig};
+    use crate::models::synthesize_weights;
+    use crate::quant;
+
+    fn compiled(sparsity: SparsityConfig, arch: &ArchConfig) -> crate::compiler::CompiledLayer {
+        let (m, k, n) = (12, 192, 32);
+        let w = synthesize_weights(9, k, n);
+        let prep =
+            prepare_layer("t", m, k, n, w, sparsity, arch, quant::requant_mul(0.01), true, None);
+        compile_layer(prep, arch)
+    }
+
+    #[test]
+    fn program_flat_roundtrip() {
+        let arch = ArchConfig::db_pim();
+        let c = compiled(SparsityConfig::hybrid(0.5), &arch);
+        let flat = c.program.to_instrs();
+        assert_eq!(flat, c.instrs, "CompiledLayer.instrs is the flattened program");
+        let back = Program::from_instrs(&flat, arch.n_cores);
+        assert_eq!(back, c.program);
+    }
+
+    #[test]
+    fn program_encode_decode_roundtrip() {
+        let arch = ArchConfig::db_pim();
+        let c = compiled(SparsityConfig::hybrid(0.6), &arch);
+        let bytes = c.program.encode();
+        assert_eq!(Program::decode(&bytes, arch.n_cores), Some(c.program.clone()));
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_core() {
+        let bytes = crate::isa::encode_stream(&[
+            Instr::LoadTile { core: 9, tile: 0 },
+            Instr::Sync,
+            Instr::EndLayer,
+        ]);
+        assert_eq!(Program::decode(&bytes, 8), None);
+        assert!(Program::decode(&bytes, 10).is_some());
+    }
+
+    #[test]
+    fn segments_are_per_core_and_barrier_free() {
+        let arch = ArchConfig::db_pim();
+        let c = compiled(SparsityConfig::hybrid(0.3), &arch);
+        for phase in &c.program.phases {
+            let mut last_core = None;
+            for seg in &phase.segments {
+                assert!(last_core < Some(seg.core), "segments not ascending by core");
+                last_core = Some(seg.core);
+                assert!(!seg.instrs.is_empty());
+                for i in &seg.instrs {
+                    let core = match *i {
+                        Instr::LoadTile { core, .. }
+                        | Instr::Compute { core, .. }
+                        | Instr::Store { core, .. } => core,
+                        _ => panic!("barrier inside segment: {i:?}"),
+                    };
+                    assert_eq!(core, seg.core, "instruction on foreign core");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codegen_ends_with_sync_then_end() {
+        let arch = ArchConfig::db_pim();
+        let c = compiled(SparsityConfig::dense(), &arch);
+        let n = c.program.phases.len();
+        assert_eq!(c.program.phases[n - 2].barrier, Barrier::Sync);
+        assert_eq!(c.program.phases[n - 1].barrier, Barrier::End);
+        assert!(c.program.phases[n - 1].segments.is_empty());
+    }
+
+    #[test]
+    fn open_barrier_preserves_trailing_instrs() {
+        let flat = vec![
+            Instr::LoadTile { core: 0, tile: 0 },
+            Instr::Sync,
+            Instr::LoadTile { core: 1, tile: 1 },
+        ];
+        let p = Program::from_instrs(&flat, 2);
+        assert_eq!(p.phases.len(), 2);
+        assert_eq!(p.phases[1].barrier, Barrier::Open);
+        assert_eq!(p.to_instrs(), flat);
+        assert_eq!(p.instr_count(), 3);
+    }
+
+    #[test]
+    fn instr_count_matches_flat_length() {
+        let arch = ArchConfig::db_pim();
+        for sp in [SparsityConfig::dense(), SparsityConfig::hybrid(0.7)] {
+            let c = compiled(sp, &arch);
+            assert_eq!(c.program.instr_count(), c.instrs.len());
+        }
+    }
+}

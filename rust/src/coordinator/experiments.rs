@@ -1,15 +1,41 @@
 //! Experiment drivers — one per paper table/figure (DESIGN.md §5).
 //! Shared by the `dbpim` CLI (`dbpim fig11` …) and the bench targets in
 //! `rust/benches/`, so the same code regenerates every reported row.
+//!
+//! Parallelism is one level at a time, picked per driver: drivers that
+//! fan (network × config) jobs over `run_parallel` run each inner
+//! simulation serially (nesting the per-layer fan-out on top would
+//! oversubscribe the pool — `run_parallel` spawns fresh threads per
+//! call), while drivers without an outer fan-out (fig13) parallelize
+//! across layers instead. Results are bit-identical either way; set
+//! `DBPIM_ENGINE=sequential|parallel` to override for A/B timing.
 
 use crate::arch::ArchConfig;
 use crate::compiler::SparsityConfig;
 use crate::json::{arr, num, obj, str_, Value};
 use crate::models::{self, Network};
-use crate::sim::{self, OpCategory, SimReport};
+use crate::sim::{self, Engine, OpCategory, SimReport};
 use crate::stats;
 
 use super::run_parallel;
+
+/// `DBPIM_ENGINE` override (spelling per `Engine::parse`).
+fn env_engine() -> Option<Engine> {
+    std::env::var("DBPIM_ENGINE").ok().and_then(|s| Engine::parse(&s))
+}
+
+/// Simulation nested inside an outer `run_parallel` fan-out: serial by
+/// default — the (network × config) jobs already saturate the pool.
+fn simulate(net: &Network, sp: SparsityConfig, arch: &ArchConfig, seed: u64) -> SimReport {
+    let engine = env_engine().unwrap_or(Engine::Sequential);
+    sim::simulate_network_with_engine(net, sp, arch, seed, engine)
+}
+
+/// Top-level simulation (no outer fan-out): parallel across layers.
+fn simulate_toplevel(net: &Network, sp: SparsityConfig, arch: &ArchConfig, seed: u64) -> SimReport {
+    let engine = env_engine().unwrap_or(Engine::Parallel);
+    sim::simulate_network_with_engine(net, sp, arch, seed, engine)
+}
 
 /// Fig. 11 row: weight-sparsity-only speedup + energy vs dense baseline.
 #[derive(Debug, Clone)]
@@ -43,8 +69,8 @@ pub fn fig11(seed: u64) -> Vec<Fig11Row> {
                 let base_arch = base_arch.clone();
                 Box::new(move || {
                     let net = models::by_name(name).unwrap();
-                    let r = sim::simulate_network(&net, SparsityConfig::hybrid(v), &arch, seed);
-                    let b = sim::simulate_network(&net, SparsityConfig::dense(), &base_arch, seed);
+                    let r = simulate(&net, SparsityConfig::hybrid(v), &arch, seed);
+                    let b = simulate(&net, SparsityConfig::dense(), &base_arch, seed);
                     Fig11Row {
                         network: name.to_string(),
                         total_sparsity: total,
@@ -109,11 +135,11 @@ pub fn fig12(seed: u64) -> Vec<Fig12Row> {
             let configs = configs.clone();
             let base_arch = base_arch.clone();
             Box::new(move || {
-                let base = sim::simulate_network(&net, SparsityConfig::dense(), &base_arch, seed);
+                let base = simulate(&net, SparsityConfig::dense(), &base_arch, seed);
                 configs
                     .iter()
                     .map(|(label, arch, sp)| {
-                        let r = sim::simulate_network(&net, *sp, arch, seed);
+                        let r = simulate(&net, *sp, arch, seed);
                         Fig12Row {
                             network: net.name.clone(),
                             approach: label,
@@ -144,7 +170,7 @@ pub fn fig13(seed: u64) -> Vec<Fig13Row> {
         .iter()
         .map(|&name| {
             let net = models::by_name(name).unwrap();
-            let r = sim::simulate_network(
+            let r = simulate_toplevel(
                 &net,
                 SparsityConfig::hybrid(0.6),
                 &ArchConfig::db_pim(),
@@ -192,7 +218,7 @@ pub fn table2(seed: u64) -> Table2 {
         .map(|net| {
             let arch = arch.clone();
             Box::new(move || {
-                let r = sim::simulate_network(&net, SparsityConfig::hybrid(0.6), &arch, seed);
+                let r = simulate(&net, SparsityConfig::hybrid(0.6), &arch, seed);
                 (net.name.clone(), r.u_act())
             }) as Box<dyn FnOnce() -> (String, f64) + Send>
         })
@@ -228,19 +254,19 @@ pub fn table3(seed: u64) -> Vec<Table3Row> {
         .into_iter()
         .map(|net| {
             Box::new(move || {
-                let dac = sim::simulate_network(
+                let dac = simulate(
                     &net,
                     SparsityConfig { value_sparsity: 0.0, fta: true },
                     &ArchConfig::dac24(),
                     seed,
                 );
-                let bit = sim::simulate_network(
+                let bit = simulate(
                     &net,
                     SparsityConfig { value_sparsity: 0.0, fta: true },
                     &ArchConfig::bit_only(),
                     seed,
                 );
-                let hyb = sim::simulate_network(
+                let hyb = simulate(
                     &net,
                     SparsityConfig::hybrid(0.6),
                     &ArchConfig::db_pim(),

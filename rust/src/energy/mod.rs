@@ -102,6 +102,21 @@ pub struct EventCounts {
     pub macs: u64,
 }
 
+/// `events += &delta` — the deterministic merge the barrier scheduler
+/// uses to fold per-core counts (in ascending core order; all fields
+/// are u64 sums, so the merge is exact regardless of execution order).
+impl std::ops::AddAssign<&EventCounts> for EventCounts {
+    fn add_assign(&mut self, other: &EventCounts) {
+        self.add(other);
+    }
+}
+
+impl std::ops::AddAssign for EventCounts {
+    fn add_assign(&mut self, other: EventCounts) {
+        self.add(&other);
+    }
+}
+
 impl EventCounts {
     pub fn add(&mut self, other: &EventCounts) {
         self.macro_col_cycles += other.macro_col_cycles;
@@ -202,6 +217,24 @@ mod tests {
         e.core_cycles = 43;
         let total: f64 = e.energy_breakdown(&t).iter().map(|(_, v)| v).sum();
         assert!((total - e.energy_pj(&t)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn add_assign_matches_add() {
+        let mut a = EventCounts::default();
+        a.macro_cycles = 3;
+        a.macs = 7;
+        a.instrs = 11;
+        let mut by_add = a.clone();
+        by_add.add(&a);
+        let mut by_ref = a.clone();
+        by_ref += &a;
+        let mut by_val = a.clone();
+        by_val += a.clone();
+        assert_eq!(by_add, by_ref);
+        assert_eq!(by_add, by_val);
+        assert_eq!(by_add.macro_cycles, 6);
+        assert_eq!(by_add.macs, 14);
     }
 
     #[test]

@@ -118,6 +118,92 @@ impl Instr {
     }
 }
 
+/// A barrier-free run of instructions for a single PIM core.
+///
+/// The segmented `Program` representation (compiler::program) splits a
+/// layer's flat stream at `Sync`/`Simd`/`EndLayer` barriers into one
+/// `Segment` per core and phase; the parallel engine executes segments
+/// of one phase concurrently. A segment never contains a barrier
+/// opcode — `decode` enforces this.
+///
+/// Wire format: one 12-byte header word (opcode `OP_SEG`, core id,
+/// instruction count) followed by the instruction words, so segmented
+/// programs share the instruction buffer's fixed-width framing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub core: u8,
+    pub instrs: Vec<Instr>,
+}
+
+const OP_SEG: u8 = 0x10;
+
+impl Segment {
+    /// Encoded size in bytes (header + body).
+    pub fn encoded_len(&self) -> usize {
+        (self.instrs.len() + 1) * INSTR_BYTES
+    }
+
+    /// Encode as header word + instruction words.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        let mut h = [0u8; INSTR_BYTES];
+        h[0] = OP_SEG;
+        h[1] = self.core;
+        h[2..6].copy_from_slice(&(self.instrs.len() as u32).to_le_bytes());
+        out.extend_from_slice(&h);
+        for i in &self.instrs {
+            out.extend_from_slice(&i.encode());
+        }
+        out
+    }
+
+    /// Decode one segment from the head of `bytes`; returns the segment
+    /// and the number of bytes consumed. Rejects barrier opcodes inside
+    /// the body (segments are barrier-free by construction).
+    pub fn decode(bytes: &[u8]) -> Option<(Segment, usize)> {
+        if bytes.len() < INSTR_BYTES || bytes[0] != OP_SEG {
+            return None;
+        }
+        let core = bytes[1];
+        let len = u32::from_le_bytes([bytes[2], bytes[3], bytes[4], bytes[5]]) as usize;
+        let total = len.checked_add(1)?.checked_mul(INSTR_BYTES)?;
+        if bytes.len() < total {
+            return None;
+        }
+        let mut instrs = Vec::with_capacity(len);
+        for i in 0..len {
+            let off = (i + 1) * INSTR_BYTES;
+            let instr = Instr::decode(&bytes[off..off + INSTR_BYTES])?;
+            if matches!(instr, Instr::Sync | Instr::EndLayer | Instr::Simd { .. }) {
+                return None;
+            }
+            instrs.push(instr);
+        }
+        Some((Segment { core, instrs }, total))
+    }
+}
+
+/// Encode a sequence of segments back-to-back.
+pub fn encode_segments(segs: &[Segment]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(segs.iter().map(Segment::encoded_len).sum());
+    for s in segs {
+        out.extend_from_slice(&s.encode());
+    }
+    out
+}
+
+/// Decode a back-to-back segment stream (must consume all bytes).
+pub fn decode_segments(bytes: &[u8]) -> Option<Vec<Segment>> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    while pos < bytes.len() {
+        let (seg, used) = Segment::decode(&bytes[pos..])?;
+        out.push(seg);
+        pos += used;
+    }
+    Some(out)
+}
+
 /// Encode a full stream.
 pub fn encode_stream(instrs: &[Instr]) -> Vec<u8> {
     let mut out = Vec::with_capacity(instrs.len() * INSTR_BYTES);
@@ -182,6 +268,83 @@ mod tests {
             assert_eq!(op as u8, v);
         }
         assert_eq!(SimdOp::from_u8(7), None);
+    }
+
+    #[test]
+    fn segment_roundtrip() {
+        let seg = Segment {
+            core: 5,
+            instrs: vec![
+                Instr::LoadTile { core: 5, tile: 9 },
+                Instr::Compute { core: 5, tile: 9, m_base: 0, m_count: 4 },
+                Instr::Store { core: 5, tile: 9, m_base: 0, m_count: 4 },
+            ],
+        };
+        let bytes = seg.encode();
+        assert_eq!(bytes.len(), seg.encoded_len());
+        let (got, used) = Segment::decode(&bytes).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(got, seg);
+    }
+
+    #[test]
+    fn segment_stream_roundtrip() {
+        let segs = vec![
+            Segment { core: 0, instrs: vec![Instr::LoadTile { core: 0, tile: 1 }] },
+            Segment { core: 1, instrs: vec![] },
+            Segment {
+                core: 7,
+                instrs: vec![Instr::Compute { core: 7, tile: 2, m_base: 8, m_count: 2 }],
+            },
+        ];
+        let bytes = encode_segments(&segs);
+        assert_eq!(decode_segments(&bytes), Some(segs));
+    }
+
+    #[test]
+    fn segment_rejects_barriers_and_truncation() {
+        // a Sync word smuggled into a segment body must be rejected
+        let mut bytes = Segment { core: 0, instrs: vec![] }.encode();
+        bytes[2..6].copy_from_slice(&1u32.to_le_bytes()); // claim 1 instr
+        bytes.extend_from_slice(&Instr::Sync.encode());
+        assert_eq!(Segment::decode(&bytes), None);
+        // truncated body
+        let seg = Segment { core: 0, instrs: vec![Instr::LoadTile { core: 0, tile: 0 }] };
+        let bytes = seg.encode();
+        assert_eq!(Segment::decode(&bytes[..bytes.len() - 1]), None);
+        // wrong header opcode
+        assert_eq!(Segment::decode(&Instr::Sync.encode()), None);
+    }
+
+    #[test]
+    fn random_segment_roundtrip_property() {
+        check_cases(32, |rng| {
+            let n = rng.below(20) as usize;
+            let core = rng.below(8) as u8;
+            let instrs: Vec<Instr> = (0..n)
+                .map(|_| match rng.below(3) {
+                    0 => Instr::LoadTile { core, tile: rng.next_u64() as u32 },
+                    1 => Instr::Compute {
+                        core,
+                        tile: rng.next_u64() as u32,
+                        m_base: rng.next_u64() as u32,
+                        m_count: rng.next_u64() as u16,
+                    },
+                    _ => Instr::Store {
+                        core,
+                        tile: rng.next_u64() as u32,
+                        m_base: rng.next_u64() as u32,
+                        m_count: rng.next_u64() as u16,
+                    },
+                })
+                .collect();
+            let seg = Segment { core, instrs };
+            let bytes = seg.encode();
+            match Segment::decode(&bytes) {
+                Some((got, used)) if got == seg && used == bytes.len() => Ok(()),
+                other => Err(format!("segment roundtrip failed: {other:?}")),
+            }
+        });
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //! ```text
 //! dbpim verify             run MiniNet on the simulator + golden HLO via
 //!                          PJRT and compare logits bit-for-bit
-//! dbpim simulate <net>     simulate one network (--arch, --value-sparsity)
+//! dbpim simulate <net>     simulate one network (--arch, --value-sparsity,
+//!                          --engine sequential|parallel)
 //! dbpim fig3|fig11|fig12|fig13|table2|table3
 //!                          regenerate a paper figure/table (prints the
 //!                          rows + writes artifacts/<exp>.json)
@@ -140,10 +141,20 @@ fn cmd_simulate(args: &[String]) -> i32 {
     } else {
         SparsityConfig::hybrid(v)
     };
+    let engine = match flag_value(args, "--engine").as_deref() {
+        None => sim::Engine::Parallel,
+        Some(s) => match sim::Engine::parse(s) {
+            Some(e) => e,
+            None => {
+                eprintln!("unknown engine {s} (sequential|parallel)");
+                return 2;
+            }
+        },
+    };
     let t0 = std::time::Instant::now();
-    let r = sim::simulate_network(&net, sp, &arch, 42);
+    let r = sim::simulate_network_with_engine(&net, sp, &arch, 42, engine);
     println!(
-        "{name} on {}: {} cycles ({:.3} ms @ {:.0} MHz), PIM-only {:.3} ms, {:.1} µJ, U_act {}",
+        "{name} on {} ({engine:?} engine): {} cycles ({:.3} ms @ {:.0} MHz), PIM-only {:.3} ms, {:.1} µJ, U_act {}",
         arch.name,
         r.total_cycles(),
         r.time_ms(),

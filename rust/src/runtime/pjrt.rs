@@ -1,0 +1,100 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts and execute
+//! them on the CPU PJRT client (`xla` crate).
+//!
+//! This is the bridge from the build-time python/JAX/Pallas layers into
+//! the rust request path: `make artifacts` lowers the golden graphs to
+//! HLO *text* (jax ≥ 0.5 serialized protos use 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids), and
+//! this module compiles + runs them for bit-exact verification of the
+//! simulator. Python never runs at request time.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+/// PJRT CPU client wrapper.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> crate::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// An INT8 tensor argument for an executable.
+pub fn literal_i8(data: &[i8], dims: &[usize]) -> crate::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape mismatch");
+    let bytes: &[u8] = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S8, dims, bytes)
+        .map_err(|e| anyhow!("creating i8 literal: {e:?}"))
+}
+
+impl Executable {
+    /// Execute with literal arguments; the golden graphs return a
+    /// 1-tuple (lowered with `return_tuple=True`), unwrap it and read
+    /// the INT32 payload.
+    pub fn run_i32(&self, args: &[xla::Literal]) -> crate::Result<Vec<i32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))?;
+        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec<i32>: {e:?}"))
+    }
+}
+
+/// Convenience: run the golden MiniNet HLO on its fixed input batch.
+pub fn run_golden_mininet(net: &crate::models::MiniNet) -> crate::Result<Vec<i32>> {
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo_text(&net.hlo_path).context("loading golden mininet HLO")?;
+    let x = literal_i8(
+        &net.input,
+        &[net.batch, net.input_ch, net.input_hw, net.input_hw],
+    )?;
+    exe.run_i32(&[x])
+}
+
+/// Convenience: run the golden tile-matmul HLO: (x [M,K] i8,
+/// planes [4,K,N] i8) -> [M,N] i32.
+pub fn run_golden_tile(
+    net: &crate::models::MiniNet,
+    x: &[i8],
+    m: usize,
+    k: usize,
+    planes: &[i8],
+    n: usize,
+) -> crate::Result<Vec<i32>> {
+    let rt = Runtime::cpu()?;
+    let exe = rt.load_hlo_text(&net.tile_hlo_path).context("loading tile HLO")?;
+    let xl = literal_i8(x, &[m, k])?;
+    let pl = literal_i8(planes, &[4, k, n])?;
+    exe.run_i32(&[xl, pl])
+}

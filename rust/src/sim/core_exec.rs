@@ -1,0 +1,348 @@
+//! Per-core segment executor.
+//!
+//! A [`CoreExecutor`] owns everything one PIM core touches while
+//! executing a barrier-free instruction segment: its clock, its event
+//! counters, its slice of the functional accumulators ([`CoreAcc`] —
+//! the filter columns of the core's assignments, disjoint across cores
+//! by construction of the packing), and a cached [`OccupancyTable`] for
+//! the assignment currently resident. Because no shared state is
+//! mutated between barriers, segments of one phase can execute on
+//! worker threads and merge deterministically (sim::engine).
+//!
+//! The timing/event semantics are an exact port of the original
+//! single-thread interpreter loop (machine.rs pre-refactor, DESIGN.md
+//! §6): every engine built on this executor is bit-identical to it.
+
+use crate::arch::ArchConfig;
+use crate::compiler::{Assignment, CompiledLayer, PreparedLayer, Tile};
+use crate::energy::EventCounts;
+use crate::isa::Instr;
+use crate::tensor::{MatI8, MatI32};
+use crate::util::ceil_div;
+
+use super::occupancy::OccupancyTable;
+
+/// Functional accumulator slice owned by one core: the filter columns
+/// of the core's assignments, stored densely as [M, owned_filters].
+#[derive(Debug, Clone)]
+pub struct CoreAcc {
+    /// Owned global filter columns, ascending.
+    pub filters: Vec<usize>,
+    /// Global filter column -> local column (usize::MAX = not owned).
+    col_of: Vec<usize>,
+    /// m_total × filters.len() accumulators, m-major.
+    pub data: Vec<i32>,
+    m_total: usize,
+}
+
+impl CoreAcc {
+    pub fn new(layer: &CompiledLayer, core: usize, m_total: usize) -> Self {
+        let mut filters: Vec<usize> = layer
+            .assignments
+            .iter()
+            .filter(|a| a.core == core)
+            .flat_map(|a| a.filters.iter().copied())
+            .collect();
+        filters.sort_unstable();
+        filters.dedup();
+        let mut col_of = vec![usize::MAX; layer.prep.n];
+        for (i, &f) in filters.iter().enumerate() {
+            col_of[f] = i;
+        }
+        let data = vec![0i32; m_total * filters.len()];
+        Self { filters, col_of, data, m_total }
+    }
+
+    /// Fold this core's columns into the shared [M, N] accumulator.
+    /// Columns are disjoint across cores, so the merge order cannot
+    /// change the result.
+    pub fn merge_into(&self, acc: &mut MatI32) {
+        let w = self.filters.len();
+        for m in 0..self.m_total {
+            let row = &self.data[m * w..(m + 1) * w];
+            let acc_row = &mut acc.data[m * acc.cols..(m + 1) * acc.cols];
+            for (i, &f) in self.filters.iter().enumerate() {
+                acc_row[f] += row[i];
+            }
+        }
+    }
+}
+
+/// Execution state of one PIM core over one layer.
+#[derive(Debug)]
+pub struct CoreExecutor<'a> {
+    arch: &'a ArchConfig,
+    layer: &'a CompiledLayer,
+    x: Option<&'a MatI8>,
+    pub core: usize,
+    m_total: usize,
+    /// Clock advance accumulated by this executor (cycles).
+    pub clock: u64,
+    pub events: EventCounts,
+    /// Functional accumulators (None in perf-only mode).
+    pub acc: Option<CoreAcc>,
+    /// Cached gather/occupancy table for the resident assignment.
+    table: Option<OccupancyTable>,
+}
+
+impl<'a> CoreExecutor<'a> {
+    pub fn new(
+        arch: &'a ArchConfig,
+        layer: &'a CompiledLayer,
+        x: Option<&'a MatI8>,
+        core: usize,
+        functional: bool,
+        m_total: usize,
+    ) -> Self {
+        let acc = functional.then(|| CoreAcc::new(layer, core, m_total));
+        Self { arch, layer, x, core, m_total, clock: 0, events: EventCounts::default(), acc, table: None }
+    }
+
+    /// Execute one per-core instruction. Barriers are handled by the
+    /// scheduler and must never reach a segment executor.
+    pub fn exec(&mut self, instr: &Instr) {
+        self.events.instrs += 1;
+        let arch = self.arch;
+        let layer = self.layer;
+        match *instr {
+            Instr::LoadTile { tile, .. } => {
+                let t = &layer.tiles[tile as usize];
+                let a = &layer.assignments[t.assignment];
+                // every cell of the tile written once, in all Tm
+                // macro replicas
+                let cells = t.rows() * a.active_cols() * arch.macros_per_core;
+                self.events.weight_writes += cells as u64;
+                self.clock += arch.tile_load_cycles;
+                // mask RF consulted once per tile to build the
+                // gather list (value sparsity only)
+                if arch.value_sparsity {
+                    self.events.mask_rf_reads += t.rows() as u64;
+                }
+            }
+            Instr::Compute { tile, m_base, m_count, .. } => {
+                let cycles = self.compute_chunk(tile as usize, m_base as usize, m_count as usize);
+                self.clock += cycles;
+            }
+            Instr::Store { tile, m_count, .. } => {
+                let t = &layer.tiles[tile as usize];
+                let a = &layer.assignments[t.assignment];
+                let words = m_count as u64 * a.filters.len() as u64;
+                self.events.output_buf_writes += words;
+                if t.row_start > 0 {
+                    // partial-sum reload for non-first K tiles
+                    self.events.output_buf_reads += words;
+                }
+                // store drains through the PPU: 1 cycle per Tm-batch
+                self.clock += ceil_div(words as usize, arch.macros_per_core) as u64;
+            }
+            Instr::Simd { .. } | Instr::Sync | Instr::EndLayer => {
+                unreachable!("barrier instruction inside a segment: {instr:?}")
+            }
+        }
+    }
+
+    /// (Re)build the gather/occupancy table when the resident
+    /// assignment changes. Tiles of one assignment are contiguous in
+    /// every core's stream, so a single-slot cache never thrashes.
+    fn ensure_table(&mut self, assignment: usize) {
+        if self.table.as_ref().map(|t| t.assignment) == Some(assignment) {
+            return;
+        }
+        let x = self.x.expect("input required");
+        let a = &self.layer.assignments[assignment];
+        self.table = Some(OccupancyTable::build(
+            assignment,
+            x,
+            &a.kept_rows,
+            self.arch.compartments,
+            self.m_total,
+            self.arch.input_skipping,
+            // perf-only IPU runs read nothing but the occ bytes
+            self.acc.is_some(),
+        ));
+    }
+
+    /// Process one Compute chunk (≤ Tm input rows on this core).
+    /// Returns the core-clock advance (max over the chunk's rows).
+    fn compute_chunk(&mut self, tile_idx: usize, m_base: usize, m_count: usize) -> u64 {
+        let arch = self.arch;
+        let layer = self.layer;
+        let t = &layer.tiles[tile_idx];
+        let a = &layer.assignments[t.assignment];
+        let prep = &layer.prep;
+        let comp = arch.compartments;
+        let rows = t.rows();
+        let steps = ceil_div(rows, comp);
+        let demand = a.active_cols() as u64;
+        let functional = self.acc.is_some();
+
+        // Fast analytic path: timing is data-independent without IPU
+        // skipping, so one row's cost is every row's cost.
+        if !arch.input_skipping && !functional {
+            let bits = arch.input_bits as u64;
+            let cycles_per_row = steps as u64 * bits;
+            let full_steps = rows / comp;
+            let tail = rows % comp;
+            // effective cells per bit-cycle (U_act numerator)
+            let eff_cells: u64 = if arch.weight_bit_sparsity {
+                (full_steps as u64 * comp as u64 + tail as u64) * demand
+            } else {
+                // dense: effective = non-zero weight bits actually stored
+                dense_effective_cells(t, a, prep)
+            };
+            let mc = m_count as u64;
+            self.events.macro_cycles += cycles_per_row * mc;
+            self.events.macro_col_cycles += cycles_per_row * mc * arch.macro_columns as u64;
+            self.events.active_col_cycles += eff_cells * bits * mc;
+            self.events.input_buf_reads += steps as u64 * mc;
+            if arch.value_sparsity {
+                self.events.alloc_switches += rows as u64 * mc;
+            }
+            if arch.weight_bit_sparsity {
+                self.events.meta_rf_reads += steps as u64 * mc;
+            }
+            self.events.macs += rows as u64 * a.filters.len() as u64 * mc;
+            return cycles_per_row;
+        }
+
+        // Row-loop path: per-assignment occupancy precompute replaces
+        // the per-(tile, row, step) gather + byte-wise OR fold.
+        self.ensure_table(t.assignment);
+        let x = self.x;
+        let Self { table, acc, events, .. } = self;
+        let table = table.as_ref().expect("table just built");
+        let mut acc = acc.as_mut();
+
+        let kept = &a.kept_rows[t.row_start..t.row_end];
+        // Global step base when tile rows align with compartment steps
+        // (always true for k_slots-sized tiles); otherwise fall back to
+        // an on-the-fly fold over the gathered row.
+        let base_step = (arch.input_skipping && t.row_start % comp == 0 && table.has_occ())
+            .then(|| t.row_start / comp);
+        // Per-step effective cells are row-independent; hoist them.
+        let step_eff: Vec<u64> = if arch.input_skipping {
+            (0..steps)
+                .map(|s| {
+                    let lanes = (rows - s * comp).min(comp);
+                    if arch.weight_bit_sparsity {
+                        demand * lanes as u64
+                    } else {
+                        dense_step_effective_cells(t, a, prep, comp, s, lanes)
+                    }
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let row_eff: u64 = if arch.input_skipping {
+            0
+        } else if arch.weight_bit_sparsity {
+            demand * rows as u64
+        } else {
+            dense_effective_cells(t, a, prep)
+        };
+
+        let mut worst = 0u64;
+        // Accumulate per-chunk event totals locally; fold into `events`
+        // once (hot-path: avoids 6 counter writes per row-step).
+        let mut tot_cycles = 0u64;
+        let mut tot_eff = 0u64;
+        for mi in 0..m_count {
+            let m = m_base + mi;
+            let mut row_cycles = 0u64;
+            if arch.input_skipping {
+                // IPU: the precomputed occupancy byte per (row, step)
+                // is the OR of the step's 16 gathered inputs.
+                for (s, &eff) in step_eff.iter().enumerate() {
+                    let occ = match base_step {
+                        Some(b) => table.step_occ(m, b + s),
+                        None => {
+                            // unaligned tile (never emitted by the
+                            // compiler): fold straight off the input
+                            let lanes = (rows - s * comp).min(comp);
+                            let group = &kept[s * comp..s * comp + lanes];
+                            let xrow =
+                                super::occupancy::i8_as_u8(x.expect("input required").row(m));
+                            group.iter().fold(0u8, |o, &k| o | xrow[k as usize])
+                        }
+                    };
+                    let beff = u64::from(occ.count_ones());
+                    row_cycles += beff;
+                    tot_eff += eff * beff;
+                }
+            } else {
+                // timing is data-independent: full bit-serial cost
+                let bits = arch.input_bits as u64;
+                row_cycles = steps as u64 * bits;
+                tot_eff += row_eff * bits;
+            }
+            tot_cycles += row_cycles;
+            worst = worst.max(row_cycles);
+
+            // functional accumulate (fast dot-product path; the DBMU
+            // bit-level path in dbmu.rs is cross-checked in tests)
+            if let Some(acc) = acc.as_deref_mut() {
+                let w = acc.filters.len();
+                let gathered = &table.gathered_row(m)[t.row_start..t.row_end];
+                let (col_of, acc_row) = (&acc.col_of, &mut acc.data[m * w..(m + 1) * w]);
+                for (ri, &k) in kept.iter().enumerate() {
+                    let xv = gathered[ri] as i8 as i32;
+                    if xv == 0 {
+                        continue;
+                    }
+                    let wrow = prep.weights.row(k as usize);
+                    for &f in &a.filters {
+                        acc_row[col_of[f]] += xv * wrow[f] as i32;
+                    }
+                }
+            }
+        }
+        let mc = m_count as u64;
+        events.macro_cycles += tot_cycles;
+        events.macro_col_cycles += tot_cycles * arch.macro_columns as u64;
+        events.active_col_cycles += tot_eff;
+        events.input_buf_reads += steps as u64 * mc;
+        if arch.input_skipping {
+            events.ipu_detects += steps as u64 * mc;
+        }
+        if arch.weight_bit_sparsity {
+            events.meta_rf_reads += steps as u64 * mc;
+        }
+        if arch.value_sparsity {
+            events.alloc_switches += rows as u64 * mc;
+        }
+        events.macs += rows as u64 * a.filters.len() as u64 * mc;
+        worst
+    }
+}
+
+/// Effective (non-zero-bit) cells for a whole dense tile, summed over
+/// row-steps — the U_act numerator per bit-cycle.
+fn dense_effective_cells(t: &Tile, a: &Assignment, prep: &PreparedLayer) -> u64 {
+    let mut cells = 0u64;
+    for &k in &a.kept_rows[t.row_start..t.row_end] {
+        for &f in &a.filters {
+            cells += (prep.weights.get(k as usize, f) as u8).count_ones() as u64;
+        }
+    }
+    cells
+}
+
+/// Same, restricted to the lanes of one row-step.
+fn dense_step_effective_cells(
+    t: &Tile,
+    a: &Assignment,
+    prep: &PreparedLayer,
+    comp: usize,
+    step: usize,
+    lanes: usize,
+) -> u64 {
+    let base = t.row_start + step * comp;
+    let mut cells = 0u64;
+    for &k in &a.kept_rows[base..base + lanes] {
+        for &f in &a.filters {
+            cells += (prep.weights.get(k as usize, f) as u8).count_ones() as u64;
+        }
+    }
+    cells
+}

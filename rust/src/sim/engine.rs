@@ -1,0 +1,265 @@
+//! Barrier scheduler: executes a compiled layer's segmented [`Program`]
+//! phase by phase.
+//!
+//! Within a phase, cores share no mutable state (each [`CoreExecutor`]
+//! owns its clock, events, occupancy cache and accumulator slice), so
+//! [`Engine::Parallel`] fans the phase's segments out over
+//! `coordinator::run_parallel` worker threads while
+//! [`Engine::Sequential`] runs them inline; both merge results in
+//! ascending core order and are bit-identical — same cycles, same
+//! [`EventCounts`], same functional accumulators — to each other and to
+//! the legacy flat-stream interpreter ([`run_layer_interp`]), which is
+//! retained as the equivalence baseline (tests/prop_invariants.rs).
+
+use crate::compiler::{Barrier, CompiledLayer};
+use crate::energy::EventCounts;
+use crate::isa::{Instr, Segment};
+use crate::tensor::{MatI8, MatI32};
+
+use super::core_exec::{CoreAcc, CoreExecutor};
+use super::machine::{LayerStats, Machine, OpCategory};
+use super::simd;
+
+/// How a layer's segmented program is driven.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Segments run inline on the calling thread (core order).
+    Sequential,
+    /// Segments of a phase fan out over worker threads.
+    Parallel,
+}
+
+impl Engine {
+    /// Parse a CLI/env spelling ("sequential" | "parallel").
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "sequential" | "seq" => Some(Engine::Sequential),
+            "parallel" | "par" => Some(Engine::Parallel),
+            _ => None,
+        }
+    }
+}
+
+/// Result of draining one segment on one core.
+struct SegmentOut {
+    core: usize,
+    clock: u64,
+    events: EventCounts,
+    acc: Option<CoreAcc>,
+}
+
+fn run_segment(
+    machine: &Machine,
+    layer: &CompiledLayer,
+    x: Option<&MatI8>,
+    seg: &Segment,
+    functional: bool,
+    m_total: usize,
+) -> SegmentOut {
+    let mut ex =
+        CoreExecutor::new(&machine.arch, layer, x, seg.core as usize, functional, m_total);
+    for instr in &seg.instrs {
+        ex.exec(instr);
+    }
+    SegmentOut { core: seg.core as usize, clock: ex.clock, events: ex.events, acc: ex.acc }
+}
+
+fn validate_inputs(machine: &Machine, layer: &CompiledLayer, x: Option<&MatI8>, functional: bool) {
+    if functional || machine.arch.input_skipping {
+        let x = x.expect("input matrix required for functional/IPU simulation");
+        let m_total = layer.prep.m.max(1);
+        assert_eq!(x.rows, m_total, "input rows != layer M");
+        assert_eq!(x.cols, layer.prep.k, "input cols != layer K");
+    }
+}
+
+fn finish(
+    machine: &Machine,
+    layer: &CompiledLayer,
+    mut events: EventCounts,
+    clocks: Vec<u64>,
+    acc: Option<MatI32>,
+) -> (LayerStats, Option<MatI32>) {
+    let elapsed = clocks.iter().copied().max().unwrap_or(0);
+    events.elapsed_cycles = elapsed;
+    events.core_cycles = elapsed * machine.arch.n_cores as u64;
+    let stats = LayerStats {
+        name: layer.prep.name.clone(),
+        category: OpCategory::PimConvFc,
+        events,
+        core_cycles: clocks,
+        elapsed,
+    };
+    (stats, acc)
+}
+
+/// Apply a phase-closing barrier to the core clocks + shared events.
+fn apply_barrier(barrier: Barrier, clocks: &mut [u64], events: &mut EventCounts, machine: &Machine) {
+    match barrier {
+        Barrier::Sync => {
+            events.instrs += 1;
+            let max = clocks.iter().copied().max().unwrap_or(0);
+            clocks.iter_mut().for_each(|c| *c = max);
+        }
+        Barrier::Simd { op, elems } => {
+            events.instrs += 1;
+            let c = simd::simd_cycles(op, elems as u64, &machine.arch);
+            events.simd_lane_ops += simd::lane_ops(op, elems as u64);
+            let max = clocks.iter().copied().max().unwrap_or(0);
+            clocks.iter_mut().for_each(|c2| *c2 = max + c);
+        }
+        Barrier::End => events.instrs += 1,
+        Barrier::Open => {}
+    }
+}
+
+/// Execute a compiled layer's segmented program under `engine`.
+pub fn run_layer(
+    machine: &Machine,
+    layer: &CompiledLayer,
+    x: Option<&MatI8>,
+    functional: bool,
+    engine: Engine,
+) -> (LayerStats, Option<MatI32>) {
+    validate_inputs(machine, layer, x, functional);
+    let arch = &machine.arch;
+    let m_total = layer.prep.m.max(1);
+    let mut events = EventCounts::default();
+    let mut clocks = vec![0u64; arch.n_cores];
+    let mut acc = functional.then(|| MatI32::zeros(m_total, layer.prep.n));
+
+    for phase in &layer.program.phases {
+        let outs: Vec<SegmentOut> = if engine == Engine::Parallel && phase.segments.len() > 1 {
+            let jobs: Vec<_> = phase
+                .segments
+                .iter()
+                .map(|seg| move || run_segment(machine, layer, x, seg, functional, m_total))
+                .collect();
+            let workers = phase.segments.len().min(crate::coordinator::default_workers());
+            crate::coordinator::run_parallel(jobs, workers)
+        } else {
+            phase
+                .segments
+                .iter()
+                .map(|seg| run_segment(machine, layer, x, seg, functional, m_total))
+                .collect()
+        };
+        // Deterministic merge: ascending core order (segment order).
+        for out in &outs {
+            clocks[out.core] += out.clock;
+            events += &out.events;
+            if let (Some(acc), Some(ca)) = (acc.as_mut(), out.acc.as_ref()) {
+                ca.merge_into(acc);
+            }
+        }
+        apply_barrier(phase.barrier, &mut clocks, &mut events, machine);
+    }
+    finish(machine, layer, events, clocks, acc)
+}
+
+/// Legacy single-thread interpreter: walks the flat instruction stream
+/// in its original interleaved order, dispatching per-core instructions
+/// to per-core executors. Kept as the ground-truth baseline the
+/// segmented engines are property-tested against.
+pub fn run_layer_interp(
+    machine: &Machine,
+    layer: &CompiledLayer,
+    x: Option<&MatI8>,
+    functional: bool,
+) -> (LayerStats, Option<MatI32>) {
+    validate_inputs(machine, layer, x, functional);
+    let arch = &machine.arch;
+    let m_total = layer.prep.m.max(1);
+    let mut execs: Vec<CoreExecutor> = (0..arch.n_cores)
+        .map(|c| CoreExecutor::new(arch, layer, x, c, functional, m_total))
+        .collect();
+    let mut clocks = vec![0u64; arch.n_cores];
+    let mut events = EventCounts::default(); // barrier-level events
+    for instr in &layer.instrs {
+        match *instr {
+            Instr::Sync => apply_barrier(Barrier::Sync, &mut clocks, &mut events, machine),
+            Instr::EndLayer => apply_barrier(Barrier::End, &mut clocks, &mut events, machine),
+            Instr::Simd { op, elems } => {
+                apply_barrier(Barrier::Simd { op, elems }, &mut clocks, &mut events, machine)
+            }
+            Instr::LoadTile { core, .. } | Instr::Compute { core, .. } | Instr::Store { core, .. } => {
+                let ex = &mut execs[core as usize];
+                let before = ex.clock;
+                ex.exec(instr);
+                clocks[core as usize] += ex.clock - before;
+            }
+        }
+    }
+    let mut acc = functional.then(|| MatI32::zeros(m_total, layer.prep.n));
+    for ex in &execs {
+        events += &ex.events;
+        if let (Some(acc), Some(ca)) = (acc.as_mut(), ex.acc.as_ref()) {
+            ca.merge_into(acc);
+        }
+    }
+    finish(machine, layer, events, clocks, acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::compiler::{compile_layer, prepare_layer, SparsityConfig};
+    use crate::models::synthesize_weights;
+    use crate::quant;
+
+    fn build(arch: &ArchConfig, seed: u64) -> (CompiledLayer, MatI8) {
+        let (m, k, n) = (10, 160, 24);
+        let w = synthesize_weights(seed, k, n);
+        let prep = prepare_layer(
+            "t", m, k, n, w,
+            SparsityConfig::hybrid(0.5),
+            arch,
+            quant::requant_mul(0.01),
+            true,
+            None,
+        );
+        let layer = compile_layer(prep, arch);
+        let x = MatI8::from_vec(
+            m,
+            k,
+            crate::models::synthesize_activations(seed ^ 3, m * k),
+        );
+        (layer, x)
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(Engine::parse("sequential"), Some(Engine::Sequential));
+        assert_eq!(Engine::parse("par"), Some(Engine::Parallel));
+        assert_eq!(Engine::parse("turbo"), None);
+    }
+
+    #[test]
+    fn engines_and_interp_agree_functionally() {
+        let arch = ArchConfig::db_pim();
+        let (layer, x) = build(&arch, 17);
+        let m = Machine::new(arch);
+        let (s_int, a_int) = run_layer_interp(&m, &layer, Some(&x), true);
+        let (s_seq, a_seq) = run_layer(&m, &layer, Some(&x), true, Engine::Sequential);
+        let (s_par, a_par) = run_layer(&m, &layer, Some(&x), true, Engine::Parallel);
+        assert_eq!(s_int.events, s_seq.events);
+        assert_eq!(s_int.events, s_par.events);
+        assert_eq!(s_int.core_cycles, s_seq.core_cycles);
+        assert_eq!(s_int.core_cycles, s_par.core_cycles);
+        assert_eq!(s_int.elapsed, s_par.elapsed);
+        assert_eq!(a_int, a_seq);
+        assert_eq!(a_int, a_par);
+    }
+
+    #[test]
+    fn single_core_arch_runs_inline() {
+        let arch = ArchConfig { n_cores: 1, ..ArchConfig::db_pim() };
+        let (layer, x) = build(&arch, 5);
+        let m = Machine::new(arch);
+        let (s_par, _) = run_layer(&m, &layer, Some(&x), false, Engine::Parallel);
+        let (s_int, _) = run_layer_interp(&m, &layer, Some(&x), false);
+        assert_eq!(s_par.events, s_int.events);
+        assert_eq!(s_par.elapsed, s_int.elapsed);
+    }
+}

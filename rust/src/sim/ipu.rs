@@ -8,10 +8,14 @@
 //! the non-zero columns). With skipping disabled every row-step costs
 //! the full `input_bits` cycles.
 
-/// OR-reduce a group of INT8 inputs to its column-occupancy byte.
+use super::occupancy;
+
+/// OR-reduce a group of INT8 inputs to its column-occupancy byte
+/// (word-wise fold; see sim::occupancy for the packed variant the
+/// engines use).
 #[inline]
 pub fn column_occupancy(inputs: &[i8]) -> u8 {
-    inputs.iter().fold(0u8, |acc, &v| acc | (v as u8))
+    occupancy::or_fold_bytes(occupancy::i8_as_u8(inputs))
 }
 
 /// Number of bit-serial cycles needed for one 16-input row-step.
@@ -26,15 +30,23 @@ pub fn effective_bit_cycles(inputs: &[i8], input_bits: usize, skipping: bool) ->
 
 /// Fraction of skippable (all-zero) columns over a stream of groups —
 /// the Fig. 3(b) statistic as measured by the IPU itself.
+///
+/// `count_zeros` runs over the full 8-bit occupancy byte, so the
+/// `8 - input_bits` always-zero high bits must be discounted — but only
+/// when they really are zero: negative (or otherwise wide) activations
+/// set high bits, leaving fewer than `8 - input_bits` zero bits, and
+/// the unchecked subtraction used to wrap around u64. Saturate instead:
+/// such a group simply has no skippable columns beyond its occupancy.
 pub fn skippable_fraction(acts: &[i8], group: usize, input_bits: usize) -> f64 {
     if acts.len() < group || group == 0 {
         return 0.0;
     }
+    let high_overhead = 8u64.saturating_sub(input_bits as u64);
     let mut zero = 0u64;
     let mut total = 0u64;
     for chunk in acts.chunks(group) {
         let occ = column_occupancy(chunk);
-        zero += u64::from(occ.count_zeros()) - (8 - input_bits as u64);
+        zero += u64::from(occ.count_zeros()).saturating_sub(high_overhead);
         total += input_bits as u64;
     }
     zero as f64 / total as f64
@@ -68,6 +80,34 @@ mod tests {
         for _ in 0..100 {
             let group: Vec<i8> = (0..16).map(|_| rng.int8()).collect();
             assert!(effective_bit_cycles(&group, 8, true) <= 8);
+        }
+    }
+
+    #[test]
+    fn skippable_fraction_no_underflow_on_narrow_input_bits() {
+        // Regression: with input_bits < 8, a group whose occupancy has
+        // fewer than (8 - input_bits) zero bits (e.g. any negative
+        // activation sets bit 7) used to wrap `count_zeros() - (8 -
+        // input_bits)` around u64, exploding the fraction.
+        let acts = [-1i8; 32]; // occ = 0xFF -> count_zeros() = 0
+        let f = skippable_fraction(&acts, 16, 4);
+        assert_eq!(f, 0.0, "wrapped underflow leaked into the fraction: {f}");
+        // mixed stream: one clean group (low nibble only), one group
+        // with sign bits; only the clean group contributes.
+        let mut acts = vec![0i8; 16];
+        acts[0] = 0x03; // occ 0b0000_0011 -> 2 zero low-nibble columns
+        acts.extend_from_slice(&[-128i8; 16]); // occ 0b1000_0000
+        let f = skippable_fraction(&acts, 16, 4);
+        // group 1: 6 zero bits total, minus 4 high = 2 skippable of 4;
+        // group 2: count_zeros = 7 (only bit 7 occupied), minus 4 high
+        // -> 3 skippable of 4.
+        assert!((f - (2.0 + 3.0) / 8.0).abs() < 1e-12, "fraction {f}");
+        // fraction stays within [0, 1] for arbitrary signed streams
+        let mut rng = crate::util::Rng::new(9);
+        for bits in 1..=8 {
+            let acts: Vec<i8> = (0..256).map(|_| rng.int8()).collect();
+            let f = skippable_fraction(&acts, 16, bits);
+            assert!((0.0..=1.0).contains(&f), "bits {bits} fraction {f}");
         }
     }
 

@@ -1,6 +1,6 @@
 //! The cycle-accurate machine model: top controller executing the
-//! compiled instruction streams over the PIM cores, sparse allocation
-//! network, IPUs and SIMD core, with full event/energy accounting.
+//! compiled programs over the PIM cores, sparse allocation network,
+//! IPUs and SIMD core, with full event/energy accounting.
 //!
 //! Timing model (DESIGN.md §6). One macro bit-cycle = all 16
 //! compartments perform their DBMU ANDs + the PPUs reduce one input bit
@@ -16,13 +16,20 @@
 //! advances the core clock by the *max* of its rows' cycle counts while
 //! energy accrues for every row. Cores run independently; Sync aligns
 //! them; layer makespan = max core clock.
+//!
+//! This file is the thin façade over the execution stack (DESIGN.md
+//! §8): the per-core work lives in [`super::core_exec::CoreExecutor`],
+//! the barrier scheduling + parallel fan-out in [`super::engine`], and
+//! `Machine::run_pim_layer` dispatches on the machine's configured
+//! [`Engine`] so every existing call site keeps working unchanged.
 
 use crate::arch::ArchConfig;
-use crate::compiler::{Assignment, CompiledLayer, Tile};
+use crate::compiler::CompiledLayer;
 use crate::energy::{EnergyTable, EventCounts};
-use crate::isa::{Instr, SimdOp};
+use crate::isa::SimdOp;
 use crate::tensor::{MatI8, MatI32};
 
+use super::engine::{self, Engine};
 use super::simd;
 
 /// Per-layer simulation result.
@@ -51,16 +58,23 @@ pub enum OpCategory {
     Etc,
 }
 
-/// The machine: an architecture + energy table.
+/// The machine: an architecture + energy table + execution engine.
 #[derive(Debug, Clone)]
 pub struct Machine {
     pub arch: ArchConfig,
     pub energy: EnergyTable,
+    /// How segmented programs are driven (default: parallel; results
+    /// are bit-identical either way).
+    pub engine: Engine,
 }
 
 impl Machine {
     pub fn new(arch: ArchConfig) -> Self {
-        Self { arch, energy: EnergyTable::default28nm() }
+        Self::with_engine(arch, Engine::Parallel)
+    }
+
+    pub fn with_engine(arch: ArchConfig, engine: Engine) -> Self {
+        Self { arch, energy: EnergyTable::default28nm(), engine }
     }
 
     /// Execute one compiled PIM layer.
@@ -70,274 +84,27 @@ impl Machine {
     /// * `functional` — also compute the exact INT32 accumulators.
     ///
     /// Returns stats and (in functional mode) the [M, N] accumulators.
+    /// Compat shim over the segmented engines: dispatches the layer's
+    /// per-core program on `self.engine`.
     pub fn run_pim_layer(
         &self,
         layer: &CompiledLayer,
         x: Option<&MatI8>,
         functional: bool,
     ) -> (LayerStats, Option<MatI32>) {
-        let arch = &self.arch;
-        let prep = &layer.prep;
-        let m_total = prep.m.max(1);
-        if functional || arch.input_skipping {
-            let x = x.expect("input matrix required for functional/IPU simulation");
-            assert_eq!(x.rows, m_total, "input rows != layer M");
-            assert_eq!(x.cols, prep.k, "input cols != layer K");
-        }
-
-        let mut events = EventCounts::default();
-        let mut clocks = vec![0u64; arch.n_cores];
-        let mut acc = functional.then(|| MatI32::zeros(m_total, prep.n));
-        // per-assignment gathered input row buffer (reused)
-        let mut gathered: Vec<i8> = Vec::new();
-
-        for instr in &layer.instrs {
-            events.instrs += 1;
-            match *instr {
-                Instr::LoadTile { core, tile } => {
-                    let t = &layer.tiles[tile as usize];
-                    let a = &layer.assignments[t.assignment];
-                    // every cell of the tile written once, in all Tm
-                    // macro replicas
-                    let cells = t.rows() * a.active_cols() * arch.macros_per_core;
-                    events.weight_writes += cells as u64;
-                    clocks[core as usize] += arch.tile_load_cycles;
-                    // mask RF consulted once per tile to build the
-                    // gather list (value sparsity only)
-                    if arch.value_sparsity {
-                        events.mask_rf_reads += t.rows() as u64;
-                    }
-                }
-                Instr::Compute { core, tile, m_base, m_count } => {
-                    let t = &layer.tiles[tile as usize];
-                    let a = &layer.assignments[t.assignment];
-                    let chunk_cycles = self.compute_chunk(
-                        t,
-                        a,
-                        prep,
-                        x,
-                        m_base as usize,
-                        m_count as usize,
-                        &mut events,
-                        acc.as_mut(),
-                        &mut gathered,
-                    );
-                    clocks[core as usize] += chunk_cycles;
-                }
-                Instr::Store { core, tile, m_count, .. } => {
-                    let t = &layer.tiles[tile as usize];
-                    let a = &layer.assignments[t.assignment];
-                    let words = m_count as u64 * a.filters.len() as u64;
-                    events.output_buf_writes += words;
-                    if t.row_start > 0 {
-                        // partial-sum reload for non-first K tiles
-                        events.output_buf_reads += words;
-                    }
-                    // store drains through the PPU: 1 cycle per Tm-batch
-                    clocks[core as usize] +=
-                        crate::util::ceil_div(words as usize, arch.macros_per_core) as u64;
-                }
-                Instr::Simd { op, elems } => {
-                    let c = simd::simd_cycles(op, elems as u64, arch);
-                    events.simd_lane_ops += simd::lane_ops(op, elems as u64);
-                    let max = clocks.iter().copied().max().unwrap_or(0);
-                    clocks.iter_mut().for_each(|c2| *c2 = max + c);
-                }
-                Instr::Sync => {
-                    let max = clocks.iter().copied().max().unwrap_or(0);
-                    clocks.iter_mut().for_each(|c| *c = max);
-                }
-                Instr::EndLayer => {}
-            }
-        }
-
-        let elapsed = clocks.iter().copied().max().unwrap_or(0);
-        events.elapsed_cycles = elapsed;
-        events.core_cycles = elapsed * arch.n_cores as u64;
-        let stats = LayerStats {
-            name: prep.name.clone(),
-            category: OpCategory::PimConvFc,
-            events,
-            core_cycles: clocks,
-            elapsed,
-        };
-        (stats, acc)
+        engine::run_layer(self, layer, x, functional, self.engine)
     }
 
-    /// Process one Compute chunk (≤ Tm input rows on one core).
-    /// Returns the core-clock advance (max over the chunk's rows).
-    #[allow(clippy::too_many_arguments)]
-    fn compute_chunk(
+    /// Legacy flat-stream interpreter (single thread, original
+    /// interleaved instruction order). The segmented engines are
+    /// property-tested bit-identical against this baseline.
+    pub fn run_pim_layer_interp(
         &self,
-        t: &Tile,
-        a: &Assignment,
-        prep: &crate::compiler::PreparedLayer,
+        layer: &CompiledLayer,
         x: Option<&MatI8>,
-        m_base: usize,
-        m_count: usize,
-        events: &mut EventCounts,
-        mut acc: Option<&mut MatI32>,
-        gathered: &mut Vec<i8>,
-    ) -> u64 {
-        let arch = &self.arch;
-        let comp = arch.compartments;
-        let rows = t.rows();
-        let steps = crate::util::ceil_div(rows, comp);
-        let demand = a.active_cols() as u64;
-        let functional = acc.is_some();
-
-        // Fast analytic path: timing is data-independent without IPU
-        // skipping, so one row's cost is every row's cost.
-        if !arch.input_skipping && !functional {
-            let bits = arch.input_bits as u64;
-            let cycles_per_row = steps as u64 * bits;
-            let full_steps = rows / comp;
-            let tail = rows % comp;
-            // effective cells per bit-cycle (U_act numerator)
-            let eff_cells: u64 = if arch.weight_bit_sparsity {
-                (full_steps as u64 * comp as u64 + tail as u64) * demand / 1
-            } else {
-                // dense: effective = non-zero weight bits actually stored
-                self.dense_effective_cells(t, a, prep)
-            };
-            let mc = m_count as u64;
-            events.macro_cycles += cycles_per_row * mc;
-            events.macro_col_cycles += cycles_per_row * mc * arch.macro_columns as u64;
-            events.active_col_cycles += eff_cells * bits * mc;
-            events.input_buf_reads += steps as u64 * mc;
-            if arch.value_sparsity {
-                events.alloc_switches += rows as u64 * mc;
-            }
-            if arch.weight_bit_sparsity {
-                events.meta_rf_reads += steps as u64 * mc;
-            }
-            events.macs += rows as u64 * a.filters.len() as u64 * mc;
-            return cycles_per_row;
-        }
-
-        let x = x.expect("input required");
-        let kept = &a.kept_rows[t.row_start..t.row_end];
-        let functional_run = acc.is_some();
-        let mut worst = 0u64;
-        // Accumulate per-chunk event totals locally; fold into `events`
-        // once (hot-path: avoids 6 counter writes per row-step).
-        let mut tot_cycles = 0u64;
-        let mut tot_eff = 0u64;
-        for mi in 0..m_count {
-            let m = m_base + mi;
-            let xrow = x.row(m);
-            let mut row_cycles = 0u64;
-            if arch.input_skipping {
-                // IPU: OR-reduce each 16-input group straight off the
-                // gathered stream; no materialized buffer needed unless
-                // we also accumulate functionally.
-                if functional_run {
-                    gathered.clear();
-                    gathered.extend(kept.iter().map(|&k| xrow[k as usize]));
-                }
-                for s in 0..steps {
-                    let lanes = (rows - s * comp).min(comp);
-                    let group = &kept[s * comp..s * comp + lanes];
-                    let occ = group
-                        .iter()
-                        .fold(0u8, |o, &k| o | (xrow[k as usize] as u8));
-                    let beff = u64::from(occ.count_ones());
-                    row_cycles += beff;
-                    let eff = if arch.weight_bit_sparsity {
-                        demand * lanes as u64
-                    } else {
-                        self.dense_step_effective_cells(t, a, prep, s, lanes)
-                    };
-                    tot_eff += eff * beff;
-                }
-            } else {
-                // timing is data-independent: full bit-serial cost
-                let bits = arch.input_bits as u64;
-                row_cycles = steps as u64 * bits;
-                if functional_run {
-                    gathered.clear();
-                    gathered.extend(kept.iter().map(|&k| xrow[k as usize]));
-                }
-                let eff = if arch.weight_bit_sparsity {
-                    demand * rows as u64
-                } else {
-                    self.dense_effective_cells(t, a, prep)
-                };
-                tot_eff += eff * bits;
-            }
-            tot_cycles += row_cycles;
-            worst = worst.max(row_cycles);
-
-            // functional accumulate (fast dot-product path; the DBMU
-            // bit-level path in dbmu.rs is cross-checked in tests)
-            if let Some(acc) = acc.as_deref_mut() {
-                let acc_cols = acc.cols;
-                let acc_row = &mut acc.data[m * acc_cols..(m + 1) * acc_cols];
-                for (ri, &k) in kept.iter().enumerate() {
-                    let xv = gathered[ri] as i32;
-                    if xv == 0 {
-                        continue;
-                    }
-                    let wrow = prep.weights.row(k as usize);
-                    for &f in &a.filters {
-                        acc_row[f] += xv * wrow[f] as i32;
-                    }
-                }
-            }
-        }
-        let mc = m_count as u64;
-        events.macro_cycles += tot_cycles;
-        events.macro_col_cycles += tot_cycles * arch.macro_columns as u64;
-        events.active_col_cycles += tot_eff;
-        events.input_buf_reads += steps as u64 * mc;
-        if arch.input_skipping {
-            events.ipu_detects += steps as u64 * mc;
-        }
-        if arch.weight_bit_sparsity {
-            events.meta_rf_reads += steps as u64 * mc;
-        }
-        if arch.value_sparsity {
-            events.alloc_switches += rows as u64 * mc;
-        }
-        events.macs += rows as u64 * a.filters.len() as u64 * mc;
-        worst
-    }
-
-    /// Effective (non-zero-bit) cells for a whole dense tile, summed
-    /// over row-steps — the U_act numerator per bit-cycle.
-    fn dense_effective_cells(
-        &self,
-        t: &Tile,
-        a: &Assignment,
-        prep: &crate::compiler::PreparedLayer,
-    ) -> u64 {
-        let mut cells = 0u64;
-        for &k in &a.kept_rows[t.row_start..t.row_end] {
-            for &f in &a.filters {
-                cells += (prep.weights.get(k as usize, f) as u8).count_ones() as u64;
-            }
-        }
-        cells
-    }
-
-    /// Same, restricted to the lanes of one row-step.
-    fn dense_step_effective_cells(
-        &self,
-        t: &Tile,
-        a: &Assignment,
-        prep: &crate::compiler::PreparedLayer,
-        step: usize,
-        lanes: usize,
-    ) -> u64 {
-        let comp = self.arch.compartments;
-        let base = t.row_start + step * comp;
-        let mut cells = 0u64;
-        for &k in &a.kept_rows[base..base + lanes] {
-            for &f in &a.filters {
-                cells += (prep.weights.get(k as usize, f) as u8).count_ones() as u64;
-            }
-        }
-        cells
+        functional: bool,
+    ) -> (LayerStats, Option<MatI32>) {
+        engine::run_layer_interp(self, layer, x, functional)
     }
 
     /// Simulate one standalone SIMD layer (dw-conv, pool, ...).
@@ -505,5 +272,23 @@ mod tests {
         let b = m.run_simd_layer("dw", SimdOp::DwConv, 2000);
         assert!(b.elapsed >= 2 * a.elapsed - 1);
         assert_eq!(a.category, OpCategory::DwConv);
+    }
+
+    #[test]
+    fn engine_choice_is_bit_identical() {
+        let sp = SparsityConfig::hybrid(0.5);
+        let arch = ArchConfig::db_pim();
+        let (layer, x) = build(20, 320, 48, sp, &arch, 8);
+        let seq = Machine::with_engine(arch.clone(), Engine::Sequential);
+        let par = Machine::with_engine(arch, Engine::Parallel);
+        let (ss, accs) = seq.run_pim_layer(&layer, Some(&x), true);
+        let (sp2, accp) = par.run_pim_layer(&layer, Some(&x), true);
+        let (si, acci) = par.run_pim_layer_interp(&layer, Some(&x), true);
+        assert_eq!(ss.events, sp2.events);
+        assert_eq!(ss.events, si.events);
+        assert_eq!(ss.core_cycles, sp2.core_cycles);
+        assert_eq!(ss.core_cycles, si.core_cycles);
+        assert_eq!(accs, accp);
+        assert_eq!(accs, acci);
     }
 }

@@ -1,6 +1,13 @@
 //! The DB-PIM cycle-accurate simulator.
 //!
-//! * [`machine`] — instruction-driven core/macro timing + energy engine.
+//! * [`machine`] — the machine façade (arch + energy + engine choice).
+//! * [`core_exec`] — per-core segment executor (clock, events,
+//!   accumulator slice, occupancy cache).
+//! * [`engine`] — barrier scheduler over segmented programs; fans
+//!   phases out over worker threads, bit-identical to the legacy
+//!   flat-stream interpreter it also hosts.
+//! * [`occupancy`] — word-packed bit-plane occupancy precompute for the
+//!   IPU inner loop.
 //! * [`ipu`] — input zero-column detection (bit-level input sparsity).
 //! * [`dbmu`] — bit-level DBMU reference datapath (validation).
 //! * [`simd`] — SIMD-core cost model and functional post-ops.
@@ -12,13 +19,17 @@
 //! (`ArchConfig::dense_baseline()`), exactly like the paper obtained it
 //! by "removing all sparsity support".
 
+pub mod core_exec;
 pub mod dbmu;
+pub mod engine;
 pub mod ipu;
 pub mod machine;
+pub mod occupancy;
 pub mod pipeline;
 pub mod simd;
 pub mod trace;
 
+pub use engine::Engine;
 pub use machine::{LayerStats, Machine, OpCategory};
 
 use crate::arch::ArchConfig;
@@ -113,35 +124,92 @@ impl SimReport {
 /// Perf-mode simulation of a zoo network: weights synthesized +
 /// sparsified per `sparsity`, activations synthesized with ReLU-like
 /// statistics (DESIGN.md §3), exact event/cycle accounting.
+///
+/// Layers are independent jobs in perf mode (weights and activations
+/// are synthesized per layer index), so compile + simulate fans out
+/// across the worker pool; per-layer stats merge back in layer order
+/// and are bit-identical to the sequential walk.
 pub fn simulate_network(
     net: &Network,
     sparsity: SparsityConfig,
     arch: &ArchConfig,
     seed: u64,
 ) -> SimReport {
-    let machine = Machine::new(arch.clone());
-    let compiled = compiler::compile_network(net, sparsity, arch, seed);
-    let mut compiled_iter = compiled.into_iter().peekable();
+    simulate_network_with_engine(net, sparsity, arch, seed, Engine::Parallel)
+}
+
+/// One PIM layer's perf-mode job: compile, synthesize activations when
+/// the IPU needs them, simulate. Deterministic per (seed, idx).
+fn simulate_pim_layer(
+    net: &Network,
+    idx: usize,
+    sparsity: SparsityConfig,
+    machine: &Machine,
+    seed: u64,
+) -> LayerStats {
+    let arch = &machine.arch;
+    let clayer = compiler::compile_network_layer(net, idx, sparsity, arch, seed)
+        .expect("not a PIM layer");
+    let x = arch.input_skipping.then(|| {
+        let m = clayer.prep.m.max(1);
+        MatI8::from_vec(
+            m,
+            clayer.prep.k,
+            crate::models::synthesize_activations(seed ^ ((idx as u64) << 20), m * clayer.prep.k),
+        )
+    });
+    let (stats, _) = machine.run_pim_layer(&clayer, x.as_ref(), false);
+    stats
+}
+
+/// [`simulate_network`] with an explicit engine: `Engine::Parallel`
+/// fans out across layers (each layer's cores then run inline to avoid
+/// nested oversubscription); `Engine::Sequential` is the legacy fully
+/// serial walk. Both produce identical reports.
+pub fn simulate_network_with_engine(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seed: u64,
+    engine: Engine,
+) -> SimReport {
+    // Per-layer machines always run their cores inline here: with
+    // Engine::Parallel the parallelism lives at the layer level (finer
+    // fan-out would oversubscribe the pool), and Engine::Sequential is
+    // the fully serial legacy walk.
+    let machine = Machine::with_engine(arch.clone(), Engine::Sequential);
+    let pim_idx: Vec<usize> = (0..net.layers.len())
+        .filter(|&i| net.layers[i].kind.matmul_dims().is_some())
+        .collect();
+    let mut pim_stats: Vec<Option<LayerStats>> = {
+        let machine = &machine;
+        let stats: Vec<LayerStats> = match engine {
+            Engine::Parallel => {
+                let jobs: Vec<_> = pim_idx
+                    .iter()
+                    .map(|&idx| move || simulate_pim_layer(net, idx, sparsity, machine, seed))
+                    .collect();
+                let workers = pim_idx.len().min(crate::coordinator::default_workers());
+                crate::coordinator::run_parallel(jobs, workers)
+            }
+            Engine::Sequential => pim_idx
+                .iter()
+                .map(|&idx| simulate_pim_layer(net, idx, sparsity, machine, seed))
+                .collect(),
+        };
+        let mut slots: Vec<Option<LayerStats>> = (0..net.layers.len()).map(|_| None).collect();
+        for (&idx, s) in pim_idx.iter().zip(stats) {
+            slots[idx] = Some(s);
+        }
+        slots
+    };
+
     let mut layers = Vec::new();
     let mut totals = EventCounts::default();
-
     for (idx, layer) in net.layers.iter().enumerate() {
         match layer.kind {
             LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
-                let (cidx, clayer) = compiled_iter.next().expect("compiled layer missing");
-                assert_eq!(cidx, idx);
-                let x = arch.input_skipping.then(|| {
-                    let m = clayer.prep.m.max(1);
-                    MatI8::from_vec(
-                        m,
-                        clayer.prep.k,
-                        crate::models::synthesize_activations(
-                            seed ^ ((idx as u64) << 20),
-                            m * clayer.prep.k,
-                        ),
-                    )
-                });
-                let (stats, _) = machine.run_pim_layer(&clayer, x.as_ref(), false);
+                let stats = pim_stats[idx].take().expect("compiled layer missing");
                 totals.add(&stats.events);
                 layers.push(stats);
             }
@@ -260,6 +328,23 @@ mod tests {
         assert!((total - 1.0).abs() < 1e-9);
         assert!(r.total_cycles() > 0);
         assert!(r.u_act() > 0.0);
+    }
+
+    #[test]
+    fn simulate_network_engines_agree() {
+        let net = small_net();
+        let sp = SparsityConfig::hybrid(0.5);
+        let arch = ArchConfig::db_pim();
+        let p = simulate_network_with_engine(&net, sp, &arch, 4, Engine::Parallel);
+        let s = simulate_network_with_engine(&net, sp, &arch, 4, Engine::Sequential);
+        assert_eq!(p.totals, s.totals);
+        assert_eq!(p.layers.len(), s.layers.len());
+        for (a, b) in p.layers.iter().zip(&s.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.core_cycles, b.core_cycles);
+            assert_eq!(a.elapsed, b.elapsed);
+        }
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Bit-plane occupancy precompute for the IPU inner loop.
+//!
+//! The hot path of the row-loop simulation is the per-(row, step)
+//! column-occupancy OR: the IPU ORs the 16 gathered input bytes of a
+//! compartment step and counts the surviving bit columns (ipu.rs).
+//! Instead of re-gathering and OR-folding byte-by-byte for every
+//! (tile, row, step), [`OccupancyTable`] gathers each im2col row's kept
+//! activations once per (layer, assignment), packs the 8 bit-planes
+//! into `u64` words (8 activation bytes per word, little-endian), and
+//! reduces every step with a word-wise OR + horizontal fold. The
+//! per-(row, step) work in the executor then collapses to one cached
+//! byte read + `count_ones`.
+//!
+//! Occupancy bytes are bit-identical to the scalar fold — `u64` OR over
+//! packed bytes distributes over the per-byte OR — so the engines built
+//! on this table stay exactly equivalent to the legacy interpreter.
+
+use crate::tensor::MatI8;
+use crate::util::ceil_div;
+
+/// Reinterpret an `i8` slice as raw bytes (identical layout; the IPU
+/// treats activations as unsigned bit patterns).
+#[inline]
+pub fn i8_as_u8(xs: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 have the same size, alignment and validity.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast(), xs.len()) }
+}
+
+/// OR-fold a byte slice word-wise: 8 bytes per `u64` OR, then a
+/// horizontal fold of the surviving word. Equivalent to
+/// `bytes.iter().fold(0, |o, &b| o | b)`.
+#[inline]
+pub fn or_fold_bytes(bytes: &[u8]) -> u8 {
+    let mut acc = 0u64;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        acc |= u64::from_le_bytes(c.try_into().unwrap());
+    }
+    let mut tail = 0u8;
+    for &b in chunks.remainder() {
+        tail |= b;
+    }
+    acc |= acc >> 32;
+    acc |= acc >> 16;
+    acc |= acc >> 8;
+    tail | (acc as u8)
+}
+
+/// Word-packed gathered activations + per-step occupancy bytes for one
+/// assignment (all M rows), built once per (layer, assignment).
+#[derive(Debug, Clone)]
+pub struct OccupancyTable {
+    /// Assignment index this table was built for (executor cache key).
+    pub assignment: usize,
+    kept_len: usize,
+    /// Row stride in bytes (kept_len rounded up to a whole u64 word).
+    stride: usize,
+    /// Gathered rows, m-major: `bytes[m * stride + i] = x[m][kept[i]]`
+    /// as its raw bit pattern, zero-padded to the stride. Empty when
+    /// built without `keep_gathered` (perf-only IPU runs read nothing
+    /// but `occ`, so the full M × kept matrix would be dead weight).
+    bytes: Vec<u8>,
+    /// Steps (compartment groups) per row; 0 when built without
+    /// occupancy (functional-only use).
+    steps_per_row: usize,
+    /// Per-(m, global step) occupancy byte.
+    occ: Vec<u8>,
+}
+
+impl OccupancyTable {
+    /// Gather + pack all `m_total` rows of `x` for `kept`. `with_occ`
+    /// precomputes the per-step occupancy bytes (IPU enabled);
+    /// `keep_gathered` retains the gathered rows (functional runs need
+    /// the values, perf-only runs don't). `comp` is the compartment
+    /// count (lanes per step).
+    pub fn build(
+        assignment: usize,
+        x: &MatI8,
+        kept: &[u32],
+        comp: usize,
+        m_total: usize,
+        with_occ: bool,
+        keep_gathered: bool,
+    ) -> Self {
+        let kept_len = kept.len();
+        let stride = ceil_div(kept_len.max(1), 8) * 8;
+        let steps_per_row = if with_occ { ceil_div(kept_len, comp) } else { 0 };
+        let mut bytes = vec![0u8; if keep_gathered { m_total * stride } else { 0 }];
+        let mut occ = vec![0u8; m_total * steps_per_row];
+        let mut scratch = vec![0u8; stride];
+        for m in 0..m_total {
+            let xrow = i8_as_u8(x.row(m));
+            let row: &mut [u8] = if keep_gathered {
+                &mut bytes[m * stride..m * stride + kept_len]
+            } else {
+                &mut scratch[..kept_len]
+            };
+            for (dst, &k) in row.iter_mut().zip(kept) {
+                *dst = xrow[k as usize];
+            }
+            if with_occ {
+                let row = &row[..];
+                let occ_row = &mut occ[m * steps_per_row..(m + 1) * steps_per_row];
+                for (s, o) in occ_row.iter_mut().enumerate() {
+                    let start = s * comp;
+                    let lanes = (kept_len - start).min(comp);
+                    *o = or_fold_bytes(&row[start..start + lanes]);
+                }
+            }
+        }
+        Self { assignment, kept_len, stride, bytes, steps_per_row, occ }
+    }
+
+    /// Whether the gathered rows were retained.
+    #[inline]
+    pub fn has_gathered(&self) -> bool {
+        !self.bytes.is_empty()
+    }
+
+    /// Gathered kept activations of row `m` (raw bit patterns). Only
+    /// valid when built with `keep_gathered`.
+    #[inline]
+    pub fn gathered_row(&self, m: usize) -> &[u8] {
+        &self.bytes[m * self.stride..m * self.stride + self.kept_len]
+    }
+
+    /// Occupancy byte of `(row m, global step)` — the OR of the step's
+    /// lanes. Only valid when built `with_occ`.
+    #[inline]
+    pub fn step_occ(&self, m: usize, step: usize) -> u8 {
+        self.occ[m * self.steps_per_row + step]
+    }
+
+    /// Whether per-step occupancy bytes were precomputed.
+    #[inline]
+    pub fn has_occ(&self) -> bool {
+        self.steps_per_row > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn or_fold_matches_scalar_fold() {
+        let mut rng = Rng::new(31);
+        for len in 0..40usize {
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let scalar = bytes.iter().fold(0u8, |o, &b| o | b);
+            assert_eq!(or_fold_bytes(&bytes), scalar, "len {len}");
+        }
+    }
+
+    #[test]
+    fn i8_view_matches_bit_patterns() {
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let group: Vec<i8> = (0..16).map(|_| rng.int8()).collect();
+            // same fold as the scalar IPU definition over `v as u8`
+            let scalar = group.iter().fold(0u8, |o, &v| o | (v as u8));
+            assert_eq!(or_fold_bytes(i8_as_u8(&group)), scalar);
+        }
+        assert_eq!(i8_as_u8(&[-128, -1, 0, 1]), &[0x80, 0xFF, 0, 1]);
+    }
+
+    #[test]
+    fn table_matches_direct_gather_and_fold() {
+        let mut rng = Rng::new(91);
+        for _ in 0..20 {
+            let m_total = 1 + rng.below(6) as usize;
+            let k = 20 + rng.below(200) as usize;
+            let comp = 16;
+            let x = MatI8::from_vec(m_total, k, (0..m_total * k).map(|_| rng.int8()).collect());
+            // a random strictly-ascending kept subset
+            let kept: Vec<u32> =
+                (0..k as u32).filter(|_| rng.below(3) > 0).collect();
+            if kept.is_empty() {
+                continue;
+            }
+            let t = OccupancyTable::build(0, &x, &kept, comp, m_total, true, true);
+            assert!(t.has_occ() && t.has_gathered());
+            // occ-only build (perf mode) agrees and drops the bytes
+            let t_occ = OccupancyTable::build(0, &x, &kept, comp, m_total, true, false);
+            assert!(!t_occ.has_gathered());
+            for m in 0..m_total {
+                for s in 0..crate::util::ceil_div(kept.len(), comp) {
+                    assert_eq!(t_occ.step_occ(m, s), t.step_occ(m, s));
+                }
+            }
+            for m in 0..m_total {
+                let gathered: Vec<u8> =
+                    kept.iter().map(|&kk| x.get(m, kk as usize) as u8).collect();
+                assert_eq!(t.gathered_row(m), &gathered[..]);
+                let steps = crate::util::ceil_div(kept.len(), comp);
+                for s in 0..steps {
+                    let start = s * comp;
+                    let lanes = (kept.len() - start).min(comp);
+                    let want = gathered[start..start + lanes]
+                        .iter()
+                        .fold(0u8, |o, &b| o | b);
+                    assert_eq!(t.step_occ(m, s), want, "m {m} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn table_without_occ_still_gathers() {
+        let x = MatI8::from_vec(2, 4, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let t = OccupancyTable::build(3, &x, &[0, 2, 3], 16, 2, false, true);
+        assert!(!t.has_occ());
+        assert!(t.has_gathered());
+        assert_eq!(t.assignment, 3);
+        assert_eq!(t.gathered_row(0), &[1, 3, 4]);
+        assert_eq!(t.gathered_row(1), &[5, 7, 8]);
+    }
+}

@@ -10,13 +10,16 @@
 //!   shapes/sparsities/architectures
 //! * conservation: IPU can only reduce cycles; value pruning can only
 //!   reduce stored rows; energy is monotone in event counts
+//! * equivalence: the parallel segmented engine is bit-identical
+//!   (cycles, events, accumulators) to the sequential segmented engine
+//!   and to the legacy flat-stream interpreter
 
 use dbpim::arch::ArchConfig;
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
 use dbpim::isa::Instr;
 use dbpim::models::synthesize_weights;
 use dbpim::quant;
-use dbpim::sim::Machine;
+use dbpim::sim::{Engine, Machine};
 use dbpim::tensor::{matmul_i8, MatI8};
 use dbpim::util::{check_cases, Rng};
 
@@ -71,6 +74,59 @@ fn prop_functional_equals_reference() {
                 "mismatch on {} m{} k{} n{}",
                 arch.name, layer.prep.m, layer.prep.k, layer.prep.n
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engines_bit_identical_to_legacy_interp() {
+    // The acceptance invariant of the segmented-program refactor: for
+    // random architectures (IPU on/off, dense baseline, 1–8 cores),
+    // sparsity configs and shapes, in both perf and functional mode,
+    // the parallel engine, the sequential engine and the legacy flat
+    // interpreter agree on every LayerStats field and on the exact
+    // accumulators.
+    check_cases(30, |rng| {
+        let mut arch = random_arch(rng);
+        arch.n_cores = 1 + rng.below(8) as usize;
+        if rng.below(4) == 0 {
+            // exercise IPU-flag combinations the presets don't cover
+            arch.input_skipping = !arch.input_skipping;
+        }
+        let functional = rng.below(2) == 0;
+        let (layer, x) = random_layer(rng, &arch);
+        let seq = Machine::with_engine(arch.clone(), Engine::Sequential);
+        let par = Machine::with_engine(arch.clone(), Engine::Parallel);
+        let (s_int, a_int) = seq.run_pim_layer_interp(&layer, Some(&x), functional);
+        let (s_seq, a_seq) = seq.run_pim_layer(&layer, Some(&x), functional);
+        let (s_par, a_par) = par.run_pim_layer(&layer, Some(&x), functional);
+        for (label, s, a) in [("sequential", &s_seq, &a_seq), ("parallel", &s_par, &a_par)] {
+            if s.events != s_int.events {
+                return Err(format!(
+                    "{label} events diverge on {} cores={} fn={functional}:\n{:?}\nvs\n{:?}",
+                    arch.name, arch.n_cores, s.events, s_int.events
+                ));
+            }
+            if s.core_cycles != s_int.core_cycles {
+                return Err(format!(
+                    "{label} core clocks diverge on {} cores={}: {:?} vs {:?}",
+                    arch.name, arch.n_cores, s.core_cycles, s_int.core_cycles
+                ));
+            }
+            if s.elapsed != s_int.elapsed {
+                return Err(format!("{label} makespan diverges on {}", arch.name));
+            }
+            if *a != a_int {
+                return Err(format!("{label} accumulators diverge on {}", arch.name));
+            }
+        }
+        if functional {
+            // and all of them equal the exact reference matmul
+            let want = matmul_i8(&x, &layer.prep.weights);
+            if a_int.as_ref() != Some(&want) {
+                return Err(format!("legacy interp != reference matmul on {}", arch.name));
+            }
         }
         Ok(())
     });
