@@ -11,7 +11,7 @@ use dbpim::benchlib::{bench, f2, pct, print_table};
 use dbpim::coordinator::experiments;
 
 fn main() {
-    let rows = experiments::fig11(42);
+    let (rows, cache) = experiments::fig11_with_stats(42);
     print_table(
         "Fig. 11 — speedup & energy vs dense digital PIM baseline",
         &["network", "weight sparsity", "speedup", "energy saving"],
@@ -39,6 +39,12 @@ fn main() {
     for r in &rows {
         assert!(r.energy_saving > 0.6 && r.energy_saving < 0.95, "{r:?}");
     }
+
+    // the dense baseline is shared by all four sparsity points of each
+    // network — the sweep-wide compile cache must convert those repeats
+    // into hits (3 of its 4 compiles per network-layer)
+    println!("compile cache: {}", cache.summary());
+    assert!(cache.hits > 0, "fig11 sweep produced no compile-cache hits");
 
     bench("fig11_one_point_vgg19_90", 0, 3, || {
         let net = dbpim::models::vgg19();

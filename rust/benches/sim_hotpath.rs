@@ -9,7 +9,12 @@
 //!   flat-stream interpreter (the pre-refactor baseline)
 //! * `analytic` — the data-independent fast path
 //! * `functional` — accumulate path (MiniNet-style verification runs)
+//! * `step_major_occ_scan` — the batched step-major occupancy kernel in
+//!   isolation (sim::kernels::scan_tile_occupancy)
+//! * `gemm_accumulate` — the gathered-weight micro-GEMM in isolation
 //! * `compile`  — prune + FTA + pack + codegen for a VGG-sized layer
+//! * `compile_cached_sweep` — a fig11-shaped repeated compile through
+//!   the sweep-wide CompileCache (1 miss + 3 hits per layer)
 //! * `e2e`      — one full ResNet18 perf simulation (layer-parallel)
 //!
 //! ```bash
@@ -89,6 +94,55 @@ fn main() {
         machine.run_pim_layer(&layer, Some(&x), true)
     }));
 
+    // --- batched kernels in isolation ---
+    {
+        use dbpim::sim::{kernels, occupancy::OccupancyTable};
+        use dbpim::util::ceil_div;
+        let comp = arch.compartments;
+        let a0 = &layer.assignments[0];
+        // perf-mode table (occ only) + the per-tile scan inputs, hoisted
+        // so the bench times nothing but the kernel walk
+        let table = OccupancyTable::build(0, &x, &a0.kept_rows, comp, m, true, false);
+        let scans: Vec<(u32, usize, Vec<u64>)> = layer
+            .tiles
+            .iter()
+            .filter(|t| t.assignment == 0)
+            .map(|t| {
+                let steps = ceil_div(t.rows(), comp);
+                let demand = a0.active_cols() as u64;
+                let step_eff: Vec<u64> = (0..steps)
+                    .map(|s| demand * (t.rows() - s * comp).min(comp) as u64)
+                    .collect();
+                (t.id, t.row_start / comp, step_eff)
+            })
+            .collect();
+        samples.push(bench("step_major_occ_scan", 2, iters(300, 20), || {
+            let mut acc = 0u64;
+            for (id, base_step, step_eff) in &scans {
+                let scan = kernels::scan_tile_occupancy(&table, *id, *base_step, step_eff);
+                acc = acc.wrapping_add(scan.eff_total);
+            }
+            acc
+        }));
+
+        // functional-mode table (gathered rows) + the dense micro-GEMM
+        // over one assignment's weight block, all M rows
+        let table_f = OccupancyTable::build(0, &x, &a0.kept_rows, comp, m, false, true);
+        let nf = a0.filters.len();
+        let mut out = vec![0i32; m * nf];
+        samples.push(bench("gemm_accumulate", 1, iters(50, 5), || {
+            out.fill(0);
+            for mi in 0..m {
+                kernels::gemm_accumulate(
+                    &mut out[mi * nf..(mi + 1) * nf],
+                    table_f.gathered_row(mi),
+                    &a0.wblock,
+                );
+            }
+            out[0]
+        }));
+    }
+
     // --- compiler ---
     let arch3 = ArchConfig::db_pim();
     samples.push(bench("compile_layer_vgg_sized", 1, iters(10, 2), || {
@@ -98,6 +152,22 @@ fn main() {
             quant::requant_mul(0.01), true, None,
         );
         compile_layer(prep, &arch3)
+    }));
+
+    // --- sweep-wide compile cache: fig11-shaped repetition (the dense
+    // baseline recurs at every sweep point → 1 miss + 3 hits/layer) ---
+    samples.push(bench("compile_cached_sweep", 0, iters(5, 2), || {
+        let cache = dbpim::compiler::CompileCache::new();
+        let net = dbpim::models::resnet18();
+        let arch = ArchConfig::dense_baseline();
+        for _ in 0..4 {
+            for idx in 0..net.layers.len() {
+                let _ = cache.get_or_compile(&net, idx, SparsityConfig::dense(), &arch, 42);
+            }
+        }
+        let stats = cache.stats();
+        assert!(stats.hits == 3 * stats.misses, "unexpected hit pattern: {stats:?}");
+        stats.hits
     }));
 
     // --- end-to-end perf sim (layer-parallel by default) ---

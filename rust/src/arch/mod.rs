@@ -8,7 +8,7 @@
 //! DAC'24 predecessor configuration (Tab. III).
 
 /// How assignments are spread over the PIM cores.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SchedulePolicy {
     /// Greedy longest-processing-time balancing (default).
     Lpt,

@@ -1,0 +1,314 @@
+//! Sweep-wide compilation cache.
+//!
+//! The experiment drivers (coordinator::experiments) sweep
+//! (network × sparsity × architecture) grids in which many points share
+//! identical `(arch knobs, layer shape, sparsity config, seed)`
+//! combinations — most prominently the dense baseline a whole figure is
+//! normalized against, which the pre-cache drivers recompiled from
+//! scratch at every sweep point. [`CompileCache`] is a content-keyed
+//! memo of compiled layers: the key hashes every input that reaches the
+//! prepare → pack → tile → schedule → codegen pipeline, so a hit is
+//! guaranteed to be the byte-identical artifact (compilation is
+//! deterministic per key — DESIGN.md §3).
+//!
+//! The cache is `Arc`-shared across a sweep's `run_parallel` jobs and
+//! mutex-sharded so jobs resolving different layers don't serialize on
+//! one lock. Compilation happens *outside* the shard lock: two racing
+//! jobs may compile the same key once each, which is harmless (the
+//! artifacts are identical; the first insert wins) and keeps a long
+//! compile from blocking every other job mapped to the shard.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::{ArchConfig, SchedulePolicy};
+use crate::models::Network;
+
+use super::{compile_network_layer, CompiledLayer, SparsityConfig};
+
+/// Everything that determines a compiled layer. Arch fields that only
+/// affect *simulation* of the artifact (clock frequency, SIMD lane
+/// count, buffer capacities) are deliberately excluded; every knob the
+/// compiler pipeline reads is included.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CompileKey {
+    network: String,
+    layer_idx: usize,
+    /// The layer's actual matmul shape and conv geometry, so two
+    /// networks that merely share a name (e.g. programmatically built
+    /// variants) can never alias each other's artifacts.
+    m: usize,
+    k: usize,
+    n: usize,
+    /// (kernel, stride, pad, in_hw) for conv layers, zeros for FC.
+    conv_geom: (usize, usize, usize, usize),
+    seed: u64,
+    /// `SparsityConfig::value_sparsity` as raw bits (f64 is not `Hash`).
+    value_sparsity_bits: u64,
+    fta: bool,
+    n_cores: usize,
+    macros_per_core: usize,
+    compartments: usize,
+    rows_per_compartment: usize,
+    macro_columns: usize,
+    input_bits: usize,
+    alpha: usize,
+    tile_load_cycles: u64,
+    weight_bit_sparsity: bool,
+    value_sparsity: bool,
+    input_skipping: bool,
+    merge_groups: bool,
+    schedule: SchedulePolicy,
+}
+
+impl CompileKey {
+    fn new(net: &Network, idx: usize, sp: SparsityConfig, arch: &ArchConfig, seed: u64) -> Self {
+        let kind = &net.layers[idx].kind;
+        let (m, k, n) = kind.matmul_dims().expect("PIM layer");
+        let conv_geom = match *kind {
+            crate::models::LayerKind::Conv { kernel, stride, pad, in_hw, .. } => {
+                (kernel, stride, pad, in_hw)
+            }
+            _ => (0, 0, 0, 0),
+        };
+        Self {
+            network: net.name.clone(),
+            layer_idx: idx,
+            m,
+            k,
+            n,
+            conv_geom,
+            seed,
+            value_sparsity_bits: sp.value_sparsity.to_bits(),
+            fta: sp.fta,
+            n_cores: arch.n_cores,
+            macros_per_core: arch.macros_per_core,
+            compartments: arch.compartments,
+            rows_per_compartment: arch.rows_per_compartment,
+            macro_columns: arch.macro_columns,
+            input_bits: arch.input_bits,
+            alpha: arch.alpha,
+            tile_load_cycles: arch.tile_load_cycles,
+            weight_bit_sparsity: arch.weight_bit_sparsity,
+            value_sparsity: arch.value_sparsity,
+            input_skipping: arch.input_skipping,
+            merge_groups: arch.merge_groups,
+            schedule: arch.schedule,
+        }
+    }
+}
+
+/// Shard count: enough to keep 16 sweep workers from colliding.
+const SHARDS: usize = 16;
+
+type Shard = Mutex<HashMap<CompileKey, Arc<CompiledLayer>>>;
+
+/// Content-keyed, mutex-sharded memo of compiled layers, shared across
+/// the jobs of one experiment sweep (`Arc<CompileCache>`).
+#[derive(Debug)]
+pub struct CompileCache {
+    shards: Vec<Shard>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for CompileCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CompileCache {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &CompileKey) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Compile (or fetch) the PIM layer at `idx` of `net`. Returns
+    /// `None` for non-PIM layers, mirroring
+    /// [`compile_network_layer`]. A miss counts one actual compile.
+    pub fn get_or_compile(
+        &self,
+        net: &Network,
+        idx: usize,
+        sparsity: SparsityConfig,
+        arch: &ArchConfig,
+        seed: u64,
+    ) -> Option<Arc<CompiledLayer>> {
+        net.layers[idx].kind.matmul_dims()?;
+        let key = CompileKey::new(net, idx, sparsity, arch, seed);
+        let shard = self.shard(&key);
+        if let Some(hit) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Arc::clone(hit));
+        }
+        // Compile outside the lock; a racing duplicate compile of the
+        // same key is deterministic, so whichever insert lands first is
+        // authoritative and the loser's artifact is dropped.
+        let compiled = Arc::new(compile_network_layer(net, idx, sparsity, arch, seed)?);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = shard.lock().unwrap();
+        let entry = map.entry(key).or_insert(compiled);
+        Some(Arc::clone(entry))
+    }
+
+    /// Snapshot of the hit/miss counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Hit/miss counters of one sweep (a miss is an actual compile).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    /// One-line driver-summary form: "3 hits / 5 misses (37.5% hit rate)".
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hits / {} misses ({:.1}% hit rate)",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{Layer, LayerKind, Network};
+
+    fn tiny_net() -> Network {
+        Network {
+            name: "tiny".into(),
+            input_hw: 4,
+            input_ch: 8,
+            layers: vec![
+                Layer {
+                    name: "c1".into(),
+                    kind: LayerKind::Conv {
+                        in_ch: 8,
+                        out_ch: 16,
+                        kernel: 3,
+                        stride: 1,
+                        pad: 1,
+                        in_hw: 4,
+                    },
+                },
+                Layer { name: "r".into(), kind: LayerKind::Act { elems: 256 } },
+                Layer { name: "fc".into(), kind: LayerKind::Fc { in_features: 256, out_features: 8 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits_and_shares_the_artifact() {
+        let cache = CompileCache::new();
+        let net = tiny_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.5);
+        let a = cache.get_or_compile(&net, 0, sp, &arch, 7).unwrap();
+        let b = cache.get_or_compile(&net, 0, sp, &arch, 7).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the shared artifact");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn distinct_keys_miss() {
+        let cache = CompileCache::new();
+        let net = tiny_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.5);
+        cache.get_or_compile(&net, 0, sp, &arch, 7).unwrap();
+        // different seed, sparsity, arch knob, layer: all distinct keys
+        cache.get_or_compile(&net, 0, sp, &arch, 8).unwrap();
+        cache.get_or_compile(&net, 0, SparsityConfig::hybrid(0.6), &arch, 7).unwrap();
+        cache.get_or_compile(&net, 0, sp, &ArchConfig::dense_baseline(), 7).unwrap();
+        cache.get_or_compile(&net, 2, sp, &arch, 7).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 5 });
+    }
+
+    #[test]
+    fn same_name_different_shape_does_not_alias() {
+        // two networks sharing a name must never share artifacts: the
+        // key carries the layer's actual shape, not just (name, idx)
+        let cache = CompileCache::new();
+        let a = tiny_net();
+        let mut b = tiny_net();
+        b.layers[2] = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc { in_features: 256, out_features: 24 },
+        };
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::dense();
+        let ca = cache.get_or_compile(&a, 2, sp, &arch, 1).unwrap();
+        let cb = cache.get_or_compile(&b, 2, sp, &arch, 1).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 2 });
+        assert_eq!(ca.prep.n, 8);
+        assert_eq!(cb.prep.n, 24);
+    }
+
+    #[test]
+    fn cached_artifact_equals_fresh_compile() {
+        let cache = CompileCache::new();
+        let net = tiny_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.4);
+        let cached = cache.get_or_compile(&net, 2, sp, &arch, 3).unwrap();
+        let fresh = compile_network_layer(&net, 2, sp, &arch, 3).unwrap();
+        assert_eq!(cached.assignments, fresh.assignments);
+        assert_eq!(cached.tiles, fresh.tiles);
+        assert_eq!(cached.instrs, fresh.instrs);
+        assert_eq!(cached.program, fresh.program);
+    }
+
+    #[test]
+    fn non_pim_layers_return_none_without_counting() {
+        let cache = CompileCache::new();
+        let net = tiny_net();
+        assert!(cache
+            .get_or_compile(&net, 1, SparsityConfig::dense(), &ArchConfig::db_pim(), 1)
+            .is_none());
+        assert_eq!(cache.stats().lookups(), 0);
+    }
+
+    #[test]
+    fn stats_formatting() {
+        let s = CacheStats { hits: 3, misses: 5 };
+        assert_eq!(s.lookups(), 8);
+        assert!((s.hit_rate() - 0.375).abs() < 1e-12);
+        assert_eq!(s.summary(), "3 hits / 5 misses (37.5% hit rate)");
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

@@ -18,7 +18,13 @@
 //! 5. **codegen** — emit the segmented per-core [`Program`] (one
 //!    barrier-free `Segment` per core, closed by Sync/EndLayer); the
 //!    flat LoadTile/Compute/Store/Sync stream is its flattening.
+//!
+//! The whole pipeline is deterministic per
+//! `(arch knobs, layer, sparsity, seed)`; [`cache::CompileCache`]
+//! memoizes it sweep-wide so the experiment drivers compile each
+//! distinct combination once instead of once per sweep point.
 
+pub mod cache;
 pub mod packing;
 pub mod program;
 
@@ -31,6 +37,7 @@ use crate::quant;
 use crate::tensor::{ConvGeom, MatI8};
 use crate::util::round_up;
 
+pub use cache::{CacheStats, CompileCache};
 pub use packing::{Assignment, Tile};
 pub use program::{Barrier, Phase, Program};
 

@@ -34,6 +34,13 @@ pub struct Assignment {
     pub kept_rows: Vec<u32>,
     /// Core this assignment is scheduled on.
     pub core: usize,
+    /// Compile-time gathered weight block: `[kept_rows × filters]`
+    /// row-major i8, `wblock[ri * filters.len() + fi] =
+    /// weights[kept_rows[ri]][filters[fi]]` — the dense, contiguous
+    /// GEMM operand of the simulator's functional accumulate
+    /// (sim::kernels::gemm_accumulate). Filled once per layer after
+    /// merging/scheduling settles the filter set.
+    pub wblock: Vec<i8>,
 }
 
 impl Assignment {
@@ -98,6 +105,7 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
                         cols_per_filter: std::mem::take(&mut cols),
                         kept_rows: kept_rows.clone(),
                         core: 0,
+                        wblock: Vec::new(),
                     });
                     demand = 0;
                 }
@@ -111,6 +119,7 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
                 cols_per_filter: cols,
                 kept_rows,
                 core: 0,
+                wblock: Vec::new(),
             });
         } else {
             // dense mapping: pairs of filters, 8 bit-columns each
@@ -122,6 +131,7 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
                     cols_per_filter: vec![arch.input_bits as u8; chunk.len()],
                     kept_rows: kept_rows.clone(),
                     core: 0,
+                    wblock: Vec::new(),
                 });
             }
         }
@@ -146,6 +156,17 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
         }
     }
 
+    // Gather each assignment's dense weight block now that merging and
+    // scheduling have settled the filter sets (the simulator's
+    // functional accumulate runs a contiguous micro-GEMM over it
+    // instead of an indirect gather per MAC). Perf-only runs never read
+    // it; the cost is one extra ~K×N i8 copy of the layer's weights,
+    // accepted so the block is compile-time state shared by every
+    // executor and cache consumer.
+    for a in &mut assignments {
+        a.wblock = gather_weight_block(prep, &a.kept_rows, &a.filters);
+    }
+
     // K tiling: Tk1 × Tk2 row slots per macro.
     let slots = arch.k_slots();
     let mut tiles = Vec::new();
@@ -160,6 +181,19 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
         }
     }
     (assignments, tiles)
+}
+
+/// Gather the `[kept × filters]` row-major dense weight block of one
+/// assignment from the prepared layer's [K, N] matrix.
+pub fn gather_weight_block(prep: &PreparedLayer, kept: &[u32], filters: &[usize]) -> Vec<i8> {
+    let mut w = Vec::with_capacity(kept.len() * filters.len());
+    for &k in kept {
+        let row = prep.weights.row(k as usize);
+        for &f in filters {
+            w.push(row[f]);
+        }
+    }
+    w
 }
 
 /// First-fit-decreasing merge of column-compatible assignments.
@@ -329,6 +363,28 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s), "tile missing from partition");
+    }
+
+    #[test]
+    fn wblock_gathers_kept_rows_by_filter_slot() {
+        for arch in [ArchConfig::db_pim(), ArchConfig::dense_baseline()] {
+            let p = prep(300, 32, SparsityConfig::hybrid(0.5), &arch);
+            let (asg, _) = pack_layer(&p, &arch);
+            for a in &asg {
+                let nf = a.filters.len();
+                assert_eq!(a.wblock.len(), a.kept_rows.len() * nf);
+                for (ri, &k) in a.kept_rows.iter().enumerate() {
+                    for (fi, &f) in a.filters.iter().enumerate() {
+                        assert_eq!(
+                            a.wblock[ri * nf + fi],
+                            p.weights.get(k as usize, f),
+                            "row {k} filter {f} on {}",
+                            arch.name
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,9 +9,17 @@
 //! call), while drivers without an outer fan-out (fig13) parallelize
 //! across layers instead. Results are bit-identical either way; set
 //! `DBPIM_ENGINE=sequential|parallel` to override for A/B timing.
+//!
+//! Every sweep driver shares one [`CompileCache`] across its jobs, so
+//! `(arch, layer, sparsity, seed)` combinations repeated across sweep
+//! points — e.g. fig11's dense baseline, identical at all four sparsity
+//! points — compile once; the `*_with_stats` variants surface the
+//! hit/miss counters for the driver summaries.
+
+use std::sync::Arc;
 
 use crate::arch::ArchConfig;
-use crate::compiler::SparsityConfig;
+use crate::compiler::{CacheStats, CompileCache, SparsityConfig};
 use crate::json::{arr, num, obj, str_, Value};
 use crate::models::{self, Network};
 use crate::sim::{self, Engine, OpCategory, SimReport};
@@ -26,9 +34,18 @@ fn env_engine() -> Option<Engine> {
 
 /// Simulation nested inside an outer `run_parallel` fan-out: serial by
 /// default — the (network × config) jobs already saturate the pool.
-fn simulate(net: &Network, sp: SparsityConfig, arch: &ArchConfig, seed: u64) -> SimReport {
+/// Compilation goes through the sweep's shared [`CompileCache`], so
+/// combinations repeated across sweep points (most prominently the
+/// dense baseline every figure normalizes against) compile once.
+fn simulate(
+    net: &Network,
+    sp: SparsityConfig,
+    arch: &ArchConfig,
+    seed: u64,
+    cache: &CompileCache,
+) -> SimReport {
     let engine = env_engine().unwrap_or(Engine::Sequential);
-    sim::simulate_network_with_engine(net, sp, arch, seed, engine)
+    sim::simulate_network_cached(net, sp, arch, seed, engine, cache)
 }
 
 /// Top-level simulation (no outer fan-out): parallel across layers.
@@ -53,24 +70,35 @@ pub struct Fig11Row {
 /// IPU disabled (paper: "disable dynamic skipping of input columns"),
 /// conv/FC layers only.
 pub fn fig11(seed: u64) -> Vec<Fig11Row> {
+    fig11_with_stats(seed).0
+}
+
+/// [`fig11`] plus the sweep's compile-cache counters. The dense
+/// baseline is identical across the four sparsity points of each
+/// network, so 3 of its 4 compiles per (network, layer) are hits —
+/// a 37.5% hit rate by construction.
+pub fn fig11_with_stats(seed: u64) -> (Vec<Fig11Row>, CacheStats) {
     let nets = ["vgg19", "resnet18", "mobilenet_v2"];
     // value sparsity v + FTA (75% floor) ⇒ total = 1 - (1-v)/4
     let points = [(0.0, 0.75), (0.2, 0.80), (0.4, 0.85), (0.6, 0.90)];
     let arch = ArchConfig::weights_only();
     let base_arch = ArchConfig::dense_baseline();
+    let cache = Arc::new(CompileCache::new());
 
     let jobs: Vec<Box<dyn FnOnce() -> Fig11Row + Send>> = nets
         .iter()
         .flat_map(|&name| {
             let arch = &arch;
             let base_arch = &base_arch;
+            let cache = &cache;
             points.iter().map(move |&(v, total)| {
                 let arch = arch.clone();
                 let base_arch = base_arch.clone();
+                let cache = Arc::clone(cache);
                 Box::new(move || {
                     let net = models::by_name(name).unwrap();
-                    let r = simulate(&net, SparsityConfig::hybrid(v), &arch, seed);
-                    let b = simulate(&net, SparsityConfig::dense(), &base_arch, seed);
+                    let r = simulate(&net, SparsityConfig::hybrid(v), &arch, seed, &cache);
+                    let b = simulate(&net, SparsityConfig::dense(), &base_arch, seed, &cache);
                     Fig11Row {
                         network: name.to_string(),
                         total_sparsity: total,
@@ -82,7 +110,8 @@ pub fn fig11(seed: u64) -> Vec<Fig11Row> {
             })
         })
         .collect();
-    run_parallel(jobs, super::default_workers())
+    let rows = run_parallel(jobs, super::default_workers());
+    (rows, cache.stats())
 }
 
 fn pim_speedup(r: &SimReport, b: &SimReport) -> f64 {
@@ -121,6 +150,11 @@ pub struct Fig12Row {
 /// Fig. 12: bit-level / value-level / hybrid vs dense baseline,
 /// end-to-end (SIMD ops included) on all five networks.
 pub fn fig12(seed: u64) -> Vec<Fig12Row> {
+    fig12_with_stats(seed).0
+}
+
+/// [`fig12`] plus the sweep's compile-cache counters.
+pub fn fig12_with_stats(seed: u64) -> (Vec<Fig12Row>, CacheStats) {
     let configs: Vec<(&'static str, ArchConfig, SparsityConfig)> = vec![
         ("bit", ArchConfig::bit_only(), SparsityConfig { value_sparsity: 0.0, fta: true }),
         ("value", ArchConfig::value_only(), SparsityConfig { value_sparsity: 0.6, fta: false }),
@@ -128,18 +162,20 @@ pub fn fig12(seed: u64) -> Vec<Fig12Row> {
     ];
     let nets: Vec<Network> = models::zoo();
     let base_arch = ArchConfig::dense_baseline();
+    let cache = Arc::new(CompileCache::new());
 
     let jobs: Vec<Box<dyn FnOnce() -> Vec<Fig12Row> + Send>> = nets
         .into_iter()
         .map(|net| {
             let configs = configs.clone();
             let base_arch = base_arch.clone();
+            let cache = Arc::clone(&cache);
             Box::new(move || {
-                let base = simulate(&net, SparsityConfig::dense(), &base_arch, seed);
+                let base = simulate(&net, SparsityConfig::dense(), &base_arch, seed, &cache);
                 configs
                     .iter()
                     .map(|(label, arch, sp)| {
-                        let r = simulate(&net, *sp, arch, seed);
+                        let r = simulate(&net, *sp, arch, seed, &cache);
                         Fig12Row {
                             network: net.name.clone(),
                             approach: label,
@@ -151,7 +187,8 @@ pub fn fig12(seed: u64) -> Vec<Fig12Row> {
             }) as Box<dyn FnOnce() -> Vec<Fig12Row> + Send>
         })
         .collect();
-    run_parallel(jobs, super::default_workers()).into_iter().flatten().collect()
+    let rows = run_parallel(jobs, super::default_workers()).into_iter().flatten().collect();
+    (rows, cache.stats())
 }
 
 /// Fig. 13 row: execution-time share per op category.
@@ -211,14 +248,21 @@ pub struct Table2 {
 
 /// Table II: measured utilization + architectural peak throughput.
 pub fn table2(seed: u64) -> Table2 {
+    table2_with_stats(seed).0
+}
+
+/// [`table2`] plus the sweep's compile-cache counters.
+pub fn table2_with_stats(seed: u64) -> (Table2, CacheStats) {
     let arch = ArchConfig::db_pim();
     let nets = models::zoo();
+    let cache = Arc::new(CompileCache::new());
     let jobs: Vec<Box<dyn FnOnce() -> (String, f64) + Send>> = nets
         .into_iter()
         .map(|net| {
             let arch = arch.clone();
+            let cache = Arc::clone(&cache);
             Box::new(move || {
-                let r = simulate(&net, SparsityConfig::hybrid(0.6), &arch, seed);
+                let r = simulate(&net, SparsityConfig::hybrid(0.6), &arch, seed, &cache);
                 (net.name.clone(), r.u_act())
             }) as Box<dyn FnOnce() -> (String, f64) + Send>
         })
@@ -227,7 +271,7 @@ pub fn table2(seed: u64) -> Table2 {
     let p1 = stats::peak_throughput(&arch, Some(1));
     let p2 = stats::peak_throughput(&arch, Some(2));
     let pd = stats::peak_throughput(&arch, None);
-    Table2 {
+    let t = Table2 {
         u_act,
         peak_tops_phi1: p1.tops,
         peak_gops_per_macro_phi1: p1.gops_per_macro,
@@ -235,7 +279,8 @@ pub fn table2(seed: u64) -> Table2 {
         dense_gops_per_macro: pd.gops_per_macro,
         total_macros: arch.total_macros(),
         pim_kb: arch.pim_capacity_kb(),
-    }
+    };
+    (t, cache.stats())
 }
 
 /// Table III row: on-chip execution time (std/pw-conv + FC only).
@@ -249,28 +294,38 @@ pub struct Table3Row {
 
 /// Table III: DAC'24 config vs this work's bit-level and hybrid modes.
 pub fn table3(seed: u64) -> Vec<Table3Row> {
+    table3_with_stats(seed).0
+}
+
+/// [`table3`] plus the sweep's compile-cache counters.
+pub fn table3_with_stats(seed: u64) -> (Vec<Table3Row>, CacheStats) {
     let nets = models::zoo();
+    let cache = Arc::new(CompileCache::new());
     let jobs: Vec<Box<dyn FnOnce() -> Table3Row + Send>> = nets
         .into_iter()
         .map(|net| {
+            let cache = Arc::clone(&cache);
             Box::new(move || {
                 let dac = simulate(
                     &net,
                     SparsityConfig { value_sparsity: 0.0, fta: true },
                     &ArchConfig::dac24(),
                     seed,
+                    &cache,
                 );
                 let bit = simulate(
                     &net,
                     SparsityConfig { value_sparsity: 0.0, fta: true },
                     &ArchConfig::bit_only(),
                     seed,
+                    &cache,
                 );
                 let hyb = simulate(
                     &net,
                     SparsityConfig::hybrid(0.6),
                     &ArchConfig::db_pim(),
                     seed,
+                    &cache,
                 );
                 Table3Row {
                     network: net.name.clone(),
@@ -281,7 +336,8 @@ pub fn table3(seed: u64) -> Vec<Table3Row> {
             }) as Box<dyn FnOnce() -> Table3Row + Send>
         })
         .collect();
-    run_parallel(jobs, super::default_workers())
+    let rows = run_parallel(jobs, super::default_workers());
+    (rows, cache.stats())
 }
 
 /// Fig. 3 data (both panels) for all five networks.

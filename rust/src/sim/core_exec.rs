@@ -3,15 +3,21 @@
 //! A [`CoreExecutor`] owns everything one PIM core touches while
 //! executing a barrier-free instruction segment: its clock, its event
 //! counters, its slice of the functional accumulators ([`CoreAcc`] —
-//! the filter columns of the core's assignments, disjoint across cores
-//! by construction of the packing), and a cached [`OccupancyTable`] for
-//! the assignment currently resident. Because no shared state is
-//! mutated between barriers, segments of one phase can execute on
-//! worker threads and merge deterministically (sim::engine).
+//! one dense block per assignment scheduled on the core, filter columns
+//! disjoint across cores by construction of the packing), a cached
+//! [`OccupancyTable`] for the assignment currently resident, and a
+//! cached [`TileScan`] for the tile currently being walked. Because no
+//! shared state is mutated between barriers, segments of one phase can
+//! execute on worker threads and merge deterministically (sim::engine).
 //!
-//! The timing/event semantics are an exact port of the original
-//! single-thread interpreter loop (machine.rs pre-refactor, DESIGN.md
-//! §6): every engine built on this executor is bit-identical to it.
+//! The hot loops live in [`super::kernels`]: IPU timing is a step-major
+//! word-batched occupancy scan computed once per tile (Compute chunks
+//! then read back per-row cycle counts), and the functional accumulate
+//! is a dense i8×i8 micro-GEMM over the assignment's compile-time
+//! gathered weight block. The timing/event semantics remain an exact
+//! port of the original single-thread interpreter loop (machine.rs
+//! pre-refactor, DESIGN.md §6): every engine built on this executor is
+//! bit-identical to it.
 
 use crate::arch::ArchConfig;
 use crate::compiler::{Assignment, CompiledLayer, PreparedLayer, Tile};
@@ -20,49 +26,76 @@ use crate::isa::Instr;
 use crate::tensor::{MatI8, MatI32};
 use crate::util::ceil_div;
 
+use super::kernels::{self, TileScan};
 use super::occupancy::OccupancyTable;
 
-/// Functional accumulator slice owned by one core: the filter columns
-/// of the core's assignments, stored densely as [M, owned_filters].
+/// Dense functional accumulator block of one assignment:
+/// `data[m * filters.len() + fi]` accumulates input row m against the
+/// assignment's fi-th filter — the contiguous GEMM target of
+/// [`kernels::gemm_accumulate`].
 #[derive(Debug, Clone)]
-pub struct CoreAcc {
-    /// Owned global filter columns, ascending.
+pub struct AccBlock {
+    /// Assignment index in the layer (executor lookup key).
+    pub assignment: usize,
+    /// Global filter columns, in the assignment's slot order.
     pub filters: Vec<usize>,
-    /// Global filter column -> local column (usize::MAX = not owned).
-    col_of: Vec<usize>,
     /// m_total × filters.len() accumulators, m-major.
     pub data: Vec<i32>,
+}
+
+/// Functional accumulator slice owned by one core: one dense block per
+/// assignment scheduled on the core. Every filter is packed into
+/// exactly one assignment (compiler invariant), so blocks — and cores —
+/// cover disjoint output columns and merge exactly in any order.
+#[derive(Debug, Clone)]
+pub struct CoreAcc {
+    blocks: Vec<AccBlock>,
     m_total: usize,
 }
 
 impl CoreAcc {
     pub fn new(layer: &CompiledLayer, core: usize, m_total: usize) -> Self {
-        let mut filters: Vec<usize> = layer
+        let blocks = layer
             .assignments
             .iter()
-            .filter(|a| a.core == core)
-            .flat_map(|a| a.filters.iter().copied())
+            .enumerate()
+            .filter(|(_, a)| a.core == core)
+            .map(|(ai, a)| AccBlock {
+                assignment: ai,
+                filters: a.filters.clone(),
+                data: vec![0i32; m_total * a.filters.len()],
+            })
             .collect();
-        filters.sort_unstable();
-        filters.dedup();
-        let mut col_of = vec![usize::MAX; layer.prep.n];
-        for (i, &f) in filters.iter().enumerate() {
-            col_of[f] = i;
-        }
-        let data = vec![0i32; m_total * filters.len()];
-        Self { filters, col_of, data, m_total }
+        Self { blocks, m_total }
     }
 
-    /// Fold this core's columns into the shared [M, N] accumulator.
-    /// Columns are disjoint across cores, so the merge order cannot
-    /// change the result.
+    /// The dense blocks owned by this core (ascending assignment index).
+    pub fn blocks(&self) -> &[AccBlock] {
+        &self.blocks
+    }
+
+    /// The dense block of `assignment` (must be scheduled on this core).
+    fn block_mut(&mut self, assignment: usize) -> &mut AccBlock {
+        let i = self
+            .blocks
+            .iter()
+            .position(|b| b.assignment == assignment)
+            .expect("assignment not owned by this core");
+        &mut self.blocks[i]
+    }
+
+    /// Fold this core's blocks into the shared [M, N] accumulator.
+    /// Filter columns are disjoint across blocks and across cores, so
+    /// the merge order cannot change the result.
     pub fn merge_into(&self, acc: &mut MatI32) {
-        let w = self.filters.len();
-        for m in 0..self.m_total {
-            let row = &self.data[m * w..(m + 1) * w];
-            let acc_row = &mut acc.data[m * acc.cols..(m + 1) * acc.cols];
-            for (i, &f) in self.filters.iter().enumerate() {
-                acc_row[f] += row[i];
+        for b in &self.blocks {
+            let w = b.filters.len();
+            for m in 0..self.m_total {
+                let row = &b.data[m * w..(m + 1) * w];
+                let acc_row = &mut acc.data[m * acc.cols..(m + 1) * acc.cols];
+                for (i, &f) in b.filters.iter().enumerate() {
+                    acc_row[f] += row[i];
+                }
             }
         }
     }
@@ -83,6 +116,8 @@ pub struct CoreExecutor<'a> {
     pub acc: Option<CoreAcc>,
     /// Cached gather/occupancy table for the resident assignment.
     table: Option<OccupancyTable>,
+    /// Cached step-major occupancy scan for the tile being walked.
+    scan: Option<TileScan>,
 }
 
 impl<'a> CoreExecutor<'a> {
@@ -95,7 +130,18 @@ impl<'a> CoreExecutor<'a> {
         m_total: usize,
     ) -> Self {
         let acc = functional.then(|| CoreAcc::new(layer, core, m_total));
-        Self { arch, layer, x, core, m_total, clock: 0, events: EventCounts::default(), acc, table: None }
+        Self {
+            arch,
+            layer,
+            x,
+            core,
+            m_total,
+            clock: 0,
+            events: EventCounts::default(),
+            acc,
+            table: None,
+            scan: None,
+        }
     }
 
     /// Execute one per-core instruction. Barriers are handled by the
@@ -162,6 +208,45 @@ impl<'a> CoreExecutor<'a> {
         ));
     }
 
+    /// (Re)run the step-major occupancy scan when the walked tile
+    /// changes. A tile's Compute chunks are contiguous and ascend from
+    /// `m_base = 0` (codegen invariant), so a single-slot cache never
+    /// thrashes and the whole-tile scan is computed exactly once.
+    fn ensure_scan(&mut self, tile_idx: usize) {
+        let arch = self.arch;
+        let layer = self.layer;
+        let t = &layer.tiles[tile_idx];
+        if self.scan.as_ref().map(|s| s.tile) == Some(t.id) {
+            return;
+        }
+        let a = &layer.assignments[t.assignment];
+        let prep = &layer.prep;
+        let comp = arch.compartments;
+        // The compiler only emits step-aligned tiles (k_slots is a
+        // multiple of the compartment count); the on-the-fly gather
+        // fallback this used to guard is unreachable.
+        debug_assert_eq!(t.row_start % comp, 0, "compiler emitted a step-unaligned tile");
+        let base_step = t.row_start / comp;
+        let rows = t.rows();
+        let steps = ceil_div(rows, comp);
+        let demand = a.active_cols() as u64;
+        // Per-step effective cells are row-independent; computed once
+        // per tile (the scan folds them into the eff-weighted total).
+        let step_eff: Vec<u64> = (0..steps)
+            .map(|s| {
+                let lanes = (rows - s * comp).min(comp);
+                if arch.weight_bit_sparsity {
+                    demand * lanes as u64
+                } else {
+                    dense_step_effective_cells(t, a, prep, comp, s, lanes)
+                }
+            })
+            .collect();
+        let table = self.table.as_ref().expect("occupancy table built before scan");
+        debug_assert!(table.has_occ());
+        self.scan = Some(kernels::scan_tile_occupancy(table, t.id, base_step, &step_eff));
+    }
+
     /// Process one Compute chunk (≤ Tm input rows on this core).
     /// Returns the core-clock advance (max over the chunk's rows).
     fn compute_chunk(&mut self, tile_idx: usize, m_base: usize, m_count: usize) -> u64 {
@@ -205,98 +290,65 @@ impl<'a> CoreExecutor<'a> {
             return cycles_per_row;
         }
 
-        // Row-loop path: per-assignment occupancy precompute replaces
-        // the per-(tile, row, step) gather + byte-wise OR fold.
+        // Row-loop path. IPU timing reads back the tile's cached
+        // step-major occupancy scan (sim::kernels); the per-assignment
+        // table + per-tile scan replace the per-(tile, row, step)
+        // gather + byte-wise OR fold.
         self.ensure_table(t.assignment);
-        let x = self.x;
-        let Self { table, acc, events, .. } = self;
-        let table = table.as_ref().expect("table just built");
-        let mut acc = acc.as_mut();
-
-        let kept = &a.kept_rows[t.row_start..t.row_end];
-        // Global step base when tile rows align with compartment steps
-        // (always true for k_slots-sized tiles); otherwise fall back to
-        // an on-the-fly fold over the gathered row.
-        let base_step = (arch.input_skipping && t.row_start % comp == 0 && table.has_occ())
-            .then(|| t.row_start / comp);
-        // Per-step effective cells are row-independent; hoist them.
-        let step_eff: Vec<u64> = if arch.input_skipping {
-            (0..steps)
-                .map(|s| {
-                    let lanes = (rows - s * comp).min(comp);
-                    if arch.weight_bit_sparsity {
-                        demand * lanes as u64
-                    } else {
-                        dense_step_effective_cells(t, a, prep, comp, s, lanes)
-                    }
-                })
-                .collect()
-        } else {
-            Vec::new()
-        };
-        let row_eff: u64 = if arch.input_skipping {
-            0
-        } else if arch.weight_bit_sparsity {
-            demand * rows as u64
-        } else {
-            dense_effective_cells(t, a, prep)
-        };
+        if arch.input_skipping {
+            self.ensure_scan(tile_idx);
+        }
+        let Self { table, scan, acc, events, .. } = self;
 
         let mut worst = 0u64;
-        // Accumulate per-chunk event totals locally; fold into `events`
-        // once (hot-path: avoids 6 counter writes per row-step).
         let mut tot_cycles = 0u64;
         let mut tot_eff = 0u64;
-        for mi in 0..m_count {
-            let m = m_base + mi;
-            let mut row_cycles = 0u64;
-            if arch.input_skipping {
-                // IPU: the precomputed occupancy byte per (row, step)
-                // is the OR of the step's 16 gathered inputs.
-                for (s, &eff) in step_eff.iter().enumerate() {
-                    let occ = match base_step {
-                        Some(b) => table.step_occ(m, b + s),
-                        None => {
-                            // unaligned tile (never emitted by the
-                            // compiler): fold straight off the input
-                            let lanes = (rows - s * comp).min(comp);
-                            let group = &kept[s * comp..s * comp + lanes];
-                            let xrow =
-                                super::occupancy::i8_as_u8(x.expect("input required").row(m));
-                            group.iter().fold(0u8, |o, &k| o | xrow[k as usize])
-                        }
-                    };
-                    let beff = u64::from(occ.count_ones());
-                    row_cycles += beff;
-                    tot_eff += eff * beff;
-                }
-            } else {
-                // timing is data-independent: full bit-serial cost
-                let bits = arch.input_bits as u64;
-                row_cycles = steps as u64 * bits;
-                tot_eff += row_eff * bits;
+        if arch.input_skipping {
+            let scan = scan.as_ref().expect("scan built for IPU timing");
+            for &rc in &scan.row_cycles[m_base..m_base + m_count] {
+                tot_cycles += rc;
+                worst = worst.max(rc);
             }
-            tot_cycles += row_cycles;
-            worst = worst.max(row_cycles);
+            // the scan's eff-weighted total covers the whole tile; the
+            // chunks of a tile partition [0, M) exactly once, so it is
+            // accounted on the first chunk (bit-identical layer totals)
+            if m_base == 0 && m_count > 0 {
+                tot_eff = scan.eff_total;
+            }
+        } else if m_count > 0 {
+            // timing is data-independent: full bit-serial cost per row
+            let bits = arch.input_bits as u64;
+            let row_cycles = steps as u64 * bits;
+            let row_eff: u64 = if arch.weight_bit_sparsity {
+                demand * rows as u64
+            } else {
+                dense_effective_cells(t, a, prep)
+            };
+            worst = row_cycles;
+            tot_cycles = row_cycles * m_count as u64;
+            tot_eff = row_eff * bits * m_count as u64;
+        }
 
-            // functional accumulate (fast dot-product path; the DBMU
-            // bit-level path in dbmu.rs is cross-checked in tests)
-            if let Some(acc) = acc.as_deref_mut() {
-                let w = acc.filters.len();
+        // functional accumulate: dense micro-GEMM of the gathered
+        // activations against the assignment's gathered weight block
+        // (the DBMU bit-level path in dbmu.rs is cross-checked in tests)
+        if let Some(acc) = acc.as_mut() {
+            let table = table.as_ref().expect("table built");
+            let block = acc.block_mut(t.assignment);
+            let nf = block.filters.len();
+            debug_assert_eq!(a.wblock.len(), a.kept_rows.len() * nf);
+            let wtile = &a.wblock[t.row_start * nf..t.row_end * nf];
+            for mi in 0..m_count {
+                let m = m_base + mi;
                 let gathered = &table.gathered_row(m)[t.row_start..t.row_end];
-                let (col_of, acc_row) = (&acc.col_of, &mut acc.data[m * w..(m + 1) * w]);
-                for (ri, &k) in kept.iter().enumerate() {
-                    let xv = gathered[ri] as i8 as i32;
-                    if xv == 0 {
-                        continue;
-                    }
-                    let wrow = prep.weights.row(k as usize);
-                    for &f in &a.filters {
-                        acc_row[col_of[f]] += xv * wrow[f] as i32;
-                    }
-                }
+                kernels::gemm_accumulate(
+                    &mut block.data[m * nf..(m + 1) * nf],
+                    gathered,
+                    wtile,
+                );
             }
         }
+
         let mc = m_count as u64;
         events.macro_cycles += tot_cycles;
         events.macro_col_cycles += tot_cycles * arch.macro_columns as u64;
@@ -345,4 +397,93 @@ fn dense_step_effective_cells(
         }
     }
     cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile_layer, prepare_layer, SparsityConfig};
+    use crate::models::synthesize_weights;
+    use crate::quant;
+
+    fn compiled(arch: &ArchConfig, seed: u64) -> CompiledLayer {
+        let (m, k, n) = (6, 320, 48);
+        let w = synthesize_weights(seed, k, n);
+        let prep = prepare_layer(
+            "t", m, k, n, w,
+            SparsityConfig::hybrid(0.5),
+            arch,
+            quant::requant_mul(0.01),
+            true,
+            None,
+        );
+        compile_layer(prep, arch)
+    }
+
+    #[test]
+    fn core_acc_blocks_cover_disjoint_filter_columns() {
+        let arch = ArchConfig::db_pim();
+        let layer = compiled(&arch, 41);
+        let m_total = layer.prep.m;
+        let mut seen = vec![false; layer.prep.n];
+        for core in 0..arch.n_cores {
+            let acc = CoreAcc::new(&layer, core, m_total);
+            for b in acc.blocks() {
+                assert_eq!(layer.assignments[b.assignment].core, core);
+                assert_eq!(b.data.len(), m_total * b.filters.len());
+                for &f in &b.filters {
+                    assert!(!seen[f], "filter {f} owned by two blocks");
+                    seen[f] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_into_is_order_independent_and_exact() {
+        let arch = ArchConfig::db_pim();
+        let layer = compiled(&arch, 42);
+        let m_total = layer.prep.m;
+        // fill each block with a value derived from its assignment so
+        // the merged matrix is predictable
+        let mut accs: Vec<CoreAcc> = (0..arch.n_cores)
+            .map(|c| CoreAcc::new(&layer, c, m_total))
+            .collect();
+        for acc in &mut accs {
+            for b in &mut acc.blocks {
+                let ai = b.assignment as i32;
+                for v in &mut b.data {
+                    *v = ai + 1;
+                }
+            }
+        }
+        let mut fwd = MatI32::zeros(m_total, layer.prep.n);
+        for acc in &accs {
+            acc.merge_into(&mut fwd);
+        }
+        let mut rev = MatI32::zeros(m_total, layer.prep.n);
+        for acc in accs.iter().rev() {
+            acc.merge_into(&mut rev);
+        }
+        assert_eq!(fwd, rev, "merge must be order independent");
+        // every assigned filter column got exactly its block's value
+        for (ai, a) in layer.assignments.iter().enumerate() {
+            for &f in &a.filters {
+                for m in 0..m_total {
+                    assert_eq!(fwd.get(m, f), ai as i32 + 1, "m {m} filter {f}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn merge_into_of_fresh_acc_is_zero() {
+        let arch = ArchConfig::db_pim();
+        let layer = compiled(&arch, 43);
+        let mut acc = MatI32::zeros(layer.prep.m, layer.prep.n);
+        for core in 0..arch.n_cores {
+            CoreAcc::new(&layer, core, layer.prep.m).merge_into(&mut acc);
+        }
+        assert!(acc.data.iter().all(|&v| v == 0));
+    }
 }

@@ -1,0 +1,263 @@
+//! Batched hot-loop kernels for the per-core executor.
+//!
+//! The two remaining inner loops of the row-loop simulation path are
+//! rewritten here as cache-friendly batched kernels (PR: step-major
+//! batched kernels):
+//!
+//! * [`scan_tile_occupancy`] — the IPU timing walk, inverted from
+//!   row-major to step-major over the [`OccupancyTable`]'s step-major
+//!   `occ` storage. Each step's occupancy bytes for all M input rows
+//!   are contiguous, so the kernel processes 8 rows at a time as one
+//!   `u64` word: a single `count_ones` per word feeds the
+//!   `active_col_cycles` total while a SWAR per-byte popcount
+//!   ([`lane_popcount`]) accumulates the per-row cycle counts in
+//!   word-parallel lanes — ~8× fewer loads and popcounts than the
+//!   scalar byte walk, bit-identical totals (popcounts are exact and
+//!   integer addition is order-free).
+//! * [`gemm_accumulate`] — the functional accumulate, turned from a
+//!   scatter (`acc[col_of[f]] += xv * w[f]`, one indirect gather per
+//!   MAC) into a dense `i32 += i8×i8` micro-GEMM over the assignment's
+//!   compile-time gathered weight block (`Assignment::wblock`) and the
+//!   core's dense per-assignment accumulator block, 4-wide unrolled
+//!   over contiguous memory.
+//!
+//! Both kernels are property-tested bit-identical to scalar
+//! first-principles references (unit tests below and
+//! tests/prop_invariants.rs).
+
+use super::occupancy::OccupancyTable;
+
+/// Per-byte popcount in SWAR lanes: each byte of the result holds the
+/// popcount of the corresponding input byte (0..=8), computed for all
+/// 8 lanes at once with no per-byte loads.
+#[inline]
+pub fn lane_popcount(mut v: u64) -> u64 {
+    v -= (v >> 1) & 0x5555_5555_5555_5555;
+    v = (v & 0x3333_3333_3333_3333) + ((v >> 2) & 0x3333_3333_3333_3333);
+    (v + (v >> 4)) & 0x0F0F_0F0F_0F0F_0F0F
+}
+
+/// Result of scanning one tile's occupancy over all M input rows.
+///
+/// Cached single-slot per executor (tiles of one assignment are walked
+/// chunk by chunk, `m_base` ascending from 0, before the next tile
+/// starts — codegen invariant, tests/prop_invariants.rs).
+#[derive(Debug, Clone)]
+pub struct TileScan {
+    /// Tile id this scan belongs to (executor cache key).
+    pub tile: u32,
+    /// Per input row m: Σ_steps B_eff(m, step) — the row's bit-serial
+    /// cycle count under IPU skipping.
+    pub row_cycles: Vec<u64>,
+    /// Σ_rows Σ_steps `step_eff[step] * B_eff(row, step)` — the tile's
+    /// whole contribution to `active_col_cycles`, accounted once on the
+    /// tile's first Compute chunk.
+    pub eff_total: u64,
+}
+
+/// Lane accumulators flush to 64-bit counters before a byte lane can
+/// saturate: 31 steps × max popcount 8 = 248 < 256.
+const LANE_FLUSH_STEPS: u32 = 31;
+
+/// Step-major occupancy scan of one tile: for global steps
+/// `base_step .. base_step + step_eff.len()`, fold every input row's
+/// occupancy popcount into per-row cycle counts and the eff-weighted
+/// column-cycle total. Bit-identical to the scalar per-(row, step)
+/// byte walk.
+pub fn scan_tile_occupancy(
+    table: &OccupancyTable,
+    tile: u32,
+    base_step: usize,
+    step_eff: &[u64],
+) -> TileScan {
+    let m_total = table.m_rows();
+    debug_assert!(base_step + step_eff.len() <= table.steps());
+    let mut row_cycles = vec![0u64; m_total];
+    let words = m_total / 8;
+    let mut lane_acc = vec![0u64; words];
+    let mut eff_total = 0u64;
+    let mut pending = 0u32;
+    for (s, &eff) in step_eff.iter().enumerate() {
+        let occ_row = table.step_row(base_step + s);
+        let (word_bytes, tail) = occ_row.split_at(words * 8);
+        for (lanes, chunk) in lane_acc.iter_mut().zip(word_bytes.chunks_exact(8)) {
+            let word = u64::from_le_bytes(chunk.try_into().unwrap());
+            *lanes += lane_popcount(word);
+            eff_total += eff * u64::from(word.count_ones());
+        }
+        for (rc, &b) in row_cycles[words * 8..].iter_mut().zip(tail) {
+            let beff = u64::from(b.count_ones());
+            *rc += beff;
+            eff_total += eff * beff;
+        }
+        pending += 1;
+        if pending == LANE_FLUSH_STEPS {
+            flush_lanes(&mut lane_acc, &mut row_cycles);
+            pending = 0;
+        }
+    }
+    if pending > 0 {
+        flush_lanes(&mut lane_acc, &mut row_cycles);
+    }
+    TileScan { tile, row_cycles, eff_total }
+}
+
+/// Drain the byte-lane accumulators into the 64-bit per-row counters.
+fn flush_lanes(lane_acc: &mut [u64], row_cycles: &mut [u64]) {
+    for (w, lanes) in lane_acc.iter_mut().enumerate() {
+        if *lanes != 0 {
+            for (i, b) in lanes.to_le_bytes().into_iter().enumerate() {
+                row_cycles[w * 8 + i] += u64::from(b);
+            }
+            *lanes = 0;
+        }
+    }
+}
+
+/// Dense `i32 += i8×i8` row accumulate: for each gathered activation
+/// byte (raw bit pattern of the kept input value) accumulate
+/// `out[f] += xv * wrow[f]` over the assignment's contiguous gathered
+/// weight block (`wblock[ri * out.len() + fi]`), 4-wide unrolled.
+/// Zero activations are skipped (ReLU-sparse inputs).
+///
+/// Bit-identical to the legacy scatter loop: same per-column addition
+/// order (kept rows ascending), exact integer arithmetic.
+pub fn gemm_accumulate(out: &mut [i32], gathered: &[u8], wblock: &[i8]) {
+    let nf = out.len();
+    debug_assert_eq!(wblock.len(), gathered.len() * nf);
+    let main = nf - (nf % 4);
+    for (ri, &g) in gathered.iter().enumerate() {
+        let xv = g as i8 as i32;
+        if xv == 0 {
+            continue;
+        }
+        let wrow = &wblock[ri * nf..(ri + 1) * nf];
+        let (out4, out_tail) = out.split_at_mut(main);
+        let (w4, w_tail) = wrow.split_at(main);
+        for (o, w) in out4.chunks_exact_mut(4).zip(w4.chunks_exact(4)) {
+            o[0] += xv * w[0] as i32;
+            o[1] += xv * w[1] as i32;
+            o[2] += xv * w[2] as i32;
+            o[3] += xv * w[3] as i32;
+        }
+        for (o, &w) in out_tail.iter_mut().zip(w_tail) {
+            *o += xv * w as i32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::MatI8;
+    use crate::util::{ceil_div, Rng};
+
+    #[test]
+    fn lane_popcount_matches_per_byte_count_ones() {
+        let mut rng = Rng::new(17);
+        for _ in 0..500 {
+            let v = rng.next_u64();
+            let lanes = lane_popcount(v).to_le_bytes();
+            for (i, b) in v.to_le_bytes().into_iter().enumerate() {
+                assert_eq!(u32::from(lanes[i]), b.count_ones(), "word {v:#x} byte {i}");
+            }
+        }
+        assert_eq!(lane_popcount(0), 0);
+        assert_eq!(lane_popcount(u64::MAX), 0x0808_0808_0808_0808);
+    }
+
+    #[test]
+    fn scan_matches_scalar_reference() {
+        let mut rng = Rng::new(23);
+        for case in 0..30 {
+            let m_total = 1 + rng.below(40) as usize;
+            let k = 16 + rng.below(400) as usize;
+            let comp = 16;
+            let x = MatI8::from_vec(
+                m_total,
+                k,
+                (0..m_total * k)
+                    .map(|_| if rng.below(2) == 0 { 0 } else { rng.int8() })
+                    .collect(),
+            );
+            let kept: Vec<u32> = (0..k as u32).filter(|_| rng.below(3) > 0).collect();
+            if kept.is_empty() {
+                continue;
+            }
+            let table = OccupancyTable::build(0, &x, &kept, comp, m_total, true, false);
+            let total_steps = ceil_div(kept.len(), comp);
+            // random step window (a "tile") with varied eff weights
+            let base_step = rng.below(total_steps as u64) as usize;
+            let steps = 1 + rng.below((total_steps - base_step) as u64) as usize;
+            let step_eff: Vec<u64> = (0..steps).map(|_| rng.below(2048)).collect();
+
+            let scan = scan_tile_occupancy(&table, 7, base_step, &step_eff);
+            assert_eq!(scan.tile, 7);
+            let mut eff_ref = 0u64;
+            for m in 0..m_total {
+                let mut rc = 0u64;
+                for (s, &eff) in step_eff.iter().enumerate() {
+                    let start = (base_step + s) * comp;
+                    let lanes = (kept.len() - start).min(comp);
+                    let or = kept[start..start + lanes]
+                        .iter()
+                        .fold(0u8, |o, &kk| o | (x.get(m, kk as usize) as u8));
+                    let beff = u64::from(or.count_ones());
+                    rc += beff;
+                    eff_ref += eff * beff;
+                }
+                assert_eq!(scan.row_cycles[m], rc, "case {case} row {m}");
+            }
+            assert_eq!(scan.eff_total, eff_ref, "case {case}");
+        }
+    }
+
+    #[test]
+    fn scan_lane_flush_survives_many_steps() {
+        // >31 steps of all-ones occupancy: every lane would saturate a
+        // byte without the periodic flush (40 steps × 8 = 320 > 255).
+        let m_total = 9; // one full word + one tail row
+        let comp = 1; // one kept row per step
+        let k = 40;
+        let x = MatI8::from_vec(m_total, k, vec![-1i8; m_total * k]);
+        let kept: Vec<u32> = (0..k as u32).collect();
+        let table = OccupancyTable::build(0, &x, &kept, comp, m_total, true, false);
+        let step_eff = vec![1u64; k];
+        let scan = scan_tile_occupancy(&table, 0, 0, &step_eff);
+        for m in 0..m_total {
+            assert_eq!(scan.row_cycles[m], 8 * k as u64);
+        }
+        assert_eq!(scan.eff_total, (m_total * 8 * k) as u64);
+    }
+
+    #[test]
+    fn gemm_matches_scalar_scatter_reference() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let kept = rng.below(60) as usize;
+            let nf = 1 + rng.below(20) as usize;
+            let gathered: Vec<u8> = (0..kept)
+                .map(|_| if rng.below(2) == 0 { 0 } else { rng.int8() as u8 })
+                .collect();
+            let wblock: Vec<i8> = (0..kept * nf).map(|_| rng.int8()).collect();
+            let mut out = vec![0i32; nf];
+            gemm_accumulate(&mut out, &gathered, &wblock);
+            let mut want = vec![0i32; nf];
+            for (ri, &g) in gathered.iter().enumerate() {
+                let xv = g as i8 as i32;
+                for (fi, w) in want.iter_mut().enumerate() {
+                    *w += xv * wblock[ri * nf + fi] as i32;
+                }
+            }
+            assert_eq!(out, want, "kept {kept} nf {nf}");
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_on_top_of_existing_values() {
+        let mut out = vec![10i32, -3, 7];
+        gemm_accumulate(&mut out, &[2, 0, 0xFF], &[1, 2, 3, 9, 9, 9, 1, 1, 1]);
+        // row 0: xv=2 → +2,+4,+6 ; row 1 skipped ; row 2: xv=-1 → -1 each
+        assert_eq!(out, vec![10 + 2 - 1, -3 + 4 - 1, 7 + 6 - 1]);
+    }
+}

@@ -7,7 +7,9 @@
 //!   phases out over worker threads, bit-identical to the legacy
 //!   flat-stream interpreter it also hosts.
 //! * [`occupancy`] — word-packed bit-plane occupancy precompute for the
-//!   IPU inner loop.
+//!   IPU inner loop (step-major storage).
+//! * [`kernels`] — batched hot-loop kernels: the step-major word-batched
+//!   occupancy scan and the dense gathered-weight micro-GEMM accumulate.
 //! * [`ipu`] — input zero-column detection (bit-level input sparsity).
 //! * [`dbmu`] — bit-level DBMU reference datapath (validation).
 //! * [`simd`] — SIMD-core cost model and functional post-ops.
@@ -23,6 +25,7 @@ pub mod core_exec;
 pub mod dbmu;
 pub mod engine;
 pub mod ipu;
+pub mod kernels;
 pub mod machine;
 pub mod occupancy;
 pub mod pipeline;
@@ -33,6 +36,7 @@ pub use engine::Engine;
 pub use machine::{LayerStats, Machine, OpCategory};
 
 use crate::arch::ArchConfig;
+use crate::compiler::cache::CompileCache;
 use crate::compiler::{self, SparsityConfig};
 use crate::energy::{EnergyTable, EventCounts};
 use crate::isa::SimdOp;
@@ -138,18 +142,28 @@ pub fn simulate_network(
     simulate_network_with_engine(net, sparsity, arch, seed, Engine::Parallel)
 }
 
-/// One PIM layer's perf-mode job: compile, synthesize activations when
-/// the IPU needs them, simulate. Deterministic per (seed, idx).
+/// One PIM layer's perf-mode job: compile (through the sweep's
+/// [`CompileCache`] when one is provided), synthesize activations when
+/// the IPU needs them, simulate. Deterministic per (seed, idx) — the
+/// cache only memoizes, it never changes the compiled artifact.
 fn simulate_pim_layer(
     net: &Network,
     idx: usize,
     sparsity: SparsityConfig,
     machine: &Machine,
     seed: u64,
+    cache: Option<&CompileCache>,
 ) -> LayerStats {
     let arch = &machine.arch;
-    let clayer = compiler::compile_network_layer(net, idx, sparsity, arch, seed)
-        .expect("not a PIM layer");
+    let clayer: std::sync::Arc<compiler::CompiledLayer> = match cache {
+        Some(cache) => {
+            cache.get_or_compile(net, idx, sparsity, arch, seed).expect("not a PIM layer")
+        }
+        None => std::sync::Arc::new(
+            compiler::compile_network_layer(net, idx, sparsity, arch, seed)
+                .expect("not a PIM layer"),
+        ),
+    };
     let x = arch.input_skipping.then(|| {
         let m = clayer.prep.m.max(1);
         MatI8::from_vec(
@@ -173,6 +187,32 @@ pub fn simulate_network_with_engine(
     seed: u64,
     engine: Engine,
 ) -> SimReport {
+    simulate_network_impl(net, sparsity, arch, seed, engine, None)
+}
+
+/// [`simulate_network_with_engine`] compiling through a sweep-wide
+/// [`CompileCache`]: identical `(arch knobs, layer, sparsity, seed)`
+/// combinations across calls compile once and share the `Arc`'d
+/// artifact. The report is bit-identical to the uncached path.
+pub fn simulate_network_cached(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seed: u64,
+    engine: Engine,
+    cache: &CompileCache,
+) -> SimReport {
+    simulate_network_impl(net, sparsity, arch, seed, engine, Some(cache))
+}
+
+fn simulate_network_impl(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seed: u64,
+    engine: Engine,
+    cache: Option<&CompileCache>,
+) -> SimReport {
     // Per-layer machines always run their cores inline here: with
     // Engine::Parallel the parallelism lives at the layer level (finer
     // fan-out would oversubscribe the pool), and Engine::Sequential is
@@ -187,14 +227,14 @@ pub fn simulate_network_with_engine(
             Engine::Parallel => {
                 let jobs: Vec<_> = pim_idx
                     .iter()
-                    .map(|&idx| move || simulate_pim_layer(net, idx, sparsity, machine, seed))
+                    .map(|&idx| move || simulate_pim_layer(net, idx, sparsity, machine, seed, cache))
                     .collect();
                 let workers = pim_idx.len().min(crate::coordinator::default_workers());
                 crate::coordinator::run_parallel(jobs, workers)
             }
             Engine::Sequential => pim_idx
                 .iter()
-                .map(|&idx| simulate_pim_layer(net, idx, sparsity, machine, seed))
+                .map(|&idx| simulate_pim_layer(net, idx, sparsity, machine, seed, cache))
                 .collect(),
         };
         let mut slots: Vec<Option<LayerStats>> = (0..net.layers.len()).map(|_| None).collect();

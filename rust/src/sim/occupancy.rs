@@ -7,9 +7,12 @@
 //! (tile, row, step), [`OccupancyTable`] gathers each im2col row's kept
 //! activations once per (layer, assignment), packs the 8 bit-planes
 //! into `u64` words (8 activation bytes per word, little-endian), and
-//! reduces every step with a word-wise OR + horizontal fold. The
-//! per-(row, step) work in the executor then collapses to one cached
-//! byte read + `count_ones`.
+//! reduces every step with a word-wise OR + horizontal fold.
+//!
+//! The occupancy bytes are stored **step-major** (`occ[step][m]`): all
+//! M rows of one step are contiguous, which is what lets
+//! `sim::kernels::scan_tile_occupancy` walk a tile's occupancy 8 input
+//! rows at a time as `u64` words instead of byte-at-a-time.
 //!
 //! Occupancy bytes are bit-identical to the scalar fold — `u64` OR over
 //! packed bytes distributes over the per-byte OR — so the engines built
@@ -60,10 +63,14 @@ pub struct OccupancyTable {
     /// built without `keep_gathered` (perf-only IPU runs read nothing
     /// but `occ`, so the full M × kept matrix would be dead weight).
     bytes: Vec<u8>,
-    /// Steps (compartment groups) per row; 0 when built without
+    /// Compartment steps over the kept rows; 0 when built without
     /// occupancy (functional-only use).
-    steps_per_row: usize,
-    /// Per-(m, global step) occupancy byte.
+    steps: usize,
+    /// Input rows gathered (the layer's M).
+    m_total: usize,
+    /// Per-(global step, m) occupancy byte, step-major:
+    /// `occ[step * m_total + m]` — all M rows of a step contiguous for
+    /// the word-batched kernel walk.
     occ: Vec<u8>,
 }
 
@@ -71,8 +78,9 @@ impl OccupancyTable {
     /// Gather + pack all `m_total` rows of `x` for `kept`. `with_occ`
     /// precomputes the per-step occupancy bytes (IPU enabled);
     /// `keep_gathered` retains the gathered rows (functional runs need
-    /// the values, perf-only runs don't). `comp` is the compartment
-    /// count (lanes per step).
+    /// the values, perf-only runs don't — and perf-only builds skip the
+    /// per-row scratch entirely). `comp` is the compartment count
+    /// (lanes per step).
     pub fn build(
         assignment: usize,
         x: &MatI8,
@@ -84,10 +92,12 @@ impl OccupancyTable {
     ) -> Self {
         let kept_len = kept.len();
         let stride = ceil_div(kept_len.max(1), 8) * 8;
-        let steps_per_row = if with_occ { ceil_div(kept_len, comp) } else { 0 };
+        let steps = if with_occ { ceil_div(kept_len, comp) } else { 0 };
         let mut bytes = vec![0u8; if keep_gathered { m_total * stride } else { 0 }];
-        let mut occ = vec![0u8; m_total * steps_per_row];
-        let mut scratch = vec![0u8; stride];
+        let mut occ = vec![0u8; m_total * steps];
+        // the scratch row only backs the gather when the gathered rows
+        // are NOT retained; allocating it otherwise was dead weight
+        let mut scratch = vec![0u8; if keep_gathered { 0 } else { stride }];
         for m in 0..m_total {
             let xrow = i8_as_u8(x.row(m));
             let row: &mut [u8] = if keep_gathered {
@@ -98,17 +108,14 @@ impl OccupancyTable {
             for (dst, &k) in row.iter_mut().zip(kept) {
                 *dst = xrow[k as usize];
             }
-            if with_occ {
-                let row = &row[..];
-                let occ_row = &mut occ[m * steps_per_row..(m + 1) * steps_per_row];
-                for (s, o) in occ_row.iter_mut().enumerate() {
-                    let start = s * comp;
-                    let lanes = (kept_len - start).min(comp);
-                    *o = or_fold_bytes(&row[start..start + lanes]);
-                }
+            let row = &row[..];
+            for s in 0..steps {
+                let start = s * comp;
+                let lanes = (kept_len - start).min(comp);
+                occ[s * m_total + m] = or_fold_bytes(&row[start..start + lanes]);
             }
         }
-        Self { assignment, kept_len, stride, bytes, steps_per_row, occ }
+        Self { assignment, kept_len, stride, bytes, steps, m_total, occ }
     }
 
     /// Whether the gathered rows were retained.
@@ -128,13 +135,32 @@ impl OccupancyTable {
     /// lanes. Only valid when built `with_occ`.
     #[inline]
     pub fn step_occ(&self, m: usize, step: usize) -> u8 {
-        self.occ[m * self.steps_per_row + step]
+        self.occ[step * self.m_total + m]
+    }
+
+    /// All M occupancy bytes of one global step (the contiguous lane of
+    /// the step-major walk). Only valid when built `with_occ`.
+    #[inline]
+    pub fn step_row(&self, step: usize) -> &[u8] {
+        &self.occ[step * self.m_total..(step + 1) * self.m_total]
     }
 
     /// Whether per-step occupancy bytes were precomputed.
     #[inline]
     pub fn has_occ(&self) -> bool {
-        self.steps_per_row > 0
+        self.steps > 0
+    }
+
+    /// Global compartment steps covered (0 without occupancy).
+    #[inline]
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Input rows gathered.
+    #[inline]
+    pub fn m_rows(&self) -> usize {
+        self.m_total
     }
 }
 
@@ -181,6 +207,8 @@ mod tests {
             }
             let t = OccupancyTable::build(0, &x, &kept, comp, m_total, true, true);
             assert!(t.has_occ() && t.has_gathered());
+            assert_eq!(t.m_rows(), m_total);
+            assert_eq!(t.steps(), crate::util::ceil_div(kept.len(), comp));
             // occ-only build (perf mode) agrees and drops the bytes
             let t_occ = OccupancyTable::build(0, &x, &kept, comp, m_total, true, false);
             assert!(!t_occ.has_gathered());
@@ -201,6 +229,8 @@ mod tests {
                         .iter()
                         .fold(0u8, |o, &b| o | b);
                     assert_eq!(t.step_occ(m, s), want, "m {m} step {s}");
+                    // the step-major lane exposes the same byte
+                    assert_eq!(t.step_row(s)[m], want, "m {m} step {s}");
                 }
             }
         }
@@ -215,5 +245,62 @@ mod tests {
         assert_eq!(t.assignment, 3);
         assert_eq!(t.gathered_row(0), &[1, 3, 4]);
         assert_eq!(t.gathered_row(1), &[5, 7, 8]);
+    }
+
+    #[test]
+    fn empty_kept_set_builds_degenerate_table() {
+        let x = MatI8::from_vec(3, 5, vec![1; 15]);
+        let t = OccupancyTable::build(0, &x, &[], 16, 3, true, true);
+        assert!(!t.has_occ(), "no kept rows ⇒ no steps");
+        assert_eq!(t.steps(), 0);
+        assert_eq!(t.m_rows(), 3);
+        for m in 0..3 {
+            assert!(t.gathered_row(m).is_empty());
+        }
+        // perf-mode build of the same degenerate case
+        let t2 = OccupancyTable::build(0, &x, &[], 16, 3, true, false);
+        assert!(!t2.has_gathered() && !t2.has_occ());
+    }
+
+    #[test]
+    fn non_word_aligned_strides_pad_with_zeros() {
+        // kept_len % 8 != 0 exercises the stride padding on every row
+        let mut rng = Rng::new(3);
+        for kept_len in [1usize, 3, 7, 9, 13, 15, 17, 23] {
+            let k = 32;
+            let m_total = 4;
+            let x = MatI8::from_vec(
+                m_total,
+                k,
+                (0..m_total * k).map(|_| rng.int8()).collect(),
+            );
+            let kept: Vec<u32> = (0..kept_len as u32).collect();
+            let t = OccupancyTable::build(1, &x, &kept, 4, m_total, true, true);
+            assert_eq!(t.steps(), crate::util::ceil_div(kept_len, 4));
+            for m in 0..m_total {
+                assert_eq!(t.gathered_row(m).len(), kept_len);
+                for s in 0..t.steps() {
+                    let start = s * 4;
+                    let lanes = (kept_len - start).min(4);
+                    let want = (start..start + lanes)
+                        .fold(0u8, |o, i| o | (x.get(m, i) as u8));
+                    assert_eq!(t.step_occ(m, s), want, "kept {kept_len} m {m} s {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_row_m_total_table() {
+        // m_total == 1: the step-major lanes are one byte wide
+        let x = MatI8::from_vec(1, 6, vec![0, 0x11, 0, 0x22, 0, 0x44]);
+        let t = OccupancyTable::build(0, &x, &[1, 3, 5], 2, 1, true, true);
+        assert_eq!(t.m_rows(), 1);
+        assert_eq!(t.steps(), 2);
+        assert_eq!(t.step_occ(0, 0), 0x11 | 0x22);
+        assert_eq!(t.step_occ(0, 1), 0x44);
+        assert_eq!(t.step_row(0), &[0x33]);
+        assert_eq!(t.step_row(1), &[0x44]);
+        assert_eq!(t.gathered_row(0), &[0x11, 0x22, 0x44]);
     }
 }

@@ -13,6 +13,12 @@
 //! * equivalence: the parallel segmented engine is bit-identical
 //!   (cycles, events, accumulators) to the sequential segmented engine
 //!   and to the legacy flat-stream interpreter
+//! * kernels: the step-major batched occupancy scan reproduces a
+//!   scalar first-principles walk straight off the input matrix, and
+//!   the compile-time gathered weight block (the micro-GEMM operand)
+//!   matches the prepared weight matrix
+//! * caching: simulating through a CompileCache is bit-identical to
+//!   fresh compilation, and repeated sweep points hit
 
 use dbpim::arch::ArchConfig;
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
@@ -79,6 +85,72 @@ fn prop_functional_equals_reference() {
     });
 }
 
+/// Scalar first-principles cross-check of the batched kernels: rebuild
+/// each tile's IPU timing per (row, step) straight off `x` (gather +
+/// OR-fold + popcount, no OccupancyTable involved) and compare against
+/// `sim::kernels::scan_tile_occupancy` over a freshly built table; also
+/// verify the compile-time gathered weight block against the prepared
+/// weight matrix. Covers the step-major storage + word-batched walk and
+/// the micro-GEMM operand end-to-end.
+fn check_batched_kernels(
+    layer: &dbpim::compiler::CompiledLayer,
+    x: &MatI8,
+    arch: &ArchConfig,
+) -> Result<(), String> {
+    use dbpim::sim::{kernels, occupancy::OccupancyTable};
+    let comp = arch.compartments;
+    let m_total = layer.prep.m.max(1);
+    for (ai, a) in layer.assignments.iter().enumerate().take(3) {
+        let nf = a.filters.len();
+        if a.wblock.len() != a.kept_rows.len() * nf {
+            return Err(format!("wblock shape off for assignment {ai}"));
+        }
+        for (ri, &k) in a.kept_rows.iter().enumerate() {
+            for (fi, &f) in a.filters.iter().enumerate() {
+                if a.wblock[ri * nf + fi] != layer.prep.weights.get(k as usize, f) {
+                    return Err(format!("wblock[{ri},{fi}] diverges in assignment {ai}"));
+                }
+            }
+        }
+        let table = OccupancyTable::build(ai, x, &a.kept_rows, comp, m_total, true, false);
+        for t in layer.tiles.iter().filter(|t| t.assignment == ai) {
+            let rows = t.rows();
+            let steps = dbpim::util::ceil_div(rows, comp);
+            if t.row_start % comp != 0 {
+                return Err(format!("step-unaligned tile at row {}", t.row_start));
+            }
+            // varied per-step weights exercise the eff-total fold too
+            let step_eff: Vec<u64> = (0..steps).map(|s| 1 + s as u64).collect();
+            let scan =
+                kernels::scan_tile_occupancy(&table, t.id, t.row_start / comp, &step_eff);
+            let mut eff_ref = 0u64;
+            for m in 0..m_total {
+                let mut rc = 0u64;
+                for (s, &eff) in step_eff.iter().enumerate() {
+                    let start = t.row_start + s * comp;
+                    let lanes = (rows - s * comp).min(comp);
+                    let or = a.kept_rows[start..start + lanes]
+                        .iter()
+                        .fold(0u8, |o, &k| o | (x.get(m, k as usize) as u8));
+                    let beff = u64::from(or.count_ones());
+                    rc += beff;
+                    eff_ref += eff * beff;
+                }
+                if scan.row_cycles[m] != rc {
+                    return Err(format!(
+                        "occ scan row {m} of tile {} diverges: {} vs scalar {rc}",
+                        t.id, scan.row_cycles[m]
+                    ));
+                }
+            }
+            if scan.eff_total != eff_ref {
+                return Err(format!("occ scan eff_total diverges on tile {}", t.id));
+            }
+        }
+    }
+    Ok(())
+}
+
 #[test]
 fn prop_engines_bit_identical_to_legacy_interp() {
     // The acceptance invariant of the segmented-program refactor: for
@@ -86,7 +158,10 @@ fn prop_engines_bit_identical_to_legacy_interp() {
     // sparsity configs and shapes, in both perf and functional mode,
     // the parallel engine, the sequential engine and the legacy flat
     // interpreter agree on every LayerStats field and on the exact
-    // accumulators.
+    // accumulators — all three paths running the batched step-major
+    // occupancy kernel and the gathered-weight GEMM accumulate, which
+    // are additionally cross-checked against scalar first-principles
+    // references per case.
     check_cases(30, |rng| {
         let mut arch = random_arch(rng);
         arch.n_cores = 1 + rng.below(8) as usize;
@@ -127,6 +202,68 @@ fn prop_engines_bit_identical_to_legacy_interp() {
             if a_int.as_ref() != Some(&want) {
                 return Err(format!("legacy interp != reference matmul on {}", arch.name));
             }
+        }
+        // the batched kernels themselves vs scalar first principles
+        check_batched_kernels(&layer, &x, &arch)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compile_cache_is_bit_identical_and_hits() {
+    use dbpim::compiler::CompileCache;
+    use dbpim::models::{Layer, LayerKind, Network};
+    check_cases(12, |rng| {
+        let arch = random_arch(rng);
+        let net = Network {
+            name: "prop-net".into(),
+            input_hw: 8,
+            input_ch: 8,
+            layers: vec![
+                Layer {
+                    name: "c1".into(),
+                    kind: LayerKind::Conv {
+                        in_ch: 8,
+                        out_ch: 16,
+                        kernel: 3,
+                        stride: 1,
+                        pad: 1,
+                        in_hw: 8,
+                    },
+                },
+                Layer { name: "r1".into(), kind: LayerKind::Act { elems: 16 * 64 } },
+                Layer {
+                    name: "fc".into(),
+                    kind: LayerKind::Fc { in_features: 1024, out_features: 16 },
+                },
+            ],
+        };
+        let sp = SparsityConfig { value_sparsity: rng.f64() * 0.7, fta: rng.below(2) == 0 };
+        let seed = rng.next_u64();
+        let cache = CompileCache::new();
+        let plain = dbpim::sim::simulate_network_with_engine(
+            &net, sp, &arch, seed, Engine::Sequential,
+        );
+        let cached = dbpim::sim::simulate_network_cached(
+            &net, sp, &arch, seed, Engine::Sequential, &cache,
+        );
+        if cached.totals != plain.totals || cached.total_cycles() != plain.total_cycles() {
+            return Err(format!("cached simulation diverges on {}", arch.name));
+        }
+        let first = cache.stats();
+        if first.hits != 0 || first.misses == 0 {
+            return Err(format!("unexpected first-pass stats {first:?}"));
+        }
+        // a repeated sweep point must be served entirely from the cache
+        let again = dbpim::sim::simulate_network_cached(
+            &net, sp, &arch, seed, Engine::Sequential, &cache,
+        );
+        if again.totals != plain.totals {
+            return Err(format!("cache-hit simulation diverges on {}", arch.name));
+        }
+        let second = cache.stats();
+        if second.misses != first.misses || second.hits != first.misses {
+            return Err(format!("repeat pass did not hit: {second:?}"));
         }
         Ok(())
     });

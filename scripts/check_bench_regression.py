@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over BENCH_*.json medians.
+
+Compares the medians of selected sim_hotpath cases in a fresh bench run
+against a committed baseline JSON and fails (exit 1) when any watched
+case regresses by more than the allowed fraction. Used by the CI
+perf-smoke job after `DBPIM_BENCH_FAST=1 cargo bench --bench
+sim_hotpath` (see .github/workflows/ci.yml).
+
+Usage:
+    check_bench_regression.py MEASURED BASELINE
+        [--max-regression 0.25]
+        [--cases row_loop_ipu_on e2e_resnet18_hybrid]
+        [--update]
+
+Behaviour:
+  * missing baseline file           -> warn + exit 0 (bootstrap runs)
+  * watched case missing either side -> fail (the bench was renamed or
+    dropped without updating the gate)
+  * --update rewrites the baseline from the measured file instead of
+    comparing (for refreshing the committed numbers from a CI artifact)
+
+The committed baseline records *upper bounds* for the watched medians
+on a CI-class host; refresh it from a real CI run's artifact whenever
+the hot paths change deliberately (see EXPERIMENTS.md §Perf).
+"""
+
+import argparse
+import json
+import shutil
+import sys
+
+DEFAULT_CASES = ["row_loop_ipu_on", "e2e_resnet18_hybrid"]
+
+
+def load_medians(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {s["name"]: float(s["median_ns"]) for s in doc["samples"]}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured", help="fresh BENCH_sim_hotpath.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.25,
+        help="allowed fractional slowdown vs baseline (default 0.25 = 25%%)",
+    )
+    ap.add_argument("--cases", nargs="+", default=DEFAULT_CASES)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline from the measured file instead of comparing",
+    )
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.measured, args.baseline)
+        print(f"baseline refreshed from {args.measured} -> {args.baseline}")
+        return 0
+
+    try:
+        base = load_medians(args.baseline)
+    except FileNotFoundError:
+        print(f"WARNING: no baseline at {args.baseline} — skipping perf gate")
+        return 0
+    measured = load_medians(args.measured)
+
+    failed = False
+    for case in args.cases:
+        if case not in measured:
+            print(f"FAIL: case '{case}' missing from {args.measured}")
+            failed = True
+            continue
+        if case not in base:
+            print(f"FAIL: case '{case}' missing from baseline {args.baseline}")
+            failed = True
+            continue
+        got, want = measured[case], base[case]
+        ratio = got / want if want > 0 else float("inf")
+        limit = 1.0 + args.max_regression
+        verdict = "FAIL" if ratio > limit else "ok"
+        print(
+            f"{verdict}: {case}: median {got / 1e6:.2f} ms vs baseline "
+            f"{want / 1e6:.2f} ms ({ratio:.2f}x, limit {limit:.2f}x)"
+        )
+        failed |= ratio > limit
+    if failed:
+        print(
+            "perf regression gate failed; if the slowdown is intentional, "
+            "refresh the baseline with --update from a CI artifact"
+        )
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
