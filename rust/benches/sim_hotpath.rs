@@ -15,6 +15,10 @@
 //! * `compile`  — prune + FTA + pack + codegen for a VGG-sized layer
 //! * `compile_cached_sweep` — a fig11-shaped repeated compile through
 //!   the sweep-wide CompileCache (1 miss + 3 hits per layer)
+//! * `pool_spawn_overhead` — scheduling cost of the persistent
+//!   work-stealing pool: 256 trivial jobs through `pool::run_jobs`
+//! * `pool_nested_sweep` — a miniature sweep × layer × segment nested
+//!   run on the shared pool (the composition `run_parallel` forbade)
 //! * `e2e`      — one full ResNet18 perf simulation (layer-parallel)
 //!
 //! ```bash
@@ -169,6 +173,37 @@ fn main() {
         assert!(stats.hits == 3 * stats.misses, "unexpected hit pattern: {stats:?}");
         stats.hits
     }));
+
+    // --- the worker pool itself ---
+    {
+        use dbpim::coordinator::pool;
+        // per-spawn overhead: trivial jobs, so the measured time is
+        // queue/steal/wake bookkeeping rather than payload
+        samples.push(bench("pool_spawn_overhead", 1, iters(50, 5), || {
+            let jobs: Vec<_> = (0..256usize).map(|i| move || i.wrapping_mul(i)).collect();
+            pool::run_jobs(jobs).iter().sum::<usize>()
+        }));
+        // nested composition: 4 sweep cells fan out, each cell fans its
+        // layers out, each layer its core segments — all one pool
+        samples.push(bench("pool_nested_sweep", 0, iters(5, 2), || {
+            let net = dbpim::models::fixtures::small_net();
+            let cells: Vec<_> = (0..4u64)
+                .map(|i| {
+                    let net = net.clone();
+                    move || {
+                        dbpim::sim::simulate_network(
+                            &net,
+                            SparsityConfig::hybrid(0.2 * i as f64),
+                            &ArchConfig::db_pim(),
+                            i,
+                        )
+                        .total_cycles()
+                    }
+                })
+                .collect();
+            pool::run_jobs(cells).iter().sum::<u64>()
+        }));
+    }
 
     // --- end-to-end perf sim (layer-parallel by default) ---
     samples.push(bench("e2e_resnet18_hybrid", 0, iters(3, 1), || {

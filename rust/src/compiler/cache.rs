@@ -11,9 +11,10 @@
 //! guaranteed to be the byte-identical artifact (compilation is
 //! deterministic per key — DESIGN.md §3).
 //!
-//! The cache is `Arc`-shared across a sweep's `run_parallel` jobs and
-//! mutex-sharded so jobs resolving different layers don't serialize on
-//! one lock. Compilation happens *outside* the shard lock: two racing
+//! The cache is owned by a sweep's `SweepCtx` and shared by reference
+//! across the sweep's pool jobs; it is mutex-sharded so jobs resolving
+//! different layers don't serialize on one lock. Compilation happens
+//! *outside* the shard lock: two racing
 //! jobs may compile the same key once each, which is harmless (the
 //! artifacts are identical; the first insert wins) and keeps a long
 //! compile from blocking every other job mapped to the shard.
@@ -207,30 +208,8 @@ impl CacheStats {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::{Layer, LayerKind, Network};
-
-    fn tiny_net() -> Network {
-        Network {
-            name: "tiny".into(),
-            input_hw: 4,
-            input_ch: 8,
-            layers: vec![
-                Layer {
-                    name: "c1".into(),
-                    kind: LayerKind::Conv {
-                        in_ch: 8,
-                        out_ch: 16,
-                        kernel: 3,
-                        stride: 1,
-                        pad: 1,
-                        in_hw: 4,
-                    },
-                },
-                Layer { name: "r".into(), kind: LayerKind::Act { elems: 256 } },
-                Layer { name: "fc".into(), kind: LayerKind::Fc { in_features: 256, out_features: 8 } },
-            ],
-        }
-    }
+    use crate::models::fixtures::tiny_net;
+    use crate::models::{Layer, LayerKind};
 
     #[test]
     fn second_lookup_hits_and_shares_the_artifact() {

@@ -2,21 +2,25 @@
 //! Shared by the `dbpim` CLI (`dbpim fig11` …) and the bench targets in
 //! `rust/benches/`, so the same code regenerates every reported row.
 //!
-//! Parallelism is one level at a time, picked per driver: drivers that
-//! fan (network × config) jobs over `run_parallel` run each inner
-//! simulation serially (nesting the per-layer fan-out on top would
-//! oversubscribe the pool — `run_parallel` spawns fresh threads per
-//! call), while drivers without an outer fan-out (fig13) parallelize
-//! across layers instead. Results are bit-identical either way; set
-//! `DBPIM_ENGINE=sequential|parallel` to override for A/B timing.
+//! Every driver is a declarative [`SweepSpec`]: a list of axis cells
+//! (e.g. network × sparsity point), a job function mapping one cell to
+//! one row, and an optional merge over the collected rows. One generic
+//! executor ([`SweepSpec::run`]) owns the sweep-wide [`CompileCache`]
+//! and its hit/miss counters, fans the cells out over the shared
+//! `coordinator::pool`, and returns rows in axis order — bit-identical
+//! for any worker count, steal order, or `DBPIM_ENGINE` choice.
 //!
-//! Every sweep driver shares one [`CompileCache`] across its jobs, so
-//! `(arch, layer, sparsity, seed)` combinations repeated across sweep
-//! points — e.g. fig11's dense baseline, identical at all four sparsity
-//! points — compile once; the `*_with_stats` variants surface the
-//! hit/miss counters for the driver summaries.
-
-use std::sync::Arc;
+//! Parallelism nests: a sweep cell's simulation fans out across layers,
+//! and each layer across core segments, all into the same pool (nested
+//! scopes execute or steal child jobs instead of spawning threads — no
+//! oversubscription, no "one level at a time" restriction). Set
+//! `DBPIM_ENGINE=sequential` to force every level serial for A/B
+//! timing; rows are bit-identical either way.
+//!
+//! Combinations repeated across sweep points — e.g. fig11's dense
+//! baseline, identical at all four sparsity points — compile once via
+//! the shared cache; the `*_with_stats` variants surface the hit/miss
+//! counters for the driver summaries.
 
 use crate::arch::ArchConfig;
 use crate::compiler::{CacheStats, CompileCache, SparsityConfig};
@@ -25,33 +29,78 @@ use crate::models::{self, Network};
 use crate::sim::{self, Engine, OpCategory, SimReport};
 use crate::stats;
 
-use super::run_parallel;
+use super::pool;
 
 /// `DBPIM_ENGINE` override (spelling per `Engine::parse`).
 fn env_engine() -> Option<Engine> {
     std::env::var("DBPIM_ENGINE").ok().and_then(|s| Engine::parse(&s))
 }
 
-/// Simulation nested inside an outer `run_parallel` fan-out: serial by
-/// default — the (network × config) jobs already saturate the pool.
-/// Compilation goes through the sweep's shared [`CompileCache`], so
-/// combinations repeated across sweep points (most prominently the
-/// dense baseline every figure normalizes against) compile once.
-fn simulate(
-    net: &Network,
-    sp: SparsityConfig,
-    arch: &ArchConfig,
-    seed: u64,
-    cache: &CompileCache,
-) -> SimReport {
-    let engine = env_engine().unwrap_or(Engine::Sequential);
-    sim::simulate_network_cached(net, sp, arch, seed, engine, cache)
+/// Per-sweep shared context handed to every job: the sweep-wide compile
+/// cache and the engine the sweep's simulations run under.
+pub struct SweepCtx {
+    /// Content-keyed compile memo shared by all cells of the sweep.
+    pub cache: CompileCache,
+    engine: Engine,
 }
 
-/// Top-level simulation (no outer fan-out): parallel across layers.
-fn simulate_toplevel(net: &Network, sp: SparsityConfig, arch: &ArchConfig, seed: u64) -> SimReport {
-    let engine = env_engine().unwrap_or(Engine::Parallel);
-    sim::simulate_network_with_engine(net, sp, arch, seed, engine)
+impl SweepCtx {
+    fn new() -> Self {
+        SweepCtx { cache: CompileCache::new(), engine: env_engine().unwrap_or(Engine::Parallel) }
+    }
+
+    /// Simulate one sweep cell: compiles through the sweep's cache and
+    /// (by default) nests layer- and segment-level jobs into the same
+    /// worker pool the sweep itself fans out on.
+    pub fn simulate(
+        &self,
+        net: &Network,
+        sp: SparsityConfig,
+        arch: &ArchConfig,
+        seed: u64,
+    ) -> SimReport {
+        sim::simulate_network_cached(net, sp, arch, seed, self.engine, &self.cache)
+    }
+}
+
+/// A declarative experiment sweep: `axes` cells, each mapped to one row
+/// by `job`. The executor owns the [`SweepCtx`] (cache + engine) and
+/// the fan-out; drivers only declare *what* to compute.
+pub struct SweepSpec<A, F> {
+    pub axes: Vec<A>,
+    pub job: F,
+}
+
+impl<A, F> SweepSpec<A, F> {
+    /// Fan the cells over the shared pool; rows come back in axis
+    /// order regardless of worker count or steal order.
+    pub fn run<R>(self) -> (Vec<R>, CacheStats)
+    where
+        A: Send,
+        R: Send,
+        F: Fn(A, &SweepCtx) -> R + Sync,
+    {
+        let SweepSpec { axes, job } = self;
+        let ctx = SweepCtx::new();
+        let (job_ref, ctx_ref) = (&job, &ctx);
+        let rows = pool::scope(move |s| {
+            for cell in axes {
+                s.spawn(move || job_ref(cell, ctx_ref));
+            }
+        });
+        (rows, ctx.cache.stats())
+    }
+
+    /// [`run`](Self::run), then fold the rows with `merge`.
+    pub fn run_merged<R, Out>(self, merge: impl FnOnce(Vec<R>) -> Out) -> (Out, CacheStats)
+    where
+        A: Send,
+        R: Send,
+        F: Fn(A, &SweepCtx) -> R + Sync,
+    {
+        let (rows, cache) = self.run();
+        (merge(rows), cache)
+    }
 }
 
 /// Fig. 11 row: weight-sparsity-only speedup + energy vs dense baseline.
@@ -83,35 +132,26 @@ pub fn fig11_with_stats(seed: u64) -> (Vec<Fig11Row>, CacheStats) {
     let points = [(0.0, 0.75), (0.2, 0.80), (0.4, 0.85), (0.6, 0.90)];
     let arch = ArchConfig::weights_only();
     let base_arch = ArchConfig::dense_baseline();
-    let cache = Arc::new(CompileCache::new());
-
-    let jobs: Vec<Box<dyn FnOnce() -> Fig11Row + Send>> = nets
+    let axes: Vec<(&str, f64, f64)> = nets
         .iter()
-        .flat_map(|&name| {
-            let arch = &arch;
-            let base_arch = &base_arch;
-            let cache = &cache;
-            points.iter().map(move |&(v, total)| {
-                let arch = arch.clone();
-                let base_arch = base_arch.clone();
-                let cache = Arc::clone(cache);
-                Box::new(move || {
-                    let net = models::by_name(name).unwrap();
-                    let r = simulate(&net, SparsityConfig::hybrid(v), &arch, seed, &cache);
-                    let b = simulate(&net, SparsityConfig::dense(), &base_arch, seed, &cache);
-                    Fig11Row {
-                        network: name.to_string(),
-                        total_sparsity: total,
-                        value_sparsity: v,
-                        speedup: pim_speedup(&r, &b),
-                        energy_saving: 1.0 - pim_energy_ratio(&r, &b),
-                    }
-                }) as Box<dyn FnOnce() -> Fig11Row + Send>
-            })
-        })
+        .flat_map(|&name| points.iter().map(move |&(v, total)| (name, v, total)))
         .collect();
-    let rows = run_parallel(jobs, super::default_workers());
-    (rows, cache.stats())
+    SweepSpec {
+        axes,
+        job: |(name, v, total): (&str, f64, f64), ctx: &SweepCtx| {
+            let net = models::by_name(name).unwrap();
+            let r = ctx.simulate(&net, SparsityConfig::hybrid(v), &arch, seed);
+            let b = ctx.simulate(&net, SparsityConfig::dense(), &base_arch, seed);
+            Fig11Row {
+                network: name.to_string(),
+                total_sparsity: total,
+                value_sparsity: v,
+                speedup: pim_speedup(&r, &b),
+                energy_saving: 1.0 - pim_energy_ratio(&r, &b),
+            }
+        },
+    }
+    .run()
 }
 
 fn pim_speedup(r: &SimReport, b: &SimReport) -> f64 {
@@ -160,35 +200,26 @@ pub fn fig12_with_stats(seed: u64) -> (Vec<Fig12Row>, CacheStats) {
         ("value", ArchConfig::value_only(), SparsityConfig { value_sparsity: 0.6, fta: false }),
         ("hybrid", ArchConfig::db_pim(), SparsityConfig::hybrid(0.6)),
     ];
-    let nets: Vec<Network> = models::zoo();
     let base_arch = ArchConfig::dense_baseline();
-    let cache = Arc::new(CompileCache::new());
-
-    let jobs: Vec<Box<dyn FnOnce() -> Vec<Fig12Row> + Send>> = nets
-        .into_iter()
-        .map(|net| {
-            let configs = configs.clone();
-            let base_arch = base_arch.clone();
-            let cache = Arc::clone(&cache);
-            Box::new(move || {
-                let base = simulate(&net, SparsityConfig::dense(), &base_arch, seed, &cache);
-                configs
-                    .iter()
-                    .map(|(label, arch, sp)| {
-                        let r = simulate(&net, *sp, arch, seed, &cache);
-                        Fig12Row {
-                            network: net.name.clone(),
-                            approach: label,
-                            speedup: r.speedup_vs(&base),
-                            energy_norm: r.energy_ratio_vs(&base),
-                        }
-                    })
-                    .collect()
-            }) as Box<dyn FnOnce() -> Vec<Fig12Row> + Send>
-        })
-        .collect();
-    let rows = run_parallel(jobs, super::default_workers()).into_iter().flatten().collect();
-    (rows, cache.stats())
+    SweepSpec {
+        axes: models::zoo(),
+        job: |net: Network, ctx: &SweepCtx| {
+            let base = ctx.simulate(&net, SparsityConfig::dense(), &base_arch, seed);
+            configs
+                .iter()
+                .map(|cfg| {
+                    let r = ctx.simulate(&net, cfg.2, &cfg.1, seed);
+                    Fig12Row {
+                        network: net.name.clone(),
+                        approach: cfg.0,
+                        speedup: r.speedup_vs(&base),
+                        energy_norm: r.energy_ratio_vs(&base),
+                    }
+                })
+                .collect::<Vec<Fig12Row>>()
+        },
+    }
+    .run_merged(|nested| nested.into_iter().flatten().collect())
 }
 
 /// Fig. 13 row: execution-time share per op category.
@@ -203,16 +234,12 @@ pub struct Fig13Row {
 
 /// Fig. 13: MobileNetV2 + EfficientNetB0 op-time breakdown on DB-PIM.
 pub fn fig13(seed: u64) -> Vec<Fig13Row> {
-    ["mobilenet_v2", "efficientnet_b0"]
-        .iter()
-        .map(|&name| {
+    let arch = ArchConfig::db_pim();
+    let (rows, _) = SweepSpec {
+        axes: vec!["mobilenet_v2", "efficientnet_b0"],
+        job: |name: &'static str, ctx: &SweepCtx| {
             let net = models::by_name(name).unwrap();
-            let r = simulate_toplevel(
-                &net,
-                SparsityConfig::hybrid(0.6),
-                &ArchConfig::db_pim(),
-                seed,
-            );
+            let r = ctx.simulate(&net, SparsityConfig::hybrid(0.6), &arch, seed);
             let mut row = Fig13Row {
                 network: name.to_string(),
                 pw_std_conv_fc: 0.0,
@@ -229,8 +256,10 @@ pub fn fig13(seed: u64) -> Vec<Fig13Row> {
                 }
             }
             row
-        })
-        .collect()
+        },
+    }
+    .run();
+    rows
 }
 
 /// Table II row for "this work": measured U_act per network + peak
@@ -254,33 +283,27 @@ pub fn table2(seed: u64) -> Table2 {
 /// [`table2`] plus the sweep's compile-cache counters.
 pub fn table2_with_stats(seed: u64) -> (Table2, CacheStats) {
     let arch = ArchConfig::db_pim();
-    let nets = models::zoo();
-    let cache = Arc::new(CompileCache::new());
-    let jobs: Vec<Box<dyn FnOnce() -> (String, f64) + Send>> = nets
-        .into_iter()
-        .map(|net| {
-            let arch = arch.clone();
-            let cache = Arc::clone(&cache);
-            Box::new(move || {
-                let r = simulate(&net, SparsityConfig::hybrid(0.6), &arch, seed, &cache);
-                (net.name.clone(), r.u_act())
-            }) as Box<dyn FnOnce() -> (String, f64) + Send>
-        })
-        .collect();
-    let u_act = run_parallel(jobs, super::default_workers());
-    let p1 = stats::peak_throughput(&arch, Some(1));
-    let p2 = stats::peak_throughput(&arch, Some(2));
-    let pd = stats::peak_throughput(&arch, None);
-    let t = Table2 {
-        u_act,
-        peak_tops_phi1: p1.tops,
-        peak_gops_per_macro_phi1: p1.gops_per_macro,
-        peak_gops_per_macro_phi2: p2.gops_per_macro,
-        dense_gops_per_macro: pd.gops_per_macro,
-        total_macros: arch.total_macros(),
-        pim_kb: arch.pim_capacity_kb(),
-    };
-    (t, cache.stats())
+    SweepSpec {
+        axes: models::zoo(),
+        job: |net: Network, ctx: &SweepCtx| {
+            let r = ctx.simulate(&net, SparsityConfig::hybrid(0.6), &arch, seed);
+            (net.name.clone(), r.u_act())
+        },
+    }
+    .run_merged(|u_act| {
+        let p1 = stats::peak_throughput(&arch, Some(1));
+        let p2 = stats::peak_throughput(&arch, Some(2));
+        let pd = stats::peak_throughput(&arch, None);
+        Table2 {
+            u_act,
+            peak_tops_phi1: p1.tops,
+            peak_gops_per_macro_phi1: p1.gops_per_macro,
+            peak_gops_per_macro_phi2: p2.gops_per_macro,
+            dense_gops_per_macro: pd.gops_per_macro,
+            total_macros: arch.total_macros(),
+            pim_kb: arch.pim_capacity_kb(),
+        }
+    })
 }
 
 /// Table III row: on-chip execution time (std/pw-conv + FC only).
@@ -299,60 +322,34 @@ pub fn table3(seed: u64) -> Vec<Table3Row> {
 
 /// [`table3`] plus the sweep's compile-cache counters.
 pub fn table3_with_stats(seed: u64) -> (Vec<Table3Row>, CacheStats) {
-    let nets = models::zoo();
-    let cache = Arc::new(CompileCache::new());
-    let jobs: Vec<Box<dyn FnOnce() -> Table3Row + Send>> = nets
-        .into_iter()
-        .map(|net| {
-            let cache = Arc::clone(&cache);
-            Box::new(move || {
-                let dac = simulate(
-                    &net,
-                    SparsityConfig { value_sparsity: 0.0, fta: true },
-                    &ArchConfig::dac24(),
-                    seed,
-                    &cache,
-                );
-                let bit = simulate(
-                    &net,
-                    SparsityConfig { value_sparsity: 0.0, fta: true },
-                    &ArchConfig::bit_only(),
-                    seed,
-                    &cache,
-                );
-                let hyb = simulate(
-                    &net,
-                    SparsityConfig::hybrid(0.6),
-                    &ArchConfig::db_pim(),
-                    seed,
-                    &cache,
-                );
-                Table3Row {
-                    network: net.name.clone(),
-                    dac24_ms: dac.pim_time_ms(),
-                    bit_level_ms: bit.pim_time_ms(),
-                    hybrid_ms: hyb.pim_time_ms(),
-                }
-            }) as Box<dyn FnOnce() -> Table3Row + Send>
-        })
-        .collect();
-    let rows = run_parallel(jobs, super::default_workers());
-    (rows, cache.stats())
+    let bitsp = SparsityConfig { value_sparsity: 0.0, fta: true };
+    SweepSpec {
+        axes: models::zoo(),
+        job: |net: Network, ctx: &SweepCtx| {
+            let dac = ctx.simulate(&net, bitsp, &ArchConfig::dac24(), seed);
+            let bit = ctx.simulate(&net, bitsp, &ArchConfig::bit_only(), seed);
+            let hyb = ctx.simulate(&net, SparsityConfig::hybrid(0.6), &ArchConfig::db_pim(), seed);
+            Table3Row {
+                network: net.name.clone(),
+                dac24_ms: dac.pim_time_ms(),
+                bit_level_ms: bit.pim_time_ms(),
+                hybrid_ms: hyb.pim_time_ms(),
+            }
+        },
+    }
+    .run()
 }
 
 /// Fig. 3 data (both panels) for all five networks.
 pub fn fig3(seed: u64) -> (Vec<stats::ZeroBitStats>, Vec<stats::ZeroColumnStats>) {
-    let nets = models::zoo();
-    let jobs: Vec<Box<dyn FnOnce() -> (stats::ZeroBitStats, stats::ZeroColumnStats) + Send>> = nets
-        .into_iter()
-        .map(|net| {
-            Box::new(move || {
-                (stats::zero_bit_stats(&net, 0.6, seed), stats::zero_column_stats(&net, seed))
-            })
-                as Box<dyn FnOnce() -> (stats::ZeroBitStats, stats::ZeroColumnStats) + Send>
-        })
-        .collect();
-    run_parallel(jobs, super::default_workers()).into_iter().unzip()
+    let (panels, _) = SweepSpec {
+        axes: models::zoo(),
+        job: |net: Network, _ctx: &SweepCtx| {
+            (stats::zero_bit_stats(&net, 0.6, seed), stats::zero_column_stats(&net, seed))
+        },
+    }
+    .run();
+    panels.into_iter().unzip()
 }
 
 // ---------------------------------------------------------------------------
@@ -445,5 +442,28 @@ mod tests {
         for (name, u) in &t.u_act {
             assert!(*u > 0.4, "{name} U_act {u}");
         }
+    }
+
+    #[test]
+    fn sweep_executor_preserves_axis_order_and_counts_cache() {
+        let net = crate::models::fixtures::tiny_net();
+        let arch = ArchConfig::db_pim();
+        let (rows, cache) = SweepSpec {
+            axes: vec![0u64, 1, 2, 0],
+            job: |seed: u64, ctx: &SweepCtx| {
+                let r = ctx.simulate(&net, SparsityConfig::hybrid(0.5), &arch, seed);
+                (seed, r.total_cycles())
+            },
+        }
+        .run();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.iter().map(|r| r.0).collect::<Vec<_>>(), vec![0, 1, 2, 0]);
+        // identical cells must produce bit-identical rows
+        assert_eq!(rows[0].1, rows[3].1);
+        // 4 cells × 2 PIM layers looked up; ≥ 6 real compiles (the
+        // repeated cell hits unless both cells raced the same key,
+        // which the cache resolves by double-compiling — still exact)
+        assert_eq!(cache.lookups(), 8);
+        assert!(cache.misses >= 6, "{cache:?}");
     }
 }

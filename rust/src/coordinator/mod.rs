@@ -1,62 +1,18 @@
-//! The coordinator: schedules simulation/verification jobs across
-//! worker threads, runs the paper's experiments end-to-end, and emits
-//! JSON reports.
+//! The coordinator: the persistent work-stealing worker pool that every
+//! parallel layer of the stack schedules into ([`pool`]), and the
+//! declarative experiment drivers ([`experiments`]) that regenerate the
+//! paper's figures/tables on top of it.
 //!
-//! (The offline image has no tokio; the event loop is std threads with
-//! scoped fork-join, which matches the workload — batch experiment
-//! sweeps, not request serving.)
+//! (The offline image has no tokio/rayon; [`pool`] is std threads with
+//! a global injector + per-worker deques. Nested `scope()`s execute or
+//! steal child jobs instead of spawning threads, so sweep × layer ×
+//! segment parallelism composes without oversubscription — DESIGN.md
+//! §5/§8.)
 
 pub mod experiments;
-
-use std::sync::Mutex;
-
-/// Run `jobs` across up to `workers` threads, preserving output order.
-pub fn run_parallel<T: Send, F>(jobs: Vec<F>, workers: usize) -> Vec<T>
-where
-    F: FnOnce() -> T + Send,
-{
-    let n = jobs.len();
-    let queue: Mutex<Vec<(usize, F)>> = Mutex::new(jobs.into_iter().enumerate().rev().collect());
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
-    let workers = workers.clamp(1, n.max(1));
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let job = queue.lock().unwrap().pop();
-                match job {
-                    Some((idx, f)) => {
-                        let out = f();
-                        results.lock().unwrap()[idx] = Some(out);
-                    }
-                    None => break,
-                }
-            });
-        }
-    });
-    results.into_inner().unwrap().into_iter().map(|r| r.expect("job panicked")).collect()
-}
+pub mod pool;
 
 /// Default worker count (leave headroom for the OS).
 pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 16)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn parallel_preserves_order() {
-        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> =
-            (0..32usize).map(|i| Box::new(move || i * i) as _).collect();
-        let out = run_parallel(jobs, 4);
-        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn parallel_single_worker() {
-        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
-            (0..3u32).map(|i| Box::new(move || i + 1) as _).collect();
-        assert_eq!(run_parallel(jobs, 1), vec![1, 2, 3]);
-    }
 }

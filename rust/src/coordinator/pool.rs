@@ -1,0 +1,589 @@
+//! Persistent work-stealing worker pool (std threads only; the offline
+//! image has neither rayon nor crossbeam).
+//!
+//! Every parallel layer of the stack — experiment sweeps, the per-layer
+//! fan-out in `sim::simulate_network`, and the per-segment fan-out in
+//! `sim::engine::run_layer` — schedules into one lazily-initialized
+//! process-wide pool, so *nested* parallelism composes without
+//! oversubscription: a [`scope`] opened on a worker thread pushes its
+//! child jobs onto that worker's own deque and then *helps* (runs its
+//! own children LIFO, steals from siblings, drains the global injector)
+//! instead of blocking a thread or spawning new ones. After pool
+//! initialization, no code path spawns another OS thread.
+//!
+//! Structure:
+//!
+//! * one global **injector** queue (FIFO) fed by non-pool threads;
+//! * one **deque** per worker: the owner pushes/pops its own jobs LIFO
+//!   (children first — best cache locality, bounded queue depth) while
+//!   thieves steal FIFO from the opposite end (oldest = largest work);
+//! * a generation-counted condvar so idle workers sleep instead of
+//!   spinning, with a short timeout as a lost-wakeup backstop.
+//!
+//! **Determinism contract:** every spawned job writes its result into
+//! its own pre-assigned slot (per-slot handles — there is no shared
+//! `Mutex<Vec<…>>` to contend on), and [`scope`] returns results in
+//! spawn order. Scheduling and steal order affect wall-clock only; as
+//! long as jobs are pure functions of their inputs (every simulation
+//! job is — DESIGN.md §3), results are bit-identical for any worker
+//! count, including 1.
+//!
+//! Worker count resolution, at first use: [`configure_workers`] (the
+//! CLI's `--workers N`) > `DBPIM_WORKERS` env > [`super::default_workers`].
+//! [`Pool::new`] builds a private pool (tests randomize worker counts);
+//! dropping an owned pool shuts its threads down. Jobs spawned from a
+//! pool's worker (or from a thread helping it) stay on *that* pool.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// A type-erased, lifetime-erased unit of work (see the safety note in
+/// [`Scope::spawn`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Which pool the current thread executes for: set permanently on pool
+/// workers, and temporarily on any thread helping a pool drain a scope.
+/// `usize` is the worker's deque index (None for helpers).
+type Context = (Arc<Shared>, Option<usize>);
+
+thread_local! {
+    static CURRENT: RefCell<Option<Context>> = RefCell::new(None);
+}
+
+/// Wake-up channel: a generation counter under the mutex prevents the
+/// classic lost-wakeup race (bump + notify happen atomically w.r.t. the
+/// sleeper's check), and the wait timeout bounds any residual stall.
+struct Sleep {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+/// State shared by a pool's workers, its queues, and every scope
+/// scheduled on it.
+struct Shared {
+    injector: Mutex<VecDeque<Job>>,
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    sleep: Sleep,
+    /// Threads currently registered in (or entering) `idle_wait`. Lets
+    /// `notify` skip the lock + broadcast entirely on the hot path when
+    /// nobody is asleep — the common case while all workers are busy.
+    sleepers: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    /// Wake sleepers after a push or a job completion. Fast path: no
+    /// registered sleepers ⇒ nothing to do. The SeqCst pairing with
+    /// `idle_wait`'s registration makes this race-free: if this load
+    /// sees 0, the sleeper registered *after* it, so its post-
+    /// registration queue re-check observes the already-pushed job.
+    fn notify(&self) {
+        if self.sleepers.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        self.notify_locked();
+    }
+
+    /// Unconditional bump + broadcast (shutdown, or sleepers present).
+    fn notify_locked(&self) {
+        let mut gen = self.sleep.gen.lock().unwrap();
+        *gen = gen.wrapping_add(1);
+        self.sleep.cv.notify_all();
+    }
+
+    fn gen(&self) -> u64 {
+        *self.sleep.gen.lock().unwrap()
+    }
+
+    fn has_work(&self) -> bool {
+        if !self.injector.lock().unwrap().is_empty() {
+            return true;
+        }
+        self.deques.iter().any(|d| !d.lock().unwrap().is_empty())
+    }
+
+    /// Sleep until the generation moves past `gen0` (or a timeout, as a
+    /// backstop). Spurious returns are fine — all callers re-check
+    /// their condition in a loop. Registration (`sleepers`) precedes a
+    /// re-check of the queues *and* of the caller's own wake condition
+    /// (`done`, e.g. "my scope's pending hit 0"), closing the race
+    /// against `notify`'s fast path — the SeqCst registration orders
+    /// the re-checks after any notifier that skipped us — while the
+    /// gen counter closes the classic lost-wakeup race against
+    /// notifiers that did take the slow path.
+    fn idle_wait(&self, gen0: u64, done: impl Fn() -> bool) {
+        self.sleepers.fetch_add(1, Ordering::SeqCst);
+        if !self.has_work() && !done() {
+            let guard = self.sleep.gen.lock().unwrap();
+            if *guard == gen0 && !self.shutdown.load(Ordering::Acquire) {
+                drop(self.sleep.cv.wait_timeout(guard, Duration::from_millis(50)).unwrap());
+            }
+        }
+        self.sleepers.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Push one job: onto the spawning worker's own deque when called
+    /// from a pool thread (LIFO locality), else onto the injector.
+    fn push(&self, job: Job, worker: Option<usize>) {
+        match worker {
+            Some(i) => self.deques[i].lock().unwrap().push_back(job),
+            None => self.injector.lock().unwrap().push_back(job),
+        }
+        self.notify();
+    }
+
+    /// Pop the next runnable job: own deque (LIFO) → injector (FIFO) →
+    /// steal from sibling deques (FIFO end).
+    fn find_job(&self, worker: Option<usize>) -> Option<Job> {
+        if let Some(i) = worker {
+            if let Some(job) = self.deques[i].lock().unwrap().pop_back() {
+                return Some(job);
+            }
+        }
+        if let Some(job) = self.injector.lock().unwrap().pop_front() {
+            return Some(job);
+        }
+        let n = self.deques.len();
+        let start = worker.map_or(0, |i| i + 1);
+        for off in 0..n {
+            let j = (start + off) % n;
+            if worker == Some(j) {
+                continue;
+            }
+            if let Some(job) = self.deques[j].lock().unwrap().pop_front() {
+                return Some(job);
+            }
+        }
+        None
+    }
+
+    /// Drive jobs until `state` has no pending children: the joining
+    /// thread *helps* — its own deque holds the scope's children, so
+    /// nested scopes execute or steal instead of blocking a thread.
+    /// Unrelated jobs picked up while helping are fine: jobs never
+    /// block except in nested joins, which themselves help, so progress
+    /// is guaranteed.
+    fn join(&self, state: &ScopeState, worker: Option<usize>) {
+        while state.pending.load(Ordering::SeqCst) != 0 {
+            let gen0 = self.gen();
+            if let Some(job) = self.find_job(worker) {
+                job();
+                continue;
+            }
+            self.idle_wait(gen0, || state.pending.load(Ordering::SeqCst) == 0);
+        }
+    }
+}
+
+/// RAII guard that binds the current thread to a pool context and
+/// restores the previous binding on drop.
+struct ContextGuard {
+    prev: Option<Context>,
+}
+
+fn enter_context(shared: &Arc<Shared>, worker: Option<usize>) -> ContextGuard {
+    let prev = CURRENT.with(|c| c.borrow_mut().replace((Arc::clone(shared), worker)));
+    ContextGuard { prev }
+}
+
+impl Drop for ContextGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CURRENT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+fn current_context() -> Option<Context> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// The current thread's deque index *on this particular pool* (None for
+/// external threads and for workers/helpers of a different pool).
+fn current_worker_on(shared: &Arc<Shared>) -> Option<usize> {
+    CURRENT.with(|c| match &*c.borrow() {
+        Some((s, idx)) if Arc::ptr_eq(s, shared) => *idx,
+        _ => None,
+    })
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    let _ctx = enter_context(&shared, Some(idx));
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        let gen0 = shared.gen();
+        match shared.find_job(Some(idx)) {
+            Some(job) => job(),
+            None => shared.idle_wait(gen0, || false),
+        }
+    }
+}
+
+/// One job's private result cell. Written exactly once, by the one job
+/// that owns it; read exactly once, by the scope owner after the join
+/// barrier (the `pending` Release/Acquire pair orders the write before
+/// the read). No lock, hence no contention between completing jobs.
+struct Slot<T> {
+    value: std::cell::UnsafeCell<Option<T>>,
+}
+
+// SAFETY: access is disciplined by the scope protocol above — a single
+// writer (the owning job) before the join barrier, a single reader (the
+// scope owner) after it.
+unsafe impl<T: Send> Sync for Slot<T> {}
+
+impl<T> Slot<T> {
+    fn new() -> Self {
+        Slot { value: std::cell::UnsafeCell::new(None) }
+    }
+
+    /// SAFETY: called at most once, only by the job owning this slot.
+    unsafe fn put(&self, v: T) {
+        *self.value.get() = Some(v);
+    }
+
+    /// SAFETY: called only after the owning scope joined (`pending`
+    /// observed 0 with Acquire).
+    unsafe fn take(&self) -> Option<T> {
+        (*self.value.get()).take()
+    }
+}
+
+/// Join state of one scope: outstanding child count + first panic.
+struct ScopeState {
+    pending: AtomicUsize,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+/// An in-flight fork-join scope over one pool. Obtained from [`scope`]
+/// / [`Pool::scope`]; [`Scope::spawn`] schedules children, and the
+/// scope joins (helping, not blocking) before results are returned in
+/// spawn order.
+pub struct Scope<'env, T: Send> {
+    shared: Arc<Shared>,
+    state: Arc<ScopeState>,
+    slots: Vec<Arc<Slot<T>>>,
+    /// Invariant over `'env` so borrowed captures can't be shortened.
+    marker: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env, T: Send + 'env> Scope<'env, T> {
+    /// Schedule one child job. Its result lands in the slot matching
+    /// its spawn position; a panic is captured and re-raised from the
+    /// scope owner after all siblings finish.
+    pub fn spawn<F>(&mut self, f: F)
+    where
+        F: FnOnce() -> T + Send + 'env,
+    {
+        let slot = Arc::new(Slot::new());
+        self.slots.push(Arc::clone(&slot));
+        self.state.pending.fetch_add(1, Ordering::SeqCst);
+        let state = Arc::clone(&self.state);
+        let shared = Arc::clone(&self.shared);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            match catch_unwind(AssertUnwindSafe(f)) {
+                Ok(v) => unsafe { slot.put(v) },
+                Err(p) => {
+                    let mut first = state.panic.lock().unwrap();
+                    if first.is_none() {
+                        *first = Some(p);
+                    }
+                }
+            }
+            // SeqCst: orders this decrement before `notify`'s sleeper
+            // check, so a joiner that registers as a sleeper after
+            // being skipped here observes pending == 0 in its own
+            // re-check (idle_wait's `done`). SeqCst subsumes the
+            // Release the slot-write publication needs.
+            state.pending.fetch_sub(1, Ordering::SeqCst);
+            shared.notify();
+        });
+        // SAFETY: lifetime erasure in the rayon/crossbeam mold. The
+        // scope unconditionally joins (pending == 0, even when the
+        // scope body panics) before `scope_on` returns, so this job —
+        // and any `'env` borrow inside it — never outlives the stack
+        // frame that owns the borrowed data.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Box<dyn FnOnce() + Send>>(job)
+        };
+        let worker = current_worker_on(&self.shared);
+        self.shared.push(job, worker);
+    }
+}
+
+fn scope_on<'env, T, F>(shared: Arc<Shared>, f: F) -> Vec<T>
+where
+    T: Send + 'env,
+    F: FnOnce(&mut Scope<'env, T>) + 'env,
+{
+    let mut sc = Scope {
+        shared: Arc::clone(&shared),
+        state: Arc::new(ScopeState { pending: AtomicUsize::new(0), panic: Mutex::new(None) }),
+        slots: Vec::new(),
+        marker: PhantomData,
+    };
+    let body = catch_unwind(AssertUnwindSafe(|| f(&mut sc)));
+    {
+        // Bind this thread to the pool while helping, so jobs executed
+        // here route *their* nested spawns back to the same pool.
+        let worker = current_worker_on(&shared);
+        let _ctx = enter_context(&shared, worker);
+        shared.join(&sc.state, worker);
+    }
+    if let Err(p) = body {
+        resume_unwind(p);
+    }
+    if let Some(p) = sc.state.panic.lock().unwrap().take() {
+        resume_unwind(p);
+    }
+    sc.slots
+        .iter()
+        .map(|s| unsafe { s.take() }.expect("pool job did not complete"))
+        .collect()
+}
+
+/// A worker pool. Use [`global`] (or the free [`scope`] / [`run_jobs`])
+/// for production paths; `Pool::new` for tests that need a private pool
+/// with a specific worker count.
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` threads (min 1). The only place the
+    /// whole crate creates OS threads.
+    pub fn new(workers: usize) -> Pool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Sleep { gen: Mutex::new(0), cv: Condvar::new() },
+            sleepers: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dbpim-pool-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        Pool { shared, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.shared.deques.len()
+    }
+
+    /// Open a fork-join scope on *this* pool (see the free [`scope`]).
+    pub fn scope<'env, T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce(&mut Scope<'env, T>) + 'env,
+    {
+        scope_on(Arc::clone(&self.shared), f)
+    }
+
+    /// Run a batch of jobs on this pool; results in input order.
+    pub fn run_jobs<'env, T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'env,
+        F: FnOnce() -> T + Send + 'env,
+    {
+        self.scope(move |s| {
+            for job in jobs {
+                s.spawn(job);
+            }
+        })
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        // bypass the no-sleepers fast path so shutdown is prompt even
+        // if a worker is mid-registration
+        self.shared.notify_locked();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global pool
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+/// 0 = unset; set by [`configure_workers`] before first pool use.
+static CONFIGURED_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Explicitly set the global pool size (the CLI's `--workers N`). Must
+/// run before the pool's first use; returns false if the pool was
+/// already initialized (the request then has no effect).
+pub fn configure_workers(n: usize) -> bool {
+    CONFIGURED_WORKERS.store(n.max(1), Ordering::SeqCst);
+    GLOBAL.get().is_none()
+}
+
+fn env_workers() -> Option<usize> {
+    std::env::var("DBPIM_WORKERS").ok()?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+fn resolved_workers() -> usize {
+    let configured = CONFIGURED_WORKERS.load(Ordering::SeqCst);
+    let n = if configured > 0 {
+        configured
+    } else {
+        env_workers().unwrap_or_else(super::default_workers)
+    };
+    n.clamp(1, 256)
+}
+
+/// The process-wide pool, created on first use.
+pub fn global() -> &'static Pool {
+    GLOBAL.get_or_init(|| Pool::new(resolved_workers()))
+}
+
+/// Worker-thread count the global pool has — or would get, if it has
+/// not been initialized yet (read-only paths like `dbpim info` must
+/// not spawn the pool as a side effect of printing a number).
+pub fn effective_workers() -> usize {
+    GLOBAL.get().map(Pool::workers).unwrap_or_else(resolved_workers)
+}
+
+/// Open a fork-join scope on the current thread's pool: the pool this
+/// thread is a worker of (nested case), else the global pool. Returns
+/// the spawned jobs' results in spawn order.
+pub fn scope<'env, T, F>(f: F) -> Vec<T>
+where
+    T: Send + 'env,
+    F: FnOnce(&mut Scope<'env, T>) + 'env,
+{
+    let shared = match current_context() {
+        Some((s, _)) => s,
+        None => Arc::clone(&global().shared),
+    };
+    scope_on(shared, f)
+}
+
+/// Run a batch of jobs on the current thread's pool (see [`scope`]);
+/// results in input order. The direct replacement for the old
+/// fork-join `run_parallel` — same ordered-results contract, but jobs
+/// land on the persistent pool and may spawn nested work.
+pub fn run_jobs<'env, T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'env,
+    F: FnOnce() -> T + Send + 'env,
+{
+    scope(move |s| {
+        for job in jobs {
+            s.spawn(job);
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_jobs_preserves_order() {
+        let jobs: Vec<_> = (0..64usize).map(|i| move || i * i).collect();
+        assert_eq!(run_jobs(jobs), (0..64usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_pool_completes() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let jobs: Vec<_> = (0..8u32).map(|i| move || i + 1).collect();
+        assert_eq!(pool.run_jobs(jobs), (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scopes_execute_on_the_same_pool() {
+        let pool = Pool::new(3);
+        let outer: Vec<_> = (0..5usize)
+            .map(|i| {
+                move || {
+                    // resolves to `pool` via the worker/helper context
+                    let inner: Vec<_> = (0..7usize).map(|j| move || i * 10 + j).collect();
+                    run_jobs(inner).iter().sum::<usize>()
+                }
+            })
+            .collect();
+        let got = pool.run_jobs(outer);
+        let want: Vec<usize> = (0..5).map(|i| (0..7).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn scope_collects_in_spawn_order() {
+        let vals = scope(|s| {
+            for i in 0..10u64 {
+                s.spawn(move || i * 3);
+            }
+        });
+        assert_eq!(vals, (0..10).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_scope_returns_empty() {
+        let vals: Vec<u32> = scope(|_| {});
+        assert!(vals.is_empty());
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = Pool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_jobs(vec![|| -> usize { panic!("boom") }]);
+        }));
+        assert!(r.is_err(), "job panic must reach the scope owner");
+        // the worker caught the unwind: the pool stays functional
+        assert_eq!(pool.run_jobs(vec![|| 41usize + 1]), vec![42]);
+    }
+
+    #[test]
+    fn jobs_borrow_stack_data() {
+        let data: Vec<u64> = (0..100).collect();
+        let jobs: Vec<_> = data.chunks(10).map(|c| move || c.iter().sum::<u64>()).collect();
+        let sums = run_jobs(jobs);
+        assert_eq!(sums.len(), 10);
+        assert_eq!(sums.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn deep_nesting_does_not_deadlock() {
+        // 3 levels on a 2-worker pool: joins must help, not block
+        let pool = Pool::new(2);
+        let outer: Vec<_> = (0..4usize)
+            .map(|_| {
+                || {
+                    let mids: Vec<_> = (0..3usize)
+                        .map(|i| move || run_jobs(vec![move || i]).len() + i)
+                        .collect();
+                    run_jobs(mids).iter().sum::<usize>()
+                }
+            })
+            .collect();
+        assert_eq!(pool.run_jobs(outer), vec![6; 4]);
+    }
+
+    #[test]
+    fn zero_requested_workers_clamps_to_one() {
+        assert_eq!(Pool::new(0).workers(), 1);
+    }
+}

@@ -10,8 +10,12 @@
 //! dbpim fig3|fig11|fig12|fig13|table2|table3
 //!                          regenerate a paper figure/table (prints the
 //!                          rows + writes artifacts/<exp>.json)
-//! dbpim info               architecture summary
+//! dbpim info               architecture summary + effective pool size
 //! ```
+//!
+//! `--workers N` (any subcommand) sizes the shared worker pool; the
+//! `DBPIM_WORKERS` env var is consulted when the flag is absent, and
+//! `default_workers()` otherwise. Results never depend on the count.
 
 use dbpim::arch::ArchConfig;
 use dbpim::benchlib::{f2, pct, print_table};
@@ -22,7 +26,21 @@ use dbpim::models;
 use dbpim::sim;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    // Global flag, valid on every subcommand: size the worker pool
+    // before anything initializes it.
+    if let Some(i) = args.iter().position(|a| a == "--workers") {
+        match args.get(i + 1).and_then(|s| s.parse::<usize>().ok()) {
+            Some(n) if n >= 1 => {
+                dbpim::coordinator::pool::configure_workers(n);
+                args.drain(i..=i + 1);
+            }
+            _ => {
+                eprintln!("--workers expects a positive integer");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "verify" => cmd_verify(),
@@ -38,7 +56,7 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dbpim <verify|simulate|energy|trace|fig3|fig11|fig12|fig13|table2|table3|info>"
+                "usage: dbpim <verify|simulate|energy|trace|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N]"
             );
             2
         }
@@ -370,5 +388,9 @@ fn cmd_info() -> i32 {
             arch.has_simd,
         );
     }
+    println!(
+        "worker pool: {} threads (set with --workers N or DBPIM_WORKERS)",
+        dbpim::coordinator::pool::effective_workers()
+    );
     0
 }

@@ -1,0 +1,80 @@
+//! Shared tiny-network test fixtures.
+//!
+//! One definition for the small synthetic networks the unit tests
+//! (sim, compiler cache), the integration tests and the property tests
+//! all exercise — previously each site rebuilt its own copy inline.
+//! Not `#[cfg(test)]`: integration tests and benches link the crate
+//! from outside, so the fixtures must be ordinary public items.
+
+use super::{Layer, LayerKind, Network};
+
+/// A 3-layer conv → ReLU → FC network, big enough to produce several
+/// tiles per assignment and a SIMD layer, small enough for sub-second
+/// debug-mode simulation. The workhorse of the engine-equivalence and
+/// pooled-execution tests.
+pub fn small_net() -> Network {
+    Network {
+        name: "small".into(),
+        input_hw: 8,
+        input_ch: 16,
+        layers: vec![
+            Layer {
+                name: "c1".into(),
+                kind: LayerKind::Conv {
+                    in_ch: 16,
+                    out_ch: 32,
+                    kernel: 3,
+                    stride: 1,
+                    pad: 1,
+                    in_hw: 8,
+                },
+            },
+            Layer { name: "r1".into(), kind: LayerKind::Act { elems: 32 * 64 } },
+            Layer {
+                name: "fc".into(),
+                kind: LayerKind::Fc { in_features: 2048, out_features: 16 },
+            },
+        ],
+    }
+}
+
+/// An even smaller conv → ReLU → FC network for cache-keying tests,
+/// where compile cost matters more than simulated shape.
+pub fn tiny_net() -> Network {
+    Network {
+        name: "tiny".into(),
+        input_hw: 4,
+        input_ch: 8,
+        layers: vec![
+            Layer {
+                name: "c1".into(),
+                kind: LayerKind::Conv {
+                    in_ch: 8,
+                    out_ch: 16,
+                    kernel: 3,
+                    stride: 1,
+                    pad: 1,
+                    in_hw: 4,
+                },
+            },
+            Layer { name: "r".into(), kind: LayerKind::Act { elems: 256 } },
+            Layer { name: "fc".into(), kind: LayerKind::Fc { in_features: 256, out_features: 8 } },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_have_pim_and_simd_layers() {
+        for net in [small_net(), tiny_net()] {
+            assert_eq!(net.layers.len(), 3);
+            assert!(net.layers[0].kind.is_pim());
+            assert!(!net.layers[1].kind.is_pim());
+            assert!(net.layers[2].kind.is_pim());
+            assert!(net.pim_macs() > 0);
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! the paper uses — Fig. 13's execution-time breakdown falls out of
 //! this partition).
 
+pub mod fixtures;
 pub mod mininet;
 mod zoo;
 

@@ -3,9 +3,11 @@
 //!
 //! Within a phase, cores share no mutable state (each [`CoreExecutor`]
 //! owns its clock, events, occupancy cache and accumulator slice), so
-//! [`Engine::Parallel`] fans the phase's segments out over
-//! `coordinator::run_parallel` worker threads while
-//! [`Engine::Sequential`] runs them inline; both merge results in
+//! [`Engine::Parallel`] spawns the phase's segments into the shared
+//! `coordinator::pool` — composing with the layer- and sweep-level
+//! fan-outs above it, since nested pool scopes execute or steal instead
+//! of spawning threads — while [`Engine::Sequential`] runs them inline;
+//! both merge results in
 //! ascending core order and are bit-identical — same cycles, same
 //! [`EventCounts`], same functional accumulators — to each other and to
 //! the legacy flat-stream interpreter ([`run_layer_interp`]), which is
@@ -135,8 +137,7 @@ pub fn run_layer(
                 .iter()
                 .map(|seg| move || run_segment(machine, layer, x, seg, functional, m_total))
                 .collect();
-            let workers = phase.segments.len().min(crate::coordinator::default_workers());
-            crate::coordinator::run_parallel(jobs, workers)
+            crate::coordinator::pool::run_jobs(jobs)
         } else {
             phase
                 .segments

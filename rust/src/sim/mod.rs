@@ -3,9 +3,9 @@
 //! * [`machine`] — the machine façade (arch + energy + engine choice).
 //! * [`core_exec`] — per-core segment executor (clock, events,
 //!   accumulator slice, occupancy cache).
-//! * [`engine`] — barrier scheduler over segmented programs; fans
-//!   phases out over worker threads, bit-identical to the legacy
-//!   flat-stream interpreter it also hosts.
+//! * [`engine`] — barrier scheduler over segmented programs; spawns
+//!   phase segments into the shared worker pool, bit-identical to the
+//!   legacy flat-stream interpreter it also hosts.
 //! * [`occupancy`] — word-packed bit-plane occupancy precompute for the
 //!   IPU inner loop (step-major storage).
 //! * [`kernels`] — batched hot-loop kernels: the step-major word-batched
@@ -130,9 +130,11 @@ impl SimReport {
 /// statistics (DESIGN.md §3), exact event/cycle accounting.
 ///
 /// Layers are independent jobs in perf mode (weights and activations
-/// are synthesized per layer index), so compile + simulate fans out
-/// across the worker pool; per-layer stats merge back in layer order
-/// and are bit-identical to the sequential walk.
+/// are synthesized per layer index), so compile + simulate spawns into
+/// the shared `coordinator::pool` — nesting under a sweep driver's
+/// fan-out and over each layer's per-segment fan-out; per-layer stats
+/// merge back in layer order and are bit-identical to the sequential
+/// walk.
 pub fn simulate_network(
     net: &Network,
     sparsity: SparsityConfig,
@@ -177,9 +179,10 @@ fn simulate_pim_layer(
 }
 
 /// [`simulate_network`] with an explicit engine: `Engine::Parallel`
-/// fans out across layers (each layer's cores then run inline to avoid
-/// nested oversubscription); `Engine::Sequential` is the legacy fully
-/// serial walk. Both produce identical reports.
+/// fans out across layers *and* lets each layer fan its core segments
+/// into the same pool (nested scopes compose without oversubscription);
+/// `Engine::Sequential` is the fully serial walk. Both produce
+/// identical reports.
 pub fn simulate_network_with_engine(
     net: &Network,
     sparsity: SparsityConfig,
@@ -213,11 +216,12 @@ fn simulate_network_impl(
     engine: Engine,
     cache: Option<&CompileCache>,
 ) -> SimReport {
-    // Per-layer machines always run their cores inline here: with
-    // Engine::Parallel the parallelism lives at the layer level (finer
-    // fan-out would oversubscribe the pool), and Engine::Sequential is
-    // the fully serial legacy walk.
-    let machine = Machine::with_engine(arch.clone(), Engine::Sequential);
+    // The per-layer machines inherit the outer engine: with
+    // Engine::Parallel each layer's core segments spawn into the same
+    // shared pool its own job runs on (nested scopes execute or steal —
+    // no oversubscription), and Engine::Sequential is the fully serial
+    // walk. Reports are bit-identical either way.
+    let machine = Machine::with_engine(arch.clone(), engine);
     let pim_idx: Vec<usize> = (0..net.layers.len())
         .filter(|&i| net.layers[i].kind.matmul_dims().is_some())
         .collect();
@@ -229,8 +233,7 @@ fn simulate_network_impl(
                     .iter()
                     .map(|&idx| move || simulate_pim_layer(net, idx, sparsity, machine, seed, cache))
                     .collect();
-                let workers = pim_idx.len().min(crate::coordinator::default_workers());
-                crate::coordinator::run_parallel(jobs, workers)
+                crate::coordinator::pool::run_jobs(jobs)
             }
             Engine::Sequential => pim_idx
                 .iter()
@@ -298,6 +301,7 @@ fn simulate_network_impl(
 mod tests {
     use super::*;
     use crate::models;
+    use crate::models::fixtures::small_net;
 
     #[test]
     fn vgg_speedup_shape_holds() {
@@ -320,32 +324,6 @@ mod tests {
         assert!(s > 2.5, "speedup {s}"); // tiny layers are overhead-bound
         let e = hybrid.energy_ratio_vs(&base);
         assert!(e < 0.5, "energy ratio {e}");
-    }
-
-    fn small_net() -> models::Network {
-        models::Network {
-            name: "small".into(),
-            input_hw: 8,
-            input_ch: 16,
-            layers: vec![
-                models::Layer {
-                    name: "c1".into(),
-                    kind: LayerKind::Conv {
-                        in_ch: 16,
-                        out_ch: 32,
-                        kernel: 3,
-                        stride: 1,
-                        pad: 1,
-                        in_hw: 8,
-                    },
-                },
-                models::Layer { name: "r1".into(), kind: LayerKind::Act { elems: 32 * 64 } },
-                models::Layer {
-                    name: "fc".into(),
-                    kind: LayerKind::Fc { in_features: 2048, out_features: 16 },
-                },
-            ],
-        }
     }
 
     #[test]

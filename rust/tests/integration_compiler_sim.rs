@@ -207,3 +207,25 @@ fn dense_mapping_timing_is_shape_only() {
     let (sb, _) = machine.run_pim_layer(&b, None, false);
     assert_eq!(sa.elapsed, sb.elapsed, "baseline timing must be data-independent");
 }
+
+#[test]
+fn network_level_pooled_engines_agree_on_shared_fixture() {
+    // whole-network run on the shared `models::fixtures` network: the
+    // pool-backed parallel walk (layer jobs + nested segment jobs) must
+    // be bit-identical to the fully sequential walk.
+    use dbpim::models::fixtures::small_net;
+    use dbpim::sim::Engine;
+    let net = small_net();
+    let sp = SparsityConfig::hybrid(0.4);
+    let arch = ArchConfig::db_pim();
+    let p = dbpim::sim::simulate_network_with_engine(&net, sp, &arch, 11, Engine::Parallel);
+    let s = dbpim::sim::simulate_network_with_engine(&net, sp, &arch, 11, Engine::Sequential);
+    assert_eq!(p.totals, s.totals);
+    assert_eq!(p.total_cycles(), s.total_cycles());
+    for (a, b) in p.layers.iter().zip(&s.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.core_cycles, b.core_cycles);
+        assert_eq!(a.elapsed, b.elapsed);
+    }
+}

@@ -19,6 +19,10 @@
 //!   matches the prepared weight matrix
 //! * caching: simulating through a CompileCache is bit-identical to
 //!   fresh compilation, and repeated sweep points hit
+//! * pooling: nested sweep × layer × segment execution on a private
+//!   work-stealing pool (random worker counts 1–16) is bit-identical
+//!   to the fully sequential walk, and the SweepSpec executor
+//!   reproduces the pre-refactor (serial, per-cell) driver rows exactly
 
 use dbpim::arch::ArchConfig;
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
@@ -212,32 +216,10 @@ fn prop_engines_bit_identical_to_legacy_interp() {
 #[test]
 fn prop_compile_cache_is_bit_identical_and_hits() {
     use dbpim::compiler::CompileCache;
-    use dbpim::models::{Layer, LayerKind, Network};
+    use dbpim::models::fixtures::small_net;
     check_cases(12, |rng| {
         let arch = random_arch(rng);
-        let net = Network {
-            name: "prop-net".into(),
-            input_hw: 8,
-            input_ch: 8,
-            layers: vec![
-                Layer {
-                    name: "c1".into(),
-                    kind: LayerKind::Conv {
-                        in_ch: 8,
-                        out_ch: 16,
-                        kernel: 3,
-                        stride: 1,
-                        pad: 1,
-                        in_hw: 8,
-                    },
-                },
-                Layer { name: "r1".into(), kind: LayerKind::Act { elems: 16 * 64 } },
-                Layer {
-                    name: "fc".into(),
-                    kind: LayerKind::Fc { in_features: 1024, out_features: 16 },
-                },
-            ],
-        };
+        let net = small_net();
         let sp = SparsityConfig { value_sparsity: rng.f64() * 0.7, fta: rng.below(2) == 0 };
         let seed = rng.next_u64();
         let cache = CompileCache::new();
@@ -267,6 +249,131 @@ fn prop_compile_cache_is_bit_identical_and_hits() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_pooled_nested_execution_bit_identical() {
+    // The acceptance invariant of the worker-pool refactor: a sweep
+    // fanned out on a private pool of random size (1–16 workers), with
+    // each cell's layer jobs and per-segment jobs nesting into the
+    // *same* pool, produces reports bit-identical to the fully
+    // sequential walk — worker count and steal order never leak into
+    // results.
+    use dbpim::coordinator::pool::Pool;
+    use dbpim::models::fixtures::small_net;
+    check_cases(6, |rng| {
+        let workers = 1 + rng.below(16) as usize;
+        let pool = Pool::new(workers);
+        let net = small_net();
+        let arch = ArchConfig::db_pim();
+        let cells: Vec<(f64, u64)> = (0..4).map(|_| (rng.f64() * 0.7, rng.next_u64())).collect();
+        // serial reference: every level sequential, no pool involved
+        let want: Vec<_> = cells
+            .iter()
+            .map(|&(v, seed)| {
+                dbpim::sim::simulate_network_with_engine(
+                    &net,
+                    SparsityConfig::hybrid(v),
+                    &arch,
+                    seed,
+                    Engine::Sequential,
+                )
+            })
+            .collect();
+        // pooled: sweep cells fan out on the private pool; nested
+        // layer/segment scopes route back onto it via the worker TLS
+        let jobs: Vec<_> = cells
+            .iter()
+            .map(|&(v, seed)| {
+                let (net, arch) = (&net, &arch);
+                move || {
+                    dbpim::sim::simulate_network_with_engine(
+                        net,
+                        SparsityConfig::hybrid(v),
+                        arch,
+                        seed,
+                        Engine::Parallel,
+                    )
+                }
+            })
+            .collect();
+        let got = pool.run_jobs(jobs);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            if g.totals != w.totals {
+                return Err(format!("totals diverge at cell {i} with {workers} workers"));
+            }
+            if g.layers.len() != w.layers.len() {
+                return Err(format!("layer count diverges at cell {i}"));
+            }
+            for (a, b) in g.layers.iter().zip(&w.layers) {
+                if a.events != b.events
+                    || a.core_cycles != b.core_cycles
+                    || a.elapsed != b.elapsed
+                {
+                    return Err(format!("layer {} diverges at {workers} workers", a.name));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sweepspec_reproduces_serial_fig11_rows() {
+    // The SweepSpec executor must reproduce the pre-refactor driver
+    // rows exactly: recompute every fig11 cell serially (sequential
+    // engine, plain cached simulation calls — what the old driver ran
+    // per job) and require bitwise-equal speedup/energy columns.
+    use dbpim::compiler::CompileCache;
+    use dbpim::coordinator::experiments;
+    use dbpim::energy::EnergyTable;
+    use dbpim::sim::OpCategory;
+
+    let seed = 7;
+    let (rows, stats) = experiments::fig11_with_stats(seed);
+    assert_eq!(rows.len(), 12);
+    assert!(stats.hits > 0, "fig11's repeated dense baseline must hit the sweep cache");
+
+    let cache = CompileCache::new();
+    let arch = ArchConfig::weights_only();
+    let base_arch = ArchConfig::dense_baseline();
+    let table = EnergyTable::default28nm();
+    let pim_energy = |r: &dbpim::sim::SimReport| -> f64 {
+        r.layers
+            .iter()
+            .filter(|l| l.category == OpCategory::PimConvFc)
+            .map(|l| l.events.energy_pj(&table))
+            .sum()
+    };
+    let mut i = 0;
+    for name in ["vgg19", "resnet18", "mobilenet_v2"] {
+        for &v in &[0.0, 0.2, 0.4, 0.6] {
+            let net = dbpim::models::by_name(name).unwrap();
+            let r = dbpim::sim::simulate_network_cached(
+                &net,
+                SparsityConfig::hybrid(v),
+                &arch,
+                seed,
+                Engine::Sequential,
+                &cache,
+            );
+            let b = dbpim::sim::simulate_network_cached(
+                &net,
+                SparsityConfig::dense(),
+                &base_arch,
+                seed,
+                Engine::Sequential,
+                &cache,
+            );
+            let row = &rows[i];
+            assert_eq!(row.network, name, "row order diverges at {i}");
+            let speedup = b.pim_cycles() as f64 / r.pim_cycles().max(1) as f64;
+            let saving = 1.0 - pim_energy(&r) / pim_energy(&b).max(1e-12);
+            assert_eq!(row.speedup.to_bits(), speedup.to_bits(), "{name} v={v}");
+            assert_eq!(row.energy_saving.to_bits(), saving.to_bits(), "{name} v={v}");
+            i += 1;
+        }
+    }
 }
 
 #[test]

@@ -30,7 +30,12 @@ import json
 import shutil
 import sys
 
-DEFAULT_CASES = ["row_loop_ipu_on", "e2e_resnet18_hybrid"]
+DEFAULT_CASES = [
+    "row_loop_ipu_on",
+    "e2e_resnet18_hybrid",
+    "pool_nested_sweep",
+    "pool_spawn_overhead",
+]
 
 
 def load_medians(path):
