@@ -11,7 +11,7 @@ use dbpim::benchlib::{bench, f2, pct, print_table};
 use dbpim::coordinator::experiments;
 
 fn main() {
-    let (rows, cache) = experiments::fig11_with_stats(42);
+    let (rows, stats) = experiments::fig11_with_stats(42);
     print_table(
         "Fig. 11 — speedup & energy vs dense digital PIM baseline",
         &["network", "weight sparsity", "speedup", "energy saving"],
@@ -41,10 +41,18 @@ fn main() {
     }
 
     // the dense baseline is shared by all four sparsity points of each
-    // network — the sweep-wide compile cache must convert those repeats
-    // into hits (3 of its 4 compiles per network-layer)
-    println!("compile cache: {}", cache.summary());
-    assert!(cache.hits > 0, "fig11 sweep produced no compile-cache hits");
+    // network — the sweep-wide sim cache must convert those repeats
+    // into hits (3 of its 4 simulations per network-layer), and a sim
+    // hit skips compilation entirely, so the compile cache sees
+    // exactly the sim misses
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
+    assert!(stats.sim.hits > 0, "fig11 sweep produced no sim-cache hits");
+    assert_eq!(
+        stats.compile.lookups(),
+        stats.sim.misses,
+        "sim-cache hits must skip compilation entirely"
+    );
 
     bench("fig11_one_point_vgg19_90", 0, 3, || {
         let net = dbpim::models::vgg19();

@@ -34,8 +34,14 @@ use super::{compile_network_layer, CompiledLayer, SparsityConfig};
 /// affect *simulation* of the artifact (clock frequency, SIMD lane
 /// count, buffer capacities) are deliberately excluded; every knob the
 /// compiler pipeline reads is included.
+///
+/// Crate-visible because `sim::simcache::SimCache` reuses it verbatim
+/// as the compile half of its own key: perf-mode simulation is a pure
+/// function of the compiled artifact plus inputs this key already pins
+/// (activation synthesis is seeded by `(seed, layer_idx, m, k)`, and
+/// every arch knob the executor reads is a compile knob).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct CompileKey {
+pub(crate) struct CompileKey {
     network: String,
     layer_idx: usize,
     /// The layer's actual matmul shape and conv geometry, so two
@@ -66,7 +72,13 @@ struct CompileKey {
 }
 
 impl CompileKey {
-    fn new(net: &Network, idx: usize, sp: SparsityConfig, arch: &ArchConfig, seed: u64) -> Self {
+    pub(crate) fn new(
+        net: &Network,
+        idx: usize,
+        sp: SparsityConfig,
+        arch: &ArchConfig,
+        seed: u64,
+    ) -> Self {
         let kind = &net.layers[idx].kind;
         let (m, k, n) = kind.matmul_dims().expect("PIM layer");
         let conv_geom = match *kind {

@@ -112,6 +112,7 @@ impl SparsityConfig {
 /// baseline comparison) — the mapping just cannot exploit it:
 /// `weight_bit_sparsity = false` stores 8 bit-columns per filter, and
 /// `value_sparsity = false` keeps pruned rows resident.
+#[allow(clippy::too_many_arguments)]
 pub fn prepare_layer(
     name: &str,
     m: usize,

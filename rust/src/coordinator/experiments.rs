@@ -19,14 +19,16 @@
 //!
 //! Combinations repeated across sweep points — e.g. fig11's dense
 //! baseline, identical at all four sparsity points — compile once via
-//! the shared cache; the `*_with_stats` variants surface the hit/miss
-//! counters for the driver summaries.
+//! the shared `CompileCache` and simulate once via the shared
+//! `SimCache` (repeated cells skip simulation entirely); the
+//! `*_with_stats` variants surface both hit/miss counters for the
+//! driver summaries.
 
 use crate::arch::ArchConfig;
 use crate::compiler::{CacheStats, CompileCache, SparsityConfig};
 use crate::json::{arr, num, obj, str_, Value};
 use crate::models::{self, Network};
-use crate::sim::{self, Engine, OpCategory, SimReport};
+use crate::sim::{self, Engine, OpCategory, SimCache, SimReport};
 use crate::stats;
 
 use super::pool;
@@ -36,20 +38,40 @@ fn env_engine() -> Option<Engine> {
     std::env::var("DBPIM_ENGINE").ok().and_then(|s| Engine::parse(&s))
 }
 
+/// Hit/miss counters of one sweep's two memo layers: compiles
+/// deduplicated by the [`CompileCache`], whole per-layer simulations
+/// deduplicated by the [`SimCache`]. Printed by the CLI drivers as the
+/// sweep summary lines.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    pub compile: CacheStats,
+    pub sim: CacheStats,
+}
+
 /// Per-sweep shared context handed to every job: the sweep-wide compile
-/// cache and the engine the sweep's simulations run under.
+/// and simulation caches, and the engine the sweep's simulations run
+/// under.
 pub struct SweepCtx {
     /// Content-keyed compile memo shared by all cells of the sweep.
     pub cache: CompileCache,
+    /// Content-keyed per-layer simulation memo shared by all cells —
+    /// repeated cells (e.g. a figure's dense baseline) skip simulation
+    /// entirely.
+    pub sim: SimCache,
     engine: Engine,
 }
 
 impl SweepCtx {
     fn new() -> Self {
-        SweepCtx { cache: CompileCache::new(), engine: env_engine().unwrap_or(Engine::Parallel) }
+        SweepCtx {
+            cache: CompileCache::new(),
+            sim: SimCache::new(),
+            engine: env_engine().unwrap_or(Engine::Parallel),
+        }
     }
 
-    /// Simulate one sweep cell: compiles through the sweep's cache and
+    /// Simulate one sweep cell: compiles through the sweep's compile
+    /// cache, memoizes per-layer results in the sweep's sim cache, and
     /// (by default) nests layer- and segment-level jobs into the same
     /// worker pool the sweep itself fans out on.
     pub fn simulate(
@@ -59,7 +81,11 @@ impl SweepCtx {
         arch: &ArchConfig,
         seed: u64,
     ) -> SimReport {
-        sim::simulate_network_cached(net, sp, arch, seed, self.engine, &self.cache)
+        sim::simulate_network_memo(net, sp, arch, seed, self.engine, &self.cache, &self.sim)
+    }
+
+    fn stats(&self) -> SweepStats {
+        SweepStats { compile: self.cache.stats(), sim: self.sim.stats() }
     }
 }
 
@@ -74,7 +100,7 @@ pub struct SweepSpec<A, F> {
 impl<A, F> SweepSpec<A, F> {
     /// Fan the cells over the shared pool; rows come back in axis
     /// order regardless of worker count or steal order.
-    pub fn run<R>(self) -> (Vec<R>, CacheStats)
+    pub fn run<R>(self) -> (Vec<R>, SweepStats)
     where
         A: Send,
         R: Send,
@@ -88,18 +114,18 @@ impl<A, F> SweepSpec<A, F> {
                 s.spawn(move || job_ref(cell, ctx_ref));
             }
         });
-        (rows, ctx.cache.stats())
+        (rows, ctx.stats())
     }
 
     /// [`run`](Self::run), then fold the rows with `merge`.
-    pub fn run_merged<R, Out>(self, merge: impl FnOnce(Vec<R>) -> Out) -> (Out, CacheStats)
+    pub fn run_merged<R, Out>(self, merge: impl FnOnce(Vec<R>) -> Out) -> (Out, SweepStats)
     where
         A: Send,
         R: Send,
         F: Fn(A, &SweepCtx) -> R + Sync,
     {
-        let (rows, cache) = self.run();
-        (merge(rows), cache)
+        let (rows, stats) = self.run();
+        (merge(rows), stats)
     }
 }
 
@@ -122,11 +148,13 @@ pub fn fig11(seed: u64) -> Vec<Fig11Row> {
     fig11_with_stats(seed).0
 }
 
-/// [`fig11`] plus the sweep's compile-cache counters. The dense
-/// baseline is identical across the four sparsity points of each
-/// network, so 3 of its 4 compiles per (network, layer) are hits —
-/// a 37.5% hit rate by construction.
-pub fn fig11_with_stats(seed: u64) -> (Vec<Fig11Row>, CacheStats) {
+/// [`fig11`] plus the sweep's cache counters. The dense baseline is
+/// identical across the four sparsity points of each network, so 3 of
+/// its 4 simulations per (network, layer) are sim-cache hits — a
+/// 37.5% sim hit rate by construction — and those hits skip
+/// compilation entirely (the compile cache sees only the sim misses,
+/// which are all distinct here).
+pub fn fig11_with_stats(seed: u64) -> (Vec<Fig11Row>, SweepStats) {
     let nets = ["vgg19", "resnet18", "mobilenet_v2"];
     // value sparsity v + FTA (75% floor) ⇒ total = 1 - (1-v)/4
     let points = [(0.0, 0.75), (0.2, 0.80), (0.4, 0.85), (0.6, 0.90)];
@@ -193,8 +221,8 @@ pub fn fig12(seed: u64) -> Vec<Fig12Row> {
     fig12_with_stats(seed).0
 }
 
-/// [`fig12`] plus the sweep's compile-cache counters.
-pub fn fig12_with_stats(seed: u64) -> (Vec<Fig12Row>, CacheStats) {
+/// [`fig12`] plus the sweep's cache counters.
+pub fn fig12_with_stats(seed: u64) -> (Vec<Fig12Row>, SweepStats) {
     let configs: Vec<(&'static str, ArchConfig, SparsityConfig)> = vec![
         ("bit", ArchConfig::bit_only(), SparsityConfig { value_sparsity: 0.0, fta: true }),
         ("value", ArchConfig::value_only(), SparsityConfig { value_sparsity: 0.6, fta: false }),
@@ -280,8 +308,8 @@ pub fn table2(seed: u64) -> Table2 {
     table2_with_stats(seed).0
 }
 
-/// [`table2`] plus the sweep's compile-cache counters.
-pub fn table2_with_stats(seed: u64) -> (Table2, CacheStats) {
+/// [`table2`] plus the sweep's cache counters.
+pub fn table2_with_stats(seed: u64) -> (Table2, SweepStats) {
     let arch = ArchConfig::db_pim();
     SweepSpec {
         axes: models::zoo(),
@@ -320,8 +348,8 @@ pub fn table3(seed: u64) -> Vec<Table3Row> {
     table3_with_stats(seed).0
 }
 
-/// [`table3`] plus the sweep's compile-cache counters.
-pub fn table3_with_stats(seed: u64) -> (Vec<Table3Row>, CacheStats) {
+/// [`table3`] plus the sweep's cache counters.
+pub fn table3_with_stats(seed: u64) -> (Vec<Table3Row>, SweepStats) {
     let bitsp = SparsityConfig { value_sparsity: 0.0, fta: true };
     SweepSpec {
         axes: models::zoo(),
@@ -448,7 +476,7 @@ mod tests {
     fn sweep_executor_preserves_axis_order_and_counts_cache() {
         let net = crate::models::fixtures::tiny_net();
         let arch = ArchConfig::db_pim();
-        let (rows, cache) = SweepSpec {
+        let (rows, stats) = SweepSpec {
             axes: vec![0u64, 1, 2, 0],
             job: |seed: u64, ctx: &SweepCtx| {
                 let r = ctx.simulate(&net, SparsityConfig::hybrid(0.5), &arch, seed);
@@ -460,10 +488,14 @@ mod tests {
         assert_eq!(rows.iter().map(|r| r.0).collect::<Vec<_>>(), vec![0, 1, 2, 0]);
         // identical cells must produce bit-identical rows
         assert_eq!(rows[0].1, rows[3].1);
-        // 4 cells × 2 PIM layers looked up; ≥ 6 real compiles (the
+        // 4 cells × 2 PIM layers reach the sim cache; a sim-cache hit
+        // skips compilation entirely, so the compile cache only sees
+        // the sim misses. ≥ 6 of either are real computations (the
         // repeated cell hits unless both cells raced the same key,
-        // which the cache resolves by double-compiling — still exact)
-        assert_eq!(cache.lookups(), 8);
-        assert!(cache.misses >= 6, "{cache:?}");
+        // which the caches resolve by double-computing — still exact).
+        assert_eq!(stats.sim.lookups(), 8);
+        assert!(stats.sim.misses >= 6, "{stats:?}");
+        assert_eq!(stats.compile.lookups(), stats.sim.misses, "{stats:?}");
+        assert!(stats.compile.misses >= 6, "{stats:?}");
     }
 }

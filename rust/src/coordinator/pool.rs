@@ -224,6 +224,11 @@ fn worker_loop(shared: Arc<Shared>, idx: usize) {
             None => shared.idle_wait(gen0, || false),
         }
     }
+    // Release this worker's scratch arena (sim::arena rides worker TLS:
+    // each worker owns per-thread free lists of hot-path buffers for
+    // its whole lifetime) so private test pools return their retained
+    // memory on Drop.
+    crate::sim::arena::retire_thread();
 }
 
 /// One job's private result cell. Written exactly once, by the one job

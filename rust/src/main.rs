@@ -210,7 +210,7 @@ fn cmd_fig3() -> i32 {
 }
 
 fn cmd_fig11() -> i32 {
-    let (rows, cache) = exp::fig11_with_stats(42);
+    let (rows, stats) = exp::fig11_with_stats(42);
     print_table(
         "Fig. 11 — speedup & energy saving vs dense PIM (weight sparsity only)",
         &["network", "total sparsity", "speedup", "energy saving"],
@@ -226,13 +226,14 @@ fn cmd_fig11() -> i32 {
             })
             .collect::<Vec<_>>(),
     );
-    println!("compile cache: {}", cache.summary());
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
     write_report("fig11", &exp::fig11_json(&rows));
     0
 }
 
 fn cmd_fig12() -> i32 {
-    let (rows, cache) = exp::fig12_with_stats(42);
+    let (rows, stats) = exp::fig12_with_stats(42);
     print_table(
         "Fig. 12 — end-to-end breakdown by sparsity approach",
         &["network", "approach", "speedup", "normalized energy"],
@@ -248,7 +249,8 @@ fn cmd_fig12() -> i32 {
             })
             .collect::<Vec<_>>(),
     );
-    println!("compile cache: {}", cache.summary());
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
     write_report("fig12", &exp::fig12_json(&rows));
     0
 }
@@ -276,7 +278,7 @@ fn cmd_fig13() -> i32 {
 }
 
 fn cmd_table2() -> i32 {
-    let (t, cache) = exp::table2_with_stats(42);
+    let (t, stats) = exp::table2_with_stats(42);
     println!("Table II — this work:");
     println!("  macros: {}  PIM capacity: {} KB", t.total_macros, t.pim_kb);
     println!(
@@ -291,12 +293,13 @@ fn cmd_table2() -> i32 {
         &["network", "U_act"],
         &t.u_act.iter().map(|(n, u)| vec![n.clone(), pct(*u)]).collect::<Vec<_>>(),
     );
-    println!("compile cache: {}", cache.summary());
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
     0
 }
 
 fn cmd_table3() -> i32 {
-    let (rows, cache) = exp::table3_with_stats(42);
+    let (rows, stats) = exp::table3_with_stats(42);
     print_table(
         "Table III — on-chip execution time, std/pw-conv + FC only (ms)",
         &["network", "DAC'24", "bit-level", "hybrid", "hybrid speedup vs DAC'24"],
@@ -313,7 +316,8 @@ fn cmd_table3() -> i32 {
             })
             .collect::<Vec<_>>(),
     );
-    println!("compile cache: {}", cache.summary());
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
     write_report("table3", &exp::table3_json(&rows));
     0
 }

@@ -1,0 +1,330 @@
+//! Thread-local scratch arenas for the simulation hot path.
+//!
+//! Steady-state simulation used to re-allocate its working set for
+//! every layer of every sweep cell: the per-assignment
+//! [`OccupancyTable`], the per-tile [`TileScan`] and its `step_eff` /
+//! SWAR-lane scratch, and the dense `CoreAcc` accumulator blocks. This
+//! module recycles all of them through per-thread free lists, so after
+//! warm-up the row loop performs zero heap allocations across layers,
+//! cells and sweeps (ISSUE 4; pinned by `steady_state_…` below and the
+//! `arena_reuse_row_loop` bench assertion).
+//!
+//! **Ownership.** The arena is a plain `thread_local!`, which makes it
+//! *per pool worker* for `coordinator::pool` threads (each worker owns
+//! its free lists for its whole lifetime; `pool::worker_loop` retires
+//! them on shutdown so private test pools release their memory) and
+//! automatically provides the standalone fallback for sequential runs,
+//! tests and bench main threads — no pool required. Buffers taken and
+//! given on different threads simply migrate between thread arenas;
+//! free lists are bounded ([`MAX_POOLED`]) so migration can only cost
+//! reuse rate, never unbounded memory. The zero-alloc guarantee is
+//! therefore scoped: it holds for same-thread take/give cycles — the
+//! sequential engine, and the perf-mode row loop under any engine
+//! (tables/scans/scratch live and die inside one `run_segment` on one
+//! worker). Functional runs under `Engine::Parallel` recycle `CoreAcc`
+//! blocks on the *merging* thread, so those blocks migrate owner-ward
+//! and worker takes may keep allocating — bounded churn, accepted
+//! (functional mode is the verification path, not the sweep hot path).
+//!
+//! **Determinism.** Recycling is invisible to results by construction:
+//! every `take_*` is followed by a full reset-and-fill
+//! (`OccupancyTable::build_into`, `kernels::scan_tile_occupancy_into`,
+//! zero-filled `take_u64`/`take_i32`), and `give_*` poisons the
+//! executor cache keys (`retire`) as defense in depth, so no byte of a
+//! recycled buffer survives into the next use. The bit-identical
+//! engine contract (DESIGN.md §8) is unchanged; enforced by
+//! `tests/prop_invariants.rs::prop_arena_recycled_executors_bit_identical`.
+//!
+//! **Stats.** A take served from the free list (with sufficient
+//! capacity) counts a *hit*; a take that had to allocate counts a
+//! *miss*. [`stats`]/[`reset_stats`] read and clear the current
+//! thread's counters — the allocation-freeness assertions are
+//! "zero misses after warm-up" on a single-threaded (sequential-
+//! engine) run, where the thread arena sees every take.
+
+use std::cell::RefCell;
+
+use super::kernels::TileScan;
+use super::occupancy::OccupancyTable;
+
+/// Per-thread hit/miss counters (see module docs for semantics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ArenaStats {
+    /// Takes served from the free list.
+    pub hits: u64,
+    /// Takes that had to allocate (empty list or insufficient capacity).
+    pub misses: u64,
+}
+
+/// Free-list bound per kind: large enough for the peak concurrent
+/// demand of any real layer (one table/scan per live executor, a few
+/// u64 scratches, one i32 block per assignment of a functional phase),
+/// small enough that a thread can never retain unbounded buffers.
+const MAX_POOLED: usize = 64;
+
+#[derive(Default)]
+struct Arena {
+    tables: Vec<OccupancyTable>,
+    scans: Vec<TileScan>,
+    u64s: Vec<Vec<u64>>,
+    i32s: Vec<Vec<i32>>,
+    stats: ArenaStats,
+}
+
+thread_local! {
+    static ARENA: RefCell<Arena> = RefCell::new(Arena::default());
+}
+
+/// Pop a buffer whose capacity already covers `len` (hit), else
+/// allocate (miss). The result is always zero-filled to `len`.
+/// Best-fit (smallest adequate capacity): taking the tightest buffer
+/// keeps larger ones available for larger requests, so a repeated
+/// request multiset (the steady-state sweep pattern) is served with
+/// zero misses regardless of arrival order.
+fn take_vec<T: Clone + Default>(
+    pool: &mut Vec<Vec<T>>,
+    stats: &mut ArenaStats,
+    len: usize,
+) -> Vec<T> {
+    let mut best: Option<(usize, usize)> = None;
+    for (i, b) in pool.iter().enumerate() {
+        let cap = b.capacity();
+        let tighter = match best {
+            None => true,
+            Some((_, c)) => cap < c,
+        };
+        if cap >= len && tighter {
+            best = Some((i, cap));
+        }
+    }
+    if let Some((i, _)) = best {
+        stats.hits += 1;
+        let mut v = pool.swap_remove(i);
+        v.clear();
+        v.resize(len, T::default());
+        v
+    } else {
+        stats.misses += 1;
+        vec![T::default(); len]
+    }
+}
+
+fn give_vec<T>(pool: &mut Vec<Vec<T>>, v: Vec<T>) {
+    if pool.len() < MAX_POOLED {
+        pool.push(v);
+    }
+}
+
+/// Take a recycled [`OccupancyTable`] (or a fresh empty one). The
+/// caller must `build_into` it before reading anything.
+pub fn take_table() -> OccupancyTable {
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        match a.tables.pop() {
+            Some(t) => {
+                a.stats.hits += 1;
+                t
+            }
+            None => {
+                a.stats.misses += 1;
+                OccupancyTable::empty()
+            }
+        }
+    })
+}
+
+/// Return a table to the current thread's free list.
+pub fn give_table(mut t: OccupancyTable) {
+    t.retire();
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        if a.tables.len() < MAX_POOLED {
+            a.tables.push(t);
+        }
+    });
+}
+
+/// Take a recycled [`TileScan`] (or a fresh empty one). The caller
+/// must rebuild it (`scan_tile_occupancy_into`) before reading it.
+pub fn take_scan() -> TileScan {
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        match a.scans.pop() {
+            Some(s) => {
+                a.stats.hits += 1;
+                s
+            }
+            None => {
+                a.stats.misses += 1;
+                TileScan::empty()
+            }
+        }
+    })
+}
+
+/// Return a scan to the current thread's free list.
+pub fn give_scan(mut s: TileScan) {
+    s.retire();
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        if a.scans.len() < MAX_POOLED {
+            a.scans.push(s);
+        }
+    });
+}
+
+/// Take a zero-filled `Vec<u64>` of `len` (step_eff / SWAR-lane
+/// scratch).
+pub fn take_u64(len: usize) -> Vec<u64> {
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        take_vec(&mut a.u64s, &mut a.stats, len)
+    })
+}
+
+/// Return a u64 buffer to the current thread's free list.
+pub fn give_u64(v: Vec<u64>) {
+    ARENA.with(|a| give_vec(&mut a.borrow_mut().u64s, v));
+}
+
+/// Take a zero-filled `Vec<i32>` of `len` (CoreAcc block storage).
+pub fn take_i32(len: usize) -> Vec<i32> {
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        take_vec(&mut a.i32s, &mut a.stats, len)
+    })
+}
+
+/// Return an i32 buffer to the current thread's free list.
+pub fn give_i32(v: Vec<i32>) {
+    ARENA.with(|a| give_vec(&mut a.borrow_mut().i32s, v));
+}
+
+/// Record that a recycled object had to *grow* its internal buffers
+/// after a pooled take (tables/scans are popped without a capacity
+/// check — the needed sizes are only known at build time). Counted as
+/// a miss: the take did not avoid an allocation, and the zero-miss
+/// assertions must see it.
+pub fn note_growth() {
+    ARENA.with(|a| a.borrow_mut().stats.misses += 1);
+}
+
+/// Snapshot of the current thread's hit/miss counters.
+pub fn stats() -> ArenaStats {
+    ARENA.with(|a| a.borrow().stats)
+}
+
+/// Clear the current thread's hit/miss counters (the free lists stay —
+/// that is the point: measure steady-state reuse after warm-up).
+pub fn reset_stats() {
+    ARENA.with(|a| a.borrow_mut().stats = ArenaStats::default());
+}
+
+/// Drop the current thread's free lists and counters. Called by pool
+/// workers on shutdown so private test pools release their retained
+/// buffers with their threads.
+pub fn retire_thread() {
+    ARENA.with(|a| *a.borrow_mut() = Arena::default());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::compiler::{compile_layer, prepare_layer, SparsityConfig};
+    use crate::models::{synthesize_activations, synthesize_weights};
+    use crate::quant;
+    use crate::sim::{Engine, Machine};
+    use crate::tensor::MatI8;
+
+    #[test]
+    fn take_give_roundtrip_reuses_capacity() {
+        retire_thread();
+        let v = take_u64(16);
+        assert_eq!(v, vec![0u64; 16]);
+        assert_eq!(stats(), ArenaStats { hits: 0, misses: 1 });
+        give_u64(v);
+        let v2 = take_u64(10);
+        assert_eq!(v2.len(), 10);
+        assert!(v2.capacity() >= 16, "recycled capacity lost");
+        assert_eq!(stats(), ArenaStats { hits: 1, misses: 1 });
+        // a bigger request than any pooled capacity is a miss
+        give_u64(v2);
+        let v3 = take_u64(1000);
+        assert_eq!(v3, vec![0u64; 1000]);
+        assert_eq!(stats().misses, 2);
+        retire_thread();
+    }
+
+    #[test]
+    fn recycled_buffers_come_back_zeroed() {
+        retire_thread();
+        let mut v = take_i32(8);
+        v.iter_mut().for_each(|x| *x = -7);
+        give_i32(v);
+        assert_eq!(take_i32(8), vec![0i32; 8]);
+        retire_thread();
+    }
+
+    #[test]
+    fn recycled_table_and_scan_are_poisoned() {
+        let x = MatI8::from_vec(2, 8, vec![1i8; 16]);
+        let t = OccupancyTable::build(3, &x, &[0, 2], 16, 2, true, true);
+        give_table(t);
+        let t = take_table();
+        assert_eq!(t.assignment, usize::MAX, "stale assignment key survived recycling");
+        give_table(t);
+        let mut s = TileScan::empty();
+        s.tile = 5;
+        give_scan(s);
+        assert_eq!(take_scan().tile, u32::MAX, "stale tile key survived recycling");
+    }
+
+    #[test]
+    fn free_lists_are_bounded() {
+        retire_thread();
+        for _ in 0..(MAX_POOLED + 10) {
+            give_u64(Vec::new());
+        }
+        ARENA.with(|a| assert_eq!(a.borrow().u64s.len(), MAX_POOLED));
+        retire_thread();
+    }
+
+    /// ISSUE 4 acceptance: after the first (warm-up) layer of a
+    /// repeated-cell run, the row loop takes every scratch buffer from
+    /// the arena — zero misses — while staying bit-identical.
+    #[test]
+    fn steady_state_repeated_cell_run_has_zero_arena_misses() {
+        let arch = ArchConfig::db_pim();
+        let (m, k, n) = (12, 320, 48);
+        let w = synthesize_weights(9, k, n);
+        let prep = prepare_layer(
+            "arena",
+            m,
+            k,
+            n,
+            w,
+            SparsityConfig::hybrid(0.5),
+            &arch,
+            quant::requant_mul(0.01),
+            true,
+            None,
+        );
+        let layer = compile_layer(prep, &arch);
+        let x = MatI8::from_vec(m, k, synthesize_activations(3, m * k));
+        // sequential engine: every executor of every phase runs on this
+        // thread, so this thread's arena sees every take/give
+        let machine = Machine::with_engine(arch, Engine::Sequential);
+        let (want, want_acc) = machine.run_pim_layer(&layer, Some(&x), true);
+        reset_stats();
+        for _ in 0..3 {
+            let (got, got_acc) = machine.run_pim_layer(&layer, Some(&x), true);
+            assert_eq!(got.events, want.events);
+            assert_eq!(got.core_cycles, want.core_cycles);
+            assert_eq!(got_acc, want_acc);
+        }
+        let s = stats();
+        assert_eq!(s.misses, 0, "steady-state row loop still allocating: {s:?}");
+        assert!(s.hits > 0, "arena saw no takes at all");
+    }
+}

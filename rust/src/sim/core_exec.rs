@@ -20,12 +20,13 @@
 //! bit-identical to it.
 
 use crate::arch::ArchConfig;
-use crate::compiler::{Assignment, CompiledLayer, PreparedLayer, Tile};
+use crate::compiler::{Assignment, CompiledLayer, Tile};
 use crate::energy::EventCounts;
 use crate::isa::Instr;
 use crate::tensor::{MatI8, MatI32};
 use crate::util::ceil_div;
 
+use super::arena;
 use super::kernels::{self, TileScan};
 use super::occupancy::OccupancyTable;
 
@@ -50,23 +51,31 @@ pub struct AccBlock {
 #[derive(Debug, Clone)]
 pub struct CoreAcc {
     blocks: Vec<AccBlock>,
+    /// assignment index → position in `blocks` (`u32::MAX` = not on
+    /// this core), precomputed at construction so `block_mut` is one
+    /// indexed load per Compute chunk instead of a linear scan.
+    block_index: Vec<u32>,
     m_total: usize,
 }
 
 impl CoreAcc {
     pub fn new(layer: &CompiledLayer, core: usize, m_total: usize) -> Self {
-        let blocks = layer
-            .assignments
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| a.core == core)
-            .map(|(ai, a)| AccBlock {
+        let mut block_index = vec![u32::MAX; layer.assignments.len()];
+        let mut blocks = Vec::new();
+        for (ai, a) in layer.assignments.iter().enumerate() {
+            if a.core != core {
+                continue;
+            }
+            block_index[ai] = blocks.len() as u32;
+            blocks.push(AccBlock {
                 assignment: ai,
                 filters: a.filters.clone(),
-                data: vec![0i32; m_total * a.filters.len()],
-            })
-            .collect();
-        Self { blocks, m_total }
+                // block storage recycles through the thread arena
+                // (returned by `recycle` after the engine's merge)
+                data: arena::take_i32(m_total * a.filters.len()),
+            });
+        }
+        Self { blocks, block_index, m_total }
     }
 
     /// The dense blocks owned by this core (ascending assignment index).
@@ -76,12 +85,9 @@ impl CoreAcc {
 
     /// The dense block of `assignment` (must be scheduled on this core).
     fn block_mut(&mut self, assignment: usize) -> &mut AccBlock {
-        let i = self
-            .blocks
-            .iter()
-            .position(|b| b.assignment == assignment)
-            .expect("assignment not owned by this core");
-        &mut self.blocks[i]
+        let i = self.block_index[assignment];
+        assert!(i != u32::MAX, "assignment not owned by this core");
+        &mut self.blocks[i as usize]
     }
 
     /// Fold this core's blocks into the shared [M, N] accumulator.
@@ -97,6 +103,14 @@ impl CoreAcc {
                     acc_row[f] += row[i];
                 }
             }
+        }
+    }
+
+    /// Return the block storage to the thread arena (called by the
+    /// engines after the merge; optional — dropping is also correct).
+    pub fn recycle(self) {
+        for b in self.blocks {
+            arena::give_i32(b.data);
         }
     }
 }
@@ -189,14 +203,19 @@ impl<'a> CoreExecutor<'a> {
 
     /// (Re)build the gather/occupancy table when the resident
     /// assignment changes. Tiles of one assignment are contiguous in
-    /// every core's stream, so a single-slot cache never thrashes.
+    /// every core's stream, so a single-slot cache never thrashes. The
+    /// table object (and its buffers) recycles through the thread
+    /// arena: taken on first use, rebuilt in place per assignment,
+    /// given back when the executor drops.
     fn ensure_table(&mut self, assignment: usize) {
         if self.table.as_ref().map(|t| t.assignment) == Some(assignment) {
             return;
         }
         let x = self.x.expect("input required");
         let a = &self.layer.assignments[assignment];
-        self.table = Some(OccupancyTable::build(
+        let mut table = self.table.take().unwrap_or_else(arena::take_table);
+        let caps = table.buf_capacities();
+        table.build_into(
             assignment,
             x,
             &a.kept_rows,
@@ -205,13 +224,22 @@ impl<'a> CoreExecutor<'a> {
             self.arch.input_skipping,
             // perf-only IPU runs read nothing but the occ bytes
             self.acc.is_some(),
-        ));
+        );
+        if table.buf_capacities() != caps {
+            // the recycled table reallocated: report it so the
+            // zero-miss steady-state assertions can't be fooled
+            arena::note_growth();
+        }
+        self.table = Some(table);
     }
 
     /// (Re)run the step-major occupancy scan when the walked tile
     /// changes. A tile's Compute chunks are contiguous and ascend from
     /// `m_base = 0` (codegen invariant), so a single-slot cache never
-    /// thrashes and the whole-tile scan is computed exactly once.
+    /// thrashes and the whole-tile scan is computed exactly once. The
+    /// scan object and both scratch vectors (per-step eff weights,
+    /// SWAR lane accumulators) recycle through the thread arena, so
+    /// the per-tile walk is allocation-free after warm-up.
     fn ensure_scan(&mut self, tile_idx: usize) {
         let arch = self.arch;
         let layer = self.layer;
@@ -220,7 +248,6 @@ impl<'a> CoreExecutor<'a> {
             return;
         }
         let a = &layer.assignments[t.assignment];
-        let prep = &layer.prep;
         let comp = arch.compartments;
         // The compiler only emits step-aligned tiles (k_slots is a
         // multiple of the compartment count); the on-the-fly gather
@@ -232,19 +259,30 @@ impl<'a> CoreExecutor<'a> {
         let demand = a.active_cols() as u64;
         // Per-step effective cells are row-independent; computed once
         // per tile (the scan folds them into the eff-weighted total).
-        let step_eff: Vec<u64> = (0..steps)
-            .map(|s| {
-                let lanes = (rows - s * comp).min(comp);
-                if arch.weight_bit_sparsity {
-                    demand * lanes as u64
-                } else {
-                    dense_step_effective_cells(t, a, prep, comp, s, lanes)
-                }
-            })
-            .collect();
+        let mut step_eff = arena::take_u64(steps);
+        for (s, eff) in step_eff.iter_mut().enumerate() {
+            let lanes = (rows - s * comp).min(comp);
+            *eff = if arch.weight_bit_sparsity {
+                demand * lanes as u64
+            } else {
+                dense_step_effective_cells(t, a, comp, s, lanes)
+            };
+        }
         let table = self.table.as_ref().expect("occupancy table built before scan");
         debug_assert!(table.has_occ());
-        self.scan = Some(kernels::scan_tile_occupancy(table, t.id, base_step, &step_eff));
+        let mut scan = self.scan.take().unwrap_or_else(arena::take_scan);
+        // request the lane scratch at its real size (m_total/8 words)
+        // so growth shows up as an arena miss instead of hiding inside
+        // the kernel's resize
+        let mut lanes_buf = arena::take_u64(table.m_rows() / 8);
+        let cap = scan.row_cycles.capacity();
+        kernels::scan_tile_occupancy_into(&mut scan, table, t.id, base_step, &step_eff, &mut lanes_buf);
+        if scan.row_cycles.capacity() != cap {
+            arena::note_growth();
+        }
+        arena::give_u64(lanes_buf);
+        arena::give_u64(step_eff);
+        self.scan = Some(scan);
     }
 
     /// Process one Compute chunk (≤ Tm input rows on this core).
@@ -254,7 +292,6 @@ impl<'a> CoreExecutor<'a> {
         let layer = self.layer;
         let t = &layer.tiles[tile_idx];
         let a = &layer.assignments[t.assignment];
-        let prep = &layer.prep;
         let comp = arch.compartments;
         let rows = t.rows();
         let steps = ceil_div(rows, comp);
@@ -273,7 +310,7 @@ impl<'a> CoreExecutor<'a> {
                 (full_steps as u64 * comp as u64 + tail as u64) * demand
             } else {
                 // dense: effective = non-zero weight bits actually stored
-                dense_effective_cells(t, a, prep)
+                dense_effective_cells(t, a)
             };
             let mc = m_count as u64;
             self.events.macro_cycles += cycles_per_row * mc;
@@ -322,7 +359,7 @@ impl<'a> CoreExecutor<'a> {
             let row_eff: u64 = if arch.weight_bit_sparsity {
                 demand * rows as u64
             } else {
-                dense_effective_cells(t, a, prep)
+                dense_effective_cells(t, a)
             };
             worst = row_cycles;
             tot_cycles = row_cycles * m_count as u64;
@@ -368,35 +405,34 @@ impl<'a> CoreExecutor<'a> {
     }
 }
 
-/// Effective (non-zero-bit) cells for a whole dense tile, summed over
-/// row-steps — the U_act numerator per bit-cycle.
-fn dense_effective_cells(t: &Tile, a: &Assignment, prep: &PreparedLayer) -> u64 {
-    let mut cells = 0u64;
-    for &k in &a.kept_rows[t.row_start..t.row_end] {
-        for &f in &a.filters {
-            cells += (prep.weights.get(k as usize, f) as u8).count_ones() as u64;
+/// Release the executor's cached table/scan back to the thread arena.
+/// (`acc` is moved out by the engines before the drop and recycled
+/// after their merge.)
+impl Drop for CoreExecutor<'_> {
+    fn drop(&mut self) {
+        if let Some(table) = self.table.take() {
+            arena::give_table(table);
+        }
+        if let Some(scan) = self.scan.take() {
+            arena::give_scan(scan);
         }
     }
-    cells
 }
 
-/// Same, restricted to the lanes of one row-step.
-fn dense_step_effective_cells(
-    t: &Tile,
-    a: &Assignment,
-    prep: &PreparedLayer,
-    comp: usize,
-    step: usize,
-    lanes: usize,
-) -> u64 {
+/// Effective (non-zero-bit) cells for a whole dense tile, summed over
+/// row-steps — the U_act numerator per bit-cycle. O(1): a subtraction
+/// of the assignment's compile-time bit-cell prefix sums
+/// ([`Assignment::bit_cell_prefix`]) instead of the O(rows × filters)
+/// popcount walk this used to perform per tile at sim time.
+fn dense_effective_cells(t: &Tile, a: &Assignment) -> u64 {
+    a.bit_cell_prefix[t.row_end] - a.bit_cell_prefix[t.row_start]
+}
+
+/// Same, restricted to the lanes of one row-step — also one prefix
+/// subtraction.
+fn dense_step_effective_cells(t: &Tile, a: &Assignment, comp: usize, step: usize, lanes: usize) -> u64 {
     let base = t.row_start + step * comp;
-    let mut cells = 0u64;
-    for &k in &a.kept_rows[base..base + lanes] {
-        for &f in &a.filters {
-            cells += (prep.weights.get(k as usize, f) as u8).count_ones() as u64;
-        }
-    }
-    cells
+    a.bit_cell_prefix[base + lanes] - a.bit_cell_prefix[base]
 }
 
 #[cfg(test)]
@@ -472,6 +508,35 @@ mod tests {
                 for m in 0..m_total {
                     assert_eq!(fwd.get(m, f), ai as i32 + 1, "m {m} filter {f}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_effective_cells_match_direct_popcount_walk() {
+        // the O(1) prefix subtractions must equal the original
+        // O(rows × filters) popcount walk, per tile and per step
+        for arch in [ArchConfig::dense_baseline(), ArchConfig::db_pim()] {
+            let layer = compiled(&arch, 44);
+            let prep = &layer.prep;
+            let comp = arch.compartments;
+            for t in &layer.tiles {
+                let a = &layer.assignments[t.assignment];
+                let mut want = 0u64;
+                for &k in &a.kept_rows[t.row_start..t.row_end] {
+                    for &f in &a.filters {
+                        want += u64::from((prep.weights.get(k as usize, f) as u8).count_ones());
+                    }
+                }
+                assert_eq!(dense_effective_cells(t, a), want, "tile {}", t.id);
+                let rows = t.rows();
+                let steps = ceil_div(rows, comp);
+                let mut sum = 0u64;
+                for s in 0..steps {
+                    let lanes = (rows - s * comp).min(comp);
+                    sum += dense_step_effective_cells(t, a, comp, s, lanes);
+                }
+                assert_eq!(sum, want, "step sums must partition tile {}", t.id);
             }
         }
     }

@@ -63,7 +63,14 @@ fn run_segment(
     for instr in &seg.instrs {
         ex.exec(instr);
     }
-    SegmentOut { core: seg.core as usize, clock: ex.clock, events: ex.events, acc: ex.acc }
+    // take the outputs (the executor's Drop returns its cached
+    // table/scan to the thread arena)
+    SegmentOut {
+        core: seg.core as usize,
+        clock: ex.clock,
+        events: std::mem::take(&mut ex.events),
+        acc: ex.acc.take(),
+    }
 }
 
 fn validate_inputs(machine: &Machine, layer: &CompiledLayer, x: Option<&MatI8>, functional: bool) {
@@ -146,11 +153,15 @@ pub fn run_layer(
                 .collect()
         };
         // Deterministic merge: ascending core order (segment order).
-        for out in &outs {
+        // Merged CoreAccs recycle their block storage to the arena.
+        for out in outs {
             clocks[out.core] += out.clock;
             events += &out.events;
-            if let (Some(acc), Some(ca)) = (acc.as_mut(), out.acc.as_ref()) {
-                ca.merge_into(acc);
+            if let Some(ca) = out.acc {
+                if let Some(acc) = acc.as_mut() {
+                    ca.merge_into(acc);
+                }
+                ca.recycle();
             }
         }
         apply_barrier(phase.barrier, &mut clocks, &mut events, machine);
@@ -192,10 +203,13 @@ pub fn run_layer_interp(
         }
     }
     let mut acc = functional.then(|| MatI32::zeros(m_total, layer.prep.n));
-    for ex in &execs {
+    for mut ex in execs {
         events += &ex.events;
-        if let (Some(acc), Some(ca)) = (acc.as_mut(), ex.acc.as_ref()) {
-            ca.merge_into(acc);
+        if let Some(ca) = ex.acc.take() {
+            if let Some(acc) = acc.as_mut() {
+                ca.merge_into(acc);
+            }
+            ca.recycle();
         }
     }
     finish(machine, layer, events, clocks, acc)

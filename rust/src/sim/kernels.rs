@@ -55,6 +55,21 @@ pub struct TileScan {
     pub eff_total: u64,
 }
 
+impl TileScan {
+    /// An unbuilt scan (the arena's recycling seed): tile sentinel no
+    /// real tile id can match, empty cycle vector.
+    pub fn empty() -> Self {
+        TileScan { tile: u32::MAX, row_cycles: Vec::new(), eff_total: 0 }
+    }
+
+    /// Poison the executor cache key before the scan enters the arena
+    /// free list (a recycled scan must never falsely match a tile id
+    /// of a different layer).
+    pub(crate) fn retire(&mut self) {
+        self.tile = u32::MAX;
+    }
+}
+
 /// Lane accumulators flush to 64-bit counters before a byte lane can
 /// saturate: 31 steps × max popcount 8 = 248 < 256.
 const LANE_FLUSH_STEPS: u32 = 31;
@@ -70,17 +85,40 @@ pub fn scan_tile_occupancy(
     base_step: usize,
     step_eff: &[u64],
 ) -> TileScan {
+    let mut scan = TileScan::empty();
+    let mut lane_scratch = Vec::new();
+    scan_tile_occupancy_into(&mut scan, table, tile, base_step, step_eff, &mut lane_scratch);
+    scan
+}
+
+/// Reset-and-fill form of [`scan_tile_occupancy`]: rewrites `scan` in
+/// place (reusing its `row_cycles` capacity) and runs the SWAR lane
+/// accumulators in caller-provided scratch, so an arena-recycled scan
+/// makes the per-tile walk allocation-free after warm-up. Bit-identical
+/// to the allocating form — every output field is rewritten.
+pub fn scan_tile_occupancy_into(
+    scan: &mut TileScan,
+    table: &OccupancyTable,
+    tile: u32,
+    base_step: usize,
+    step_eff: &[u64],
+    lane_scratch: &mut Vec<u64>,
+) {
     let m_total = table.m_rows();
     debug_assert!(base_step + step_eff.len() <= table.steps());
-    let mut row_cycles = vec![0u64; m_total];
+    scan.tile = tile;
+    scan.row_cycles.clear();
+    scan.row_cycles.resize(m_total, 0);
+    let row_cycles = &mut scan.row_cycles;
     let words = m_total / 8;
-    let mut lane_acc = vec![0u64; words];
+    lane_scratch.clear();
+    lane_scratch.resize(words, 0);
     let mut eff_total = 0u64;
     let mut pending = 0u32;
     for (s, &eff) in step_eff.iter().enumerate() {
         let occ_row = table.step_row(base_step + s);
         let (word_bytes, tail) = occ_row.split_at(words * 8);
-        for (lanes, chunk) in lane_acc.iter_mut().zip(word_bytes.chunks_exact(8)) {
+        for (lanes, chunk) in lane_scratch.iter_mut().zip(word_bytes.chunks_exact(8)) {
             let word = u64::from_le_bytes(chunk.try_into().unwrap());
             *lanes += lane_popcount(word);
             eff_total += eff * u64::from(word.count_ones());
@@ -92,14 +130,14 @@ pub fn scan_tile_occupancy(
         }
         pending += 1;
         if pending == LANE_FLUSH_STEPS {
-            flush_lanes(&mut lane_acc, &mut row_cycles);
+            flush_lanes(lane_scratch, row_cycles);
             pending = 0;
         }
     }
     if pending > 0 {
-        flush_lanes(&mut lane_acc, &mut row_cycles);
+        flush_lanes(lane_scratch, row_cycles);
     }
-    TileScan { tile, row_cycles, eff_total }
+    scan.eff_total = eff_total;
 }
 
 /// Drain the byte-lane accumulators into the 64-bit per-row counters.

@@ -110,11 +110,13 @@ impl Machine {
     /// Simulate one standalone SIMD layer (dw-conv, pool, ...).
     pub fn run_simd_layer(&self, name: &str, op: SimdOp, elems: u64) -> LayerStats {
         let cycles = simd::simd_cycles(op, elems, &self.arch);
-        let mut events = EventCounts::default();
-        events.simd_lane_ops = simd::lane_ops(op, elems);
-        events.instrs = 1;
-        events.elapsed_cycles = cycles;
-        events.core_cycles = cycles; // SIMD core only
+        let events = EventCounts {
+            simd_lane_ops: simd::lane_ops(op, elems),
+            instrs: 1,
+            elapsed_cycles: cycles,
+            core_cycles: cycles, // SIMD core only
+            ..EventCounts::default()
+        };
         let category = match op {
             SimdOp::DwConv => OpCategory::DwConv,
             SimdOp::Mul => OpCategory::Mul,

@@ -10,6 +10,12 @@
 //!   IPU inner loop (step-major storage).
 //! * [`kernels`] — batched hot-loop kernels: the step-major word-batched
 //!   occupancy scan and the dense gathered-weight micro-GEMM accumulate.
+//! * [`arena`] — thread-local scratch arenas recycling the hot-path
+//!   working set (occupancy tables, tile scans, accumulator blocks), so
+//!   steady-state simulation is allocation-free.
+//! * [`simcache`] — sweep-wide memo of per-layer simulation results,
+//!   keyed like the CompileCache; repeated sweep cells skip simulation
+//!   entirely.
 //! * [`ipu`] — input zero-column detection (bit-level input sparsity).
 //! * [`dbmu`] — bit-level DBMU reference datapath (validation).
 //! * [`simd`] — SIMD-core cost model and functional post-ops.
@@ -21,6 +27,7 @@
 //! (`ArchConfig::dense_baseline()`), exactly like the paper obtained it
 //! by "removing all sparsity support".
 
+pub mod arena;
 pub mod core_exec;
 pub mod dbmu;
 pub mod engine;
@@ -29,11 +36,13 @@ pub mod kernels;
 pub mod machine;
 pub mod occupancy;
 pub mod pipeline;
+pub mod simcache;
 pub mod simd;
 pub mod trace;
 
 pub use engine::Engine;
 pub use machine::{LayerStats, Machine, OpCategory};
+pub use simcache::SimCache;
 
 use crate::arch::ArchConfig;
 use crate::compiler::cache::CompileCache;
@@ -146,8 +155,11 @@ pub fn simulate_network(
 
 /// One PIM layer's perf-mode job: compile (through the sweep's
 /// [`CompileCache`] when one is provided), synthesize activations when
-/// the IPU needs them, simulate. Deterministic per (seed, idx) — the
-/// cache only memoizes, it never changes the compiled artifact.
+/// the IPU needs them, simulate. When a [`SimCache`] is provided the
+/// whole job is memoized — a hit skips compilation, activation
+/// synthesis and simulation entirely. Deterministic per (seed, idx) —
+/// both caches only memoize, they never change the result (DESIGN.md
+/// §8).
 fn simulate_pim_layer(
     net: &Network,
     idx: usize,
@@ -155,27 +167,41 @@ fn simulate_pim_layer(
     machine: &Machine,
     seed: u64,
     cache: Option<&CompileCache>,
+    sim_cache: Option<&SimCache>,
 ) -> LayerStats {
     let arch = &machine.arch;
-    let clayer: std::sync::Arc<compiler::CompiledLayer> = match cache {
-        Some(cache) => {
-            cache.get_or_compile(net, idx, sparsity, arch, seed).expect("not a PIM layer")
-        }
-        None => std::sync::Arc::new(
-            compiler::compile_network_layer(net, idx, sparsity, arch, seed)
-                .expect("not a PIM layer"),
-        ),
+    let compute = || {
+        let clayer: std::sync::Arc<compiler::CompiledLayer> = match cache {
+            Some(cache) => {
+                cache.get_or_compile(net, idx, sparsity, arch, seed).expect("not a PIM layer")
+            }
+            None => std::sync::Arc::new(
+                compiler::compile_network_layer(net, idx, sparsity, arch, seed)
+                    .expect("not a PIM layer"),
+            ),
+        };
+        let x = arch.input_skipping.then(|| {
+            let m = clayer.prep.m.max(1);
+            MatI8::from_vec(
+                m,
+                clayer.prep.k,
+                crate::models::synthesize_activations(
+                    seed ^ ((idx as u64) << 20),
+                    m * clayer.prep.k,
+                ),
+            )
+        });
+        let (stats, _) = machine.run_pim_layer(&clayer, x.as_ref(), false);
+        (stats, None)
     };
-    let x = arch.input_skipping.then(|| {
-        let m = clayer.prep.m.max(1);
-        MatI8::from_vec(
-            m,
-            clayer.prep.k,
-            crate::models::synthesize_activations(seed ^ ((idx as u64) << 20), m * clayer.prep.k),
-        )
-    });
-    let (stats, _) = machine.run_pim_layer(&clayer, x.as_ref(), false);
-    stats
+    match sim_cache {
+        Some(sc) => {
+            sc.get_or_run(net, idx, sparsity, arch, seed, false, compute)
+                .expect("not a PIM layer")
+                .0
+        }
+        None => compute().0,
+    }
 }
 
 /// [`simulate_network`] with an explicit engine: `Engine::Parallel`
@@ -190,7 +216,7 @@ pub fn simulate_network_with_engine(
     seed: u64,
     engine: Engine,
 ) -> SimReport {
-    simulate_network_impl(net, sparsity, arch, seed, engine, None)
+    simulate_network_impl(net, sparsity, arch, seed, engine, None, None)
 }
 
 /// [`simulate_network_with_engine`] compiling through a sweep-wide
@@ -205,9 +231,28 @@ pub fn simulate_network_cached(
     engine: Engine,
     cache: &CompileCache,
 ) -> SimReport {
-    simulate_network_impl(net, sparsity, arch, seed, engine, Some(cache))
+    simulate_network_impl(net, sparsity, arch, seed, engine, Some(cache), None)
 }
 
+/// [`simulate_network_cached`] additionally memoizing whole per-layer
+/// simulation results through a sweep-wide [`SimCache`]: a repeated
+/// `(arch knobs, layer, sparsity, seed)` combination skips compilation
+/// *and* simulation, returning the memoized [`LayerStats`]. The report
+/// is bit-identical to the uncached path (DESIGN.md §8; pinned by
+/// `prop_simcache_is_bit_identical_and_hits`).
+pub fn simulate_network_memo(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seed: u64,
+    engine: Engine,
+    cache: &CompileCache,
+    sim_cache: &SimCache,
+) -> SimReport {
+    simulate_network_impl(net, sparsity, arch, seed, engine, Some(cache), Some(sim_cache))
+}
+
+#[allow(clippy::too_many_arguments)]
 fn simulate_network_impl(
     net: &Network,
     sparsity: SparsityConfig,
@@ -215,6 +260,7 @@ fn simulate_network_impl(
     seed: u64,
     engine: Engine,
     cache: Option<&CompileCache>,
+    sim_cache: Option<&SimCache>,
 ) -> SimReport {
     // The per-layer machines inherit the outer engine: with
     // Engine::Parallel each layer's core segments spawn into the same
@@ -231,13 +277,15 @@ fn simulate_network_impl(
             Engine::Parallel => {
                 let jobs: Vec<_> = pim_idx
                     .iter()
-                    .map(|&idx| move || simulate_pim_layer(net, idx, sparsity, machine, seed, cache))
+                    .map(|&idx| {
+                        move || simulate_pim_layer(net, idx, sparsity, machine, seed, cache, sim_cache)
+                    })
                     .collect();
                 crate::coordinator::pool::run_jobs(jobs)
             }
             Engine::Sequential => pim_idx
                 .iter()
-                .map(|&idx| simulate_pim_layer(net, idx, sparsity, machine, seed, cache))
+                .map(|&idx| simulate_pim_layer(net, idx, sparsity, machine, seed, cache, sim_cache))
                 .collect(),
         };
         let mut slots: Vec<Option<LayerStats>> = (0..net.layers.len()).map(|_| None).collect();

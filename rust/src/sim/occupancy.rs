@@ -72,9 +72,30 @@ pub struct OccupancyTable {
     /// `occ[step * m_total + m]` — all M rows of a step contiguous for
     /// the word-batched kernel walk.
     occ: Vec<u8>,
+    /// Gather scratch row used when the gathered rows are NOT retained
+    /// (perf-only builds). Kept in the struct so recycled tables
+    /// (`sim::arena`) reuse its capacity instead of reallocating per
+    /// build.
+    scratch: Vec<u8>,
 }
 
 impl OccupancyTable {
+    /// An unbuilt table (the arena's recycling seed): no rows, no
+    /// steps, and an assignment sentinel no real build can match.
+    /// [`build_into`](Self::build_into) turns it into a live table.
+    pub fn empty() -> Self {
+        Self {
+            assignment: usize::MAX,
+            kept_len: 0,
+            stride: 0,
+            bytes: Vec::new(),
+            steps: 0,
+            m_total: 0,
+            occ: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
     /// Gather + pack all `m_total` rows of `x` for `kept`. `with_occ`
     /// precomputes the per-step occupancy bytes (IPU enabled);
     /// `keep_gathered` retains the gathered rows (functional runs need
@@ -90,20 +111,49 @@ impl OccupancyTable {
         with_occ: bool,
         keep_gathered: bool,
     ) -> Self {
+        let mut t = Self::empty();
+        t.build_into(assignment, x, kept, comp, m_total, with_occ, keep_gathered);
+        t
+    }
+
+    /// Reset-and-fill form of [`build`](Self::build): rebuilds `self`
+    /// in place for new inputs, reusing its buffer capacities. After
+    /// warm-up an arena-recycled table makes this allocation-free —
+    /// the result is bit-identical to a fresh `build` (every byte of
+    /// every buffer is rewritten or zero-filled below).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build_into(
+        &mut self,
+        assignment: usize,
+        x: &MatI8,
+        kept: &[u32],
+        comp: usize,
+        m_total: usize,
+        with_occ: bool,
+        keep_gathered: bool,
+    ) {
         let kept_len = kept.len();
         let stride = ceil_div(kept_len.max(1), 8) * 8;
         let steps = if with_occ { ceil_div(kept_len, comp) } else { 0 };
-        let mut bytes = vec![0u8; if keep_gathered { m_total * stride } else { 0 }];
-        let mut occ = vec![0u8; m_total * steps];
+        self.assignment = assignment;
+        self.kept_len = kept_len;
+        self.stride = stride;
+        self.steps = steps;
+        self.m_total = m_total;
+        self.bytes.clear();
+        self.bytes.resize(if keep_gathered { m_total * stride } else { 0 }, 0);
+        self.occ.clear();
+        self.occ.resize(m_total * steps, 0);
         // the scratch row only backs the gather when the gathered rows
-        // are NOT retained; allocating it otherwise was dead weight
-        let mut scratch = vec![0u8; if keep_gathered { 0 } else { stride }];
+        // are NOT retained; sizing it otherwise would be dead weight
+        self.scratch.clear();
+        self.scratch.resize(if keep_gathered { 0 } else { stride }, 0);
         for m in 0..m_total {
             let xrow = i8_as_u8(x.row(m));
             let row: &mut [u8] = if keep_gathered {
-                &mut bytes[m * stride..m * stride + kept_len]
+                &mut self.bytes[m * stride..m * stride + kept_len]
             } else {
-                &mut scratch[..kept_len]
+                &mut self.scratch[..kept_len]
             };
             for (dst, &k) in row.iter_mut().zip(kept) {
                 *dst = xrow[k as usize];
@@ -112,10 +162,28 @@ impl OccupancyTable {
             for s in 0..steps {
                 let start = s * comp;
                 let lanes = (kept_len - start).min(comp);
-                occ[s * m_total + m] = or_fold_bytes(&row[start..start + lanes]);
+                self.occ[s * m_total + m] = or_fold_bytes(&row[start..start + lanes]);
             }
         }
-        Self { assignment, kept_len, stride, bytes, steps, m_total, occ }
+    }
+
+    /// Internal buffer capacities — arena growth accounting: a
+    /// `build_into` that changes any of these reallocated (capacities
+    /// never shrink), which the executor reports via
+    /// `arena::note_growth` so the zero-miss assertions stay honest.
+    pub(crate) fn buf_capacities(&self) -> (usize, usize, usize) {
+        (self.bytes.capacity(), self.occ.capacity(), self.scratch.capacity())
+    }
+
+    /// Poison the executor cache key before the table enters the arena
+    /// free list, so a recycled table can never falsely match a new
+    /// layer's assignment index (defense in depth — executors rebuild
+    /// every table they take anyway).
+    pub(crate) fn retire(&mut self) {
+        self.assignment = usize::MAX;
+        self.steps = 0;
+        self.m_total = 0;
+        self.kept_len = 0;
     }
 
     /// Whether the gathered rows were retained.
@@ -231,6 +299,39 @@ mod tests {
                     assert_eq!(t.step_occ(m, s), want, "m {m} step {s}");
                     // the step-major lane exposes the same byte
                     assert_eq!(t.step_row(s)[m], want, "m {m} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_into_reuse_is_bit_identical_to_fresh_build() {
+        // rebuild one table object across random inputs (the arena's
+        // reuse pattern) and compare every observable against a fresh
+        // build — no byte of a previous build may survive
+        let mut rng = Rng::new(77);
+        let mut reused = OccupancyTable::empty();
+        for case in 0..25usize {
+            let m_total = 1 + rng.below(10) as usize;
+            let k = 8 + rng.below(120) as usize;
+            let comp = [4usize, 8, 16][rng.below(3) as usize];
+            let x = MatI8::from_vec(m_total, k, (0..m_total * k).map(|_| rng.int8()).collect());
+            let kept: Vec<u32> = (0..k as u32).filter(|_| rng.below(3) > 0).collect();
+            let with_occ = rng.below(4) > 0;
+            let keep_gathered = rng.below(2) == 0;
+            let fresh =
+                OccupancyTable::build(case, &x, &kept, comp, m_total, with_occ, keep_gathered);
+            reused.build_into(case, &x, &kept, comp, m_total, with_occ, keep_gathered);
+            assert_eq!(reused.assignment, fresh.assignment);
+            assert_eq!(reused.steps(), fresh.steps(), "case {case}");
+            assert_eq!(reused.m_rows(), fresh.m_rows());
+            assert_eq!(reused.has_gathered(), fresh.has_gathered());
+            for m in 0..m_total {
+                if fresh.has_gathered() {
+                    assert_eq!(reused.gathered_row(m), fresh.gathered_row(m), "case {case}");
+                }
+                for s in 0..fresh.steps() {
+                    assert_eq!(reused.step_occ(m, s), fresh.step_occ(m, s), "case {case}");
                 }
             }
         }

@@ -1,0 +1,223 @@
+//! Sweep-wide simulation cache.
+//!
+//! Mirrors `compiler::cache::CompileCache` one level up the stack: the
+//! experiment drivers sweep grids in which whole *cells* repeat — most
+//! prominently fig11's dense baseline, identical at all four sparsity
+//! points of each network. The CompileCache already deduplicates their
+//! compiles, but the simulator still re-ran every repeated layer.
+//! [`SimCache`] memoizes the full per-layer simulation result
+//! ([`LayerStats`], plus the functional accumulators when present), so
+//! repeated cells skip compilation *and* simulation entirely.
+//!
+//! **Key contract.** Perf-mode layer simulation is a pure function of
+//! the compiled artifact and the synthesized activations (DESIGN.md
+//! §3). The compile key (`compiler::cache::CompileKey`) already pins
+//! every input of both: all arch knobs the executor reads are compile
+//! knobs (`n_cores`, `compartments`, `macros_per_core`,
+//! `tile_load_cycles`, `input_bits`, `macro_columns`, the sparsity
+//! feature flags), and activation synthesis is seeded by
+//! `(seed, layer_idx, m, k)`, all in the key. Engine choice and worker
+//! count are excluded *by the determinism contract* (§8): they cannot
+//! change a single bit of the result. The only sim-side extension is
+//! the `functional` flag (accumulators computed or not).
+//!
+//! Sharded + counted exactly like the CompileCache; a racing duplicate
+//! simulation of one key is harmless (results are bit-identical, first
+//! insert wins) and keeps long simulations from serializing the shard.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::ArchConfig;
+use crate::compiler::cache::CompileKey;
+use crate::compiler::{CacheStats, SparsityConfig};
+use crate::models::Network;
+use crate::tensor::MatI32;
+
+use super::machine::LayerStats;
+
+/// Everything that determines one layer's simulation result: the
+/// compile key (see module docs) plus the functional flag.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct SimKey {
+    compile: CompileKey,
+    functional: bool,
+}
+
+/// One memoized layer result.
+#[derive(Debug)]
+struct SimEntry {
+    stats: LayerStats,
+    /// Functional accumulators (None for perf-mode entries).
+    acc: Option<MatI32>,
+}
+
+/// Shard count: enough to keep 16 sweep workers from colliding.
+const SHARDS: usize = 16;
+
+type Shard = Mutex<HashMap<SimKey, Arc<SimEntry>>>;
+
+/// Content-keyed, mutex-sharded memo of per-layer simulation results,
+/// shared across the jobs of one experiment sweep (`SweepCtx`).
+#[derive(Debug)]
+pub struct SimCache {
+    shards: Vec<Shard>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for SimCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimCache {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &SimKey) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % SHARDS]
+    }
+
+    /// Fetch (or compute via `run`) the simulation result of the PIM
+    /// layer at `idx` of `net`. Returns `None` for non-PIM layers
+    /// without invoking `run`. A miss counts one actual simulation;
+    /// `run` executes *outside* the shard lock (a racing duplicate is
+    /// bit-identical; the first insert wins).
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_run(
+        &self,
+        net: &Network,
+        idx: usize,
+        sparsity: SparsityConfig,
+        arch: &ArchConfig,
+        seed: u64,
+        functional: bool,
+        run: impl FnOnce() -> (LayerStats, Option<MatI32>),
+    ) -> Option<(LayerStats, Option<MatI32>)> {
+        net.layers[idx].kind.matmul_dims()?;
+        let key = SimKey { compile: CompileKey::new(net, idx, sparsity, arch, seed), functional };
+        let shard = self.shard(&key);
+        if let Some(hit) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some((hit.stats.clone(), hit.acc.clone()));
+        }
+        let (stats, acc) = run();
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let fresh = Arc::new(SimEntry { stats, acc });
+        let mut map = shard.lock().unwrap();
+        let entry = map.entry(key).or_insert(fresh);
+        Some((entry.stats.clone(), entry.acc.clone()))
+    }
+
+    /// Snapshot of the hit/miss counters (a miss = one actual layer
+    /// simulation).
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fixtures::tiny_net;
+    use crate::sim::{self, Engine};
+
+    fn layer_result(net: &Network, idx: usize, seed: u64) -> (LayerStats, Option<MatI32>) {
+        // a real (tiny) simulation as the closure payload
+        let arch = ArchConfig::db_pim();
+        let clayer = crate::compiler::compile_network_layer(
+            net,
+            idx,
+            SparsityConfig::hybrid(0.5),
+            &arch,
+            seed,
+        )
+        .unwrap();
+        let m = clayer.prep.m.max(1);
+        let x = crate::tensor::MatI8::from_vec(
+            m,
+            clayer.prep.k,
+            crate::models::synthesize_activations(seed, m * clayer.prep.k),
+        );
+        let machine = sim::Machine::with_engine(arch, Engine::Sequential);
+        let (stats, acc) = machine.run_pim_layer(&clayer, Some(&x), false);
+        (stats, acc)
+    }
+
+    #[test]
+    fn second_lookup_hits_without_running() {
+        let cache = SimCache::new();
+        let net = tiny_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.5);
+        let a = cache
+            .get_or_run(&net, 0, sp, &arch, 7, false, || layer_result(&net, 0, 7))
+            .unwrap();
+        let b = cache
+            .get_or_run(&net, 0, sp, &arch, 7, false, || {
+                panic!("hit must not re-run the simulation")
+            })
+            .unwrap();
+        assert_eq!(a.0.events, b.0.events);
+        assert_eq!(a.0.core_cycles, b.0.core_cycles);
+        assert_eq!(a.0.elapsed, b.0.elapsed);
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn distinct_keys_miss() {
+        let cache = SimCache::new();
+        let net = tiny_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.5);
+        let run = || layer_result(&net, 0, 7);
+        cache.get_or_run(&net, 0, sp, &arch, 7, false, run).unwrap();
+        // seed, sparsity, arch knob, layer idx, functional: all distinct
+        cache.get_or_run(&net, 0, sp, &arch, 8, false, || layer_result(&net, 0, 8)).unwrap();
+        cache
+            .get_or_run(&net, 0, SparsityConfig::hybrid(0.6), &arch, 7, false, || {
+                layer_result(&net, 0, 7)
+            })
+            .unwrap();
+        cache
+            .get_or_run(&net, 0, sp, &ArchConfig::dense_baseline(), 7, false, || {
+                layer_result(&net, 0, 7)
+            })
+            .unwrap();
+        cache.get_or_run(&net, 2, sp, &arch, 7, false, || layer_result(&net, 2, 7)).unwrap();
+        cache.get_or_run(&net, 0, sp, &arch, 7, true, || layer_result(&net, 0, 7)).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 6 });
+    }
+
+    #[test]
+    fn non_pim_layers_return_none_without_counting() {
+        let cache = SimCache::new();
+        let net = tiny_net();
+        let r = cache.get_or_run(
+            &net,
+            1,
+            SparsityConfig::dense(),
+            &ArchConfig::db_pim(),
+            1,
+            false,
+            || panic!("non-PIM layer must not run"),
+        );
+        assert!(r.is_none());
+        assert_eq!(cache.stats().lookups(), 0);
+    }
+}

@@ -18,7 +18,13 @@
 //!   the compile-time gathered weight block (the micro-GEMM operand)
 //!   matches the prepared weight matrix
 //! * caching: simulating through a CompileCache is bit-identical to
-//!   fresh compilation, and repeated sweep points hit
+//!   fresh compilation, and repeated sweep points hit; simulating
+//!   through a SimCache is bit-identical to the uncached path, repeated
+//!   cells hit, and hits skip compilation entirely
+//! * recycling: executors running on an arena-warm thread (recycled
+//!   occupancy tables, tile scans and accumulator blocks) are
+//!   bit-identical to fresh-allocation executors across random reuse
+//!   sequences
 //! * pooling: nested sweep × layer × segment execution on a private
 //!   work-stealing pool (random worker counts 1–16) is bit-identical
 //!   to the fully sequential walk, and the SweepSpec executor
@@ -252,6 +258,120 @@ fn prop_compile_cache_is_bit_identical_and_hits() {
 }
 
 #[test]
+fn prop_simcache_is_bit_identical_and_hits() {
+    // Mirror of the compile-cache property one level up: simulating
+    // through a SimCache must be bit-identical to the uncached path, a
+    // repeated sweep cell must be served entirely from the cache, and
+    // sim-cache hits must skip compilation entirely (the compile cache
+    // sees exactly one lookup per sim miss and none on the hit pass).
+    use dbpim::compiler::CompileCache;
+    use dbpim::models::fixtures::small_net;
+    use dbpim::sim::SimCache;
+    check_cases(8, |rng| {
+        let arch = random_arch(rng);
+        let net = small_net();
+        let sp = SparsityConfig { value_sparsity: rng.f64() * 0.7, fta: rng.below(2) == 0 };
+        let seed = rng.next_u64();
+        let cc = CompileCache::new();
+        let sc = SimCache::new();
+        let plain =
+            dbpim::sim::simulate_network_with_engine(&net, sp, &arch, seed, Engine::Sequential);
+        let memo = dbpim::sim::simulate_network_memo(
+            &net,
+            sp,
+            &arch,
+            seed,
+            Engine::Sequential,
+            &cc,
+            &sc,
+        );
+        if memo.totals != plain.totals || memo.total_cycles() != plain.total_cycles() {
+            return Err(format!("memoized simulation diverges on {}", arch.name));
+        }
+        let first = sc.stats();
+        if first.hits != 0 || first.misses == 0 {
+            return Err(format!("unexpected first-pass sim stats {first:?}"));
+        }
+        if cc.stats().lookups() != first.misses {
+            return Err(format!(
+                "compile lookups {} != sim misses {} on {}",
+                cc.stats().lookups(),
+                first.misses,
+                arch.name
+            ));
+        }
+        // a repeated sweep cell must be served entirely from the cache
+        let again = dbpim::sim::simulate_network_memo(
+            &net,
+            sp,
+            &arch,
+            seed,
+            Engine::Sequential,
+            &cc,
+            &sc,
+        );
+        if again.totals != plain.totals {
+            return Err(format!("sim-cache-hit report diverges on {}", arch.name));
+        }
+        for (a, b) in again.layers.iter().zip(&plain.layers) {
+            if a.name != b.name
+                || a.events != b.events
+                || a.core_cycles != b.core_cycles
+                || a.elapsed != b.elapsed
+            {
+                return Err(format!("cached layer {} diverges on {}", a.name, arch.name));
+            }
+        }
+        let second = sc.stats();
+        if second.misses != first.misses || second.hits != first.misses {
+            return Err(format!("repeat pass did not hit: {second:?}"));
+        }
+        // the hit pass never touched the compiler
+        if cc.stats().lookups() != first.misses {
+            return Err("sim-cache hits must skip compilation entirely".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arena_recycled_executors_bit_identical() {
+    // The acceptance invariant of the scratch-arena refactor: arena
+    // recycling must never leak state between executors. Run random
+    // layers repeatedly in random interleavings on this thread
+    // (sequential engine — every executor recycles through this
+    // thread's arena, which is warm after the first pass) and require
+    // each rerun to reproduce the first run's stats and accumulators
+    // bit for bit.
+    check_cases(6, |rng| {
+        let mut cases = Vec::new();
+        for _ in 0..3 {
+            let arch = random_arch(rng);
+            let (layer, x) = random_layer(rng, &arch);
+            let functional = rng.below(2) == 0;
+            let machine = Machine::with_engine(arch, Engine::Sequential);
+            let want = machine.run_pim_layer(&layer, Some(&x), functional);
+            cases.push((machine, layer, x, functional, want));
+        }
+        for round in 0..6 {
+            let i = rng.below(cases.len() as u64) as usize;
+            let (machine, layer, x, functional, want) = &cases[i];
+            let (stats, acc) = machine.run_pim_layer(layer, Some(x), *functional);
+            if stats.events != want.0.events
+                || stats.core_cycles != want.0.core_cycles
+                || stats.elapsed != want.0.elapsed
+            {
+                return Err(format!("recycled rerun {round} of case {i} diverges"));
+            }
+            if acc != want.1 {
+                return Err(format!("recycled accumulators diverge on rerun {round}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_pooled_nested_execution_bit_identical() {
     // The acceptance invariant of the worker-pool refactor: a sweep
     // fanned out on a private pool of random size (1–16 workers), with
@@ -332,7 +452,10 @@ fn prop_sweepspec_reproduces_serial_fig11_rows() {
     let seed = 7;
     let (rows, stats) = experiments::fig11_with_stats(seed);
     assert_eq!(rows.len(), 12);
-    assert!(stats.hits > 0, "fig11's repeated dense baseline must hit the sweep cache");
+    assert!(stats.sim.hits > 0, "fig11's repeated dense baseline must hit the sweep sim cache");
+    // a sim-cache hit skips compilation entirely: the compile cache
+    // sees exactly one lookup per sim miss
+    assert_eq!(stats.compile.lookups(), stats.sim.misses);
 
     let cache = CompileCache::new();
     let arch = ArchConfig::weights_only();

@@ -35,6 +35,9 @@ DEFAULT_CASES = [
     "e2e_resnet18_hybrid",
     "pool_nested_sweep",
     "pool_spawn_overhead",
+    "arena_reuse_row_loop",
+    "sim_cached_sweep",
+    "dense_eff_prefix",
 ]
 
 
