@@ -50,7 +50,7 @@ fn main() {
     assert!(stats.sim.hits > 0, "fig11 sweep produced no sim-cache hits");
     assert_eq!(
         stats.compile.lookups(),
-        stats.sim.misses,
+        stats.sim.misses + stats.sim.dup_computes,
         "sim-cache hits must skip compilation entirely"
     );
 

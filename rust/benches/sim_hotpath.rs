@@ -25,6 +25,9 @@
 //! * `sim_cached_sweep` — a fig11-shaped repeated *simulation* through
 //!   the sweep-wide SimCache (1 miss + 3 hits per layer; hits skip
 //!   compile + simulate entirely)
+//! * `serve_throughput` — a 48-request multi-tenant replay through the
+//!   batched serving frontend (dynamic batching + cross-tenant cache
+//!   sharing + pooled batch fan-out; admission-order results)
 //! * `pool_spawn_overhead` — scheduling cost of the persistent
 //!   work-stealing pool: 256 trivial jobs through `pool::run_jobs`
 //! * `pool_nested_sweep` — a miniature sweep × layer × segment nested
@@ -238,10 +241,46 @@ fn main() {
         }
         let stats = sim_cache.stats();
         assert!(stats.hits == 3 * stats.misses, "unexpected sim hit pattern: {stats:?}");
-        // hits skipped compilation entirely
-        assert!(compile_cache.stats().lookups() == stats.misses);
+        // hits skipped compilation entirely (one compile lookup per
+        // sim computation — misses plus racing duplicates)
+        assert!(compile_cache.stats().lookups() == stats.misses + stats.dup_computes);
         acc
     }));
+
+    // --- batched multi-tenant serving frontend: trace replay ---
+    // 48 requests over two tenants' models at mixed arch/sparsity
+    // points with repeats by construction, so the dynamic batcher
+    // groups compatible requests and the shared SimCache converts the
+    // repeats into hits; results return in admission order.
+    {
+        use dbpim::coordinator::serve::{ServeCtx, ServeRequest, ServeSpec};
+        use dbpim::models::Registry;
+        let traffic: Vec<ServeRequest> = (0..48)
+            .map(|i| ServeRequest {
+                model: (if i % 3 == 0 { "tiny" } else { "small" }).into(),
+                arch: "db-pim".into(),
+                sparsity: SparsityConfig::hybrid(0.2 * (i % 4) as f64),
+                seed: (i % 4) as u64,
+            })
+            .collect();
+        let spec = ServeSpec { models: vec!["small".into(), "tiny".into()], traffic };
+        samples.push(bench("serve_throughput", 0, iters(5, 2), || {
+            // fresh context per replay: the measured work is one cold
+            // replay (intra-replay sharing included), not cache decay
+            let ctx = ServeCtx::new(Registry::from_networks(vec![
+                dbpim::models::fixtures::small_net(),
+                dbpim::models::fixtures::tiny_net(),
+            ]));
+            let (results, stats) = spec.run_with(&ctx, 8).unwrap();
+            assert_eq!(results.len(), 48);
+            assert!(stats.batches < 48, "replay must actually batch");
+            assert!(
+                stats.cache.sim.hits > 0,
+                "replay must share sim-cache entries across requests"
+            );
+            results.len()
+        }));
+    }
 
     // --- the worker pool itself ---
     {

@@ -142,6 +142,20 @@ impl ArchConfig {
         }
     }
 
+    /// Preset lookup by CLI/trace name (the `--arch` spellings shared
+    /// by `dbpim simulate` and the serving frontend's replay traces).
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "db-pim" | "db_pim" => Self::db_pim(),
+            "baseline" | "dense-baseline" => Self::dense_baseline(),
+            "bit-only" => Self::bit_only(),
+            "value-only" => Self::value_only(),
+            "weights-only" => Self::weights_only(),
+            "dac24" => Self::dac24(),
+            _ => return None,
+        })
+    }
+
     /// Total macros (paper: 32).
     pub fn total_macros(&self) -> usize {
         self.n_cores * self.macros_per_core
@@ -205,6 +219,24 @@ mod tests {
         assert!(bit.weight_bit_sparsity && !bit.value_sparsity);
         let val = ArchConfig::value_only();
         assert!(!val.weight_bit_sparsity && val.value_sparsity);
+    }
+
+    #[test]
+    fn by_name_resolves_every_preset() {
+        for arch in [
+            ArchConfig::db_pim(),
+            ArchConfig::dense_baseline(),
+            ArchConfig::bit_only(),
+            ArchConfig::value_only(),
+            ArchConfig::weights_only(),
+            ArchConfig::dac24(),
+        ] {
+            let resolved = ArchConfig::by_name(arch.name).unwrap();
+            assert_eq!(resolved, arch, "preset {} must resolve under its own name", arch.name);
+        }
+        // CLI alias spelling
+        assert_eq!(ArchConfig::by_name("baseline").unwrap().name, "dense-baseline");
+        assert!(ArchConfig::by_name("nope").is_none());
     }
 
     #[test]

@@ -19,7 +19,7 @@
 //! artifacts are identical; the first insert wins) and keeps a long
 //! compile from blocking every other job mapped to the shard.
 
-use std::collections::hash_map::DefaultHasher;
+use std::collections::hash_map::{DefaultHasher, Entry};
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -126,6 +126,7 @@ pub struct CompileCache {
     shards: Vec<Shard>,
     hits: AtomicU64,
     misses: AtomicU64,
+    dup_computes: AtomicU64,
 }
 
 impl Default for CompileCache {
@@ -140,6 +141,7 @@ impl CompileCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            dup_computes: AtomicU64::new(0),
         }
     }
 
@@ -150,8 +152,15 @@ impl CompileCache {
     }
 
     /// Compile (or fetch) the PIM layer at `idx` of `net`. Returns
-    /// `None` for non-PIM layers, mirroring
-    /// [`compile_network_layer`]. A miss counts one actual compile.
+    /// `None` for non-PIM layers, mirroring [`compile_network_layer`].
+    ///
+    /// **Accounting is schedule-independent:** exactly one lookup per
+    /// key — the one whose insert lands first — counts as the miss;
+    /// every other lookup of that key counts as a hit, including a
+    /// racing duplicate compile that lost the insert (the wasted work
+    /// is tallied separately in [`CacheStats::dup_computes`]). So
+    /// `hits`/`misses` are identical for any worker count or steal
+    /// order, which lets tests pin them exactly.
     pub fn get_or_compile(
         &self,
         net: &Network,
@@ -171,10 +180,18 @@ impl CompileCache {
         // same key is deterministic, so whichever insert lands first is
         // authoritative and the loser's artifact is dropped.
         let compiled = Arc::new(compile_network_layer(net, idx, sparsity, arch, seed)?);
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = shard.lock().unwrap();
-        let entry = map.entry(key).or_insert(compiled);
-        Some(Arc::clone(entry))
+        Some(match map.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.dup_computes.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v.insert(compiled))
+            }
+        })
     }
 
     /// Snapshot of the hit/miss counters.
@@ -182,15 +199,24 @@ impl CompileCache {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            dup_computes: self.dup_computes.load(Ordering::Relaxed),
         }
     }
 }
 
-/// Hit/miss counters of one sweep (a miss is an actual compile).
+/// Hit/miss counters of one sweep. A miss is the one lookup per key
+/// that inserted the authoritative entry, so `hits` and `misses` are
+/// deterministic for any worker count and steal order; only
+/// `dup_computes` (computations that lost an insert race — wasted but
+/// harmless work) depends on scheduling.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Computations whose insert lost a race (already counted as hits;
+    /// excluded from `lookups`). Schedule-dependent — exclude from
+    /// determinism comparisons.
+    pub dup_computes: u64,
 }
 
 impl CacheStats {
@@ -206,14 +232,20 @@ impl CacheStats {
         }
     }
 
-    /// One-line driver-summary form: "3 hits / 5 misses (37.5% hit rate)".
+    /// One-line driver-summary form: "3 hits / 5 misses (37.5% hit rate)",
+    /// plus the racing-duplicate tally when one occurred.
     pub fn summary(&self) -> String {
-        format!(
+        let base = format!(
             "{} hits / {} misses ({:.1}% hit rate)",
             self.hits,
             self.misses,
             100.0 * self.hit_rate()
-        )
+        );
+        if self.dup_computes == 0 {
+            base
+        } else {
+            format!("{base}, {} duplicate computes", self.dup_computes)
+        }
     }
 }
 
@@ -232,7 +264,7 @@ mod tests {
         let a = cache.get_or_compile(&net, 0, sp, &arch, 7).unwrap();
         let b = cache.get_or_compile(&net, 0, sp, &arch, 7).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "hit must return the shared artifact");
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, dup_computes: 0 });
     }
 
     #[test]
@@ -247,7 +279,7 @@ mod tests {
         cache.get_or_compile(&net, 0, SparsityConfig::hybrid(0.6), &arch, 7).unwrap();
         cache.get_or_compile(&net, 0, sp, &ArchConfig::dense_baseline(), 7).unwrap();
         cache.get_or_compile(&net, 2, sp, &arch, 7).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 5 });
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 5, dup_computes: 0 });
     }
 
     #[test]
@@ -265,7 +297,7 @@ mod tests {
         let sp = SparsityConfig::dense();
         let ca = cache.get_or_compile(&a, 2, sp, &arch, 1).unwrap();
         let cb = cache.get_or_compile(&b, 2, sp, &arch, 1).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 2 });
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 2, dup_computes: 0 });
         assert_eq!(ca.prep.n, 8);
         assert_eq!(cb.prep.n, 24);
     }
@@ -296,10 +328,13 @@ mod tests {
 
     #[test]
     fn stats_formatting() {
-        let s = CacheStats { hits: 3, misses: 5 };
+        let s = CacheStats { hits: 3, misses: 5, dup_computes: 0 };
         assert_eq!(s.lookups(), 8);
         assert!((s.hit_rate() - 0.375).abs() < 1e-12);
         assert_eq!(s.summary(), "3 hits / 5 misses (37.5% hit rate)");
+        let d = CacheStats { hits: 3, misses: 5, dup_computes: 2 };
+        assert_eq!(d.lookups(), 8, "dup computes are already counted as hits");
+        assert_eq!(d.summary(), "3 hits / 5 misses (37.5% hit rate), 2 duplicate computes");
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
     }
 }

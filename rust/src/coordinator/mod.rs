@@ -1,7 +1,9 @@
 //! The coordinator: the persistent work-stealing worker pool that every
-//! parallel layer of the stack schedules into ([`pool`]), and the
+//! parallel layer of the stack schedules into ([`pool`]), the
 //! declarative experiment drivers ([`experiments`]) that regenerate the
-//! paper's figures/tables on top of it.
+//! paper's figures/tables on top of it, and the batched multi-tenant
+//! serving frontend ([`serve`]) that replays request traffic over the
+//! same pool and caches.
 //!
 //! (The offline image has no tokio/rayon; [`pool`] is std threads with
 //! a global injector + per-worker deques. Nested `scope()`s execute or
@@ -11,6 +13,7 @@
 
 pub mod experiments;
 pub mod pool;
+pub mod serve;
 
 /// Default worker count (leave headroom for the OS).
 pub fn default_workers() -> usize {

@@ -1,0 +1,530 @@
+//! Batched multi-tenant serving frontend.
+//!
+//! Everything below the coordinator was built for offline figure
+//! sweeps; this module adds the request-serving path of the ROADMAP
+//! north star: a deterministic, replayable admission queue over a
+//! multi-model [`Registry`], a dynamic batcher that groups compatible
+//! requests onto shared compiled state, and a fan-out over the
+//! work-stealing pool that returns results in admission order —
+//! bit-identical to serial per-request simulation for any batch size
+//! and worker count (DESIGN.md §8/§9, pinned by
+//! `prop_serve_batched_bit_identical`).
+//!
+//! Pipeline:
+//!
+//! 1. **Admission** — a [`ServeSpec`] names the deployed models and a
+//!    replayable traffic trace ([`ServeRequest`]: model id, activation
+//!    seed, precision/sparsity config, arch preset). Requests are
+//!    admitted in trace order; unknown models or arch presets are
+//!    admission errors, never panics.
+//! 2. **Batching** — the dynamic batcher walks the queue in admission
+//!    order and groups requests with equal [`BatchKey`]s into batches
+//!    of at most `max_batch`. The key carries exactly the inputs of
+//!    `compiler::cache::CompileKey` (model, arch preset, sparsity
+//!    config, seed — in perf mode the seed pins both the synthesized
+//!    checkpoint and the activations, so it is a compile input), so
+//!    the requests of one batch share one compiled `Program` per
+//!    layer and one `SimCache` entry. Batches of *different* tenants
+//!    still share both caches through the long-lived [`ServeCtx`].
+//! 3. **Execution** — batches fan out over `coordinator::pool`; each
+//!    batch runs [`sim::simulate_batch`], which flattens its
+//!    (request × layer) jobs into the same pool, nesting with the
+//!    per-segment parallelism exactly like the sweep drivers.
+//! 4. **Completion** — per-request reports scatter back to their
+//!    admission slots; [`ServeSpec::run`] returns them in admission
+//!    order plus a [`ServeStats`] (simulated latency percentiles,
+//!    host throughput, cross-tenant cache counters).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::arch::ArchConfig;
+use crate::compiler::{CompileCache, SparsityConfig};
+use crate::json::{self, arr, num, obj, str_, Value};
+use crate::models::Registry;
+use crate::sim::{self, Engine, SimCache, SimReport};
+use crate::util;
+
+use super::experiments::SweepStats;
+use super::pool;
+
+/// One admitted request: which deployed model to run, under which arch
+/// preset and precision/sparsity configuration, on which activation
+/// seed. Replay traces are lists of these (see [`ServeSpec::from_json`]).
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    /// Model id — must be registered in the spec's `models` list.
+    pub model: String,
+    /// Arch preset name (`ArchConfig::by_name` spellings).
+    pub arch: String,
+    /// Precision/sparsity configuration the request runs under.
+    pub sparsity: SparsityConfig,
+    /// Activation seed. Perf-mode simulation synthesizes the checkpoint
+    /// and the activations from this seed (DESIGN.md §3), so it is part
+    /// of the batch key.
+    pub seed: u64,
+}
+
+/// A replayable serving workload: the deployed model set plus the
+/// admission-ordered traffic trace.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub models: Vec<String>,
+    pub traffic: Vec<ServeRequest>,
+}
+
+/// Everything that determines one request's simulation result — the
+/// batcher's grouping key. Two requests with equal keys produce equal
+/// per-layer `CompileKey`s, so a batch shares one compiled `Program`
+/// and one `SimCache` entry per layer.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct BatchKey {
+    model: String,
+    arch: String,
+    /// `SparsityConfig::value_sparsity` as raw bits (f64 is not `Hash`).
+    value_bits: u64,
+    fta: bool,
+    seed: u64,
+}
+
+impl BatchKey {
+    fn of(r: &ServeRequest) -> BatchKey {
+        BatchKey {
+            model: r.model.clone(),
+            arch: r.arch.clone(),
+            value_bits: r.sparsity.value_sparsity.to_bits(),
+            fta: r.sparsity.fta,
+            seed: r.seed,
+        }
+    }
+}
+
+/// One planned batch: the shared key plus the admission indices of its
+/// member requests (ascending — the batcher walks in admission order).
+#[derive(Debug)]
+struct Batch {
+    key: BatchKey,
+    members: Vec<usize>,
+}
+
+/// Greedy dynamic batcher: walk the trace in admission order, appending
+/// each request to the open batch of its key, or opening a new batch
+/// when there is none (or the open one is full). Pure function of the
+/// trace — replaying a trace always plans the same batches.
+fn plan_batches(traffic: &[ServeRequest], max_batch: usize) -> Vec<Batch> {
+    let max = max_batch.max(1);
+    let mut open: HashMap<BatchKey, usize> = HashMap::new();
+    let mut batches: Vec<Batch> = Vec::new();
+    for (i, r) in traffic.iter().enumerate() {
+        let key = BatchKey::of(r);
+        match open.get(&key) {
+            Some(&b) if batches[b].members.len() < max => batches[b].members.push(i),
+            _ => {
+                let b = batches.len();
+                batches.push(Batch { key: key.clone(), members: vec![i] });
+                open.insert(key, b);
+            }
+        }
+    }
+    batches
+}
+
+/// Long-lived serving context shared by every batch admitted through
+/// it: the model registry plus the cross-tenant compile and simulation
+/// caches. Neither cache ever changes a result (DESIGN.md §5/§8) — they
+/// only convert repeated work across requests, batches and tenants into
+/// hits.
+pub struct ServeCtx {
+    pub registry: Registry,
+    pub compile: CompileCache,
+    pub sim: SimCache,
+    /// Engine requests simulate under (`DBPIM_ENGINE` override honored,
+    /// default parallel; results are bit-identical either way).
+    pub engine: Engine,
+}
+
+impl ServeCtx {
+    pub fn new(registry: Registry) -> ServeCtx {
+        ServeCtx {
+            registry,
+            compile: CompileCache::new(),
+            sim: SimCache::new(),
+            engine: super::experiments::env_engine().unwrap_or(Engine::Parallel),
+        }
+    }
+}
+
+/// Latency/throughput summary of one replay.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    pub max_batch: usize,
+    /// Simulated on-chip latency per request (ms), admission order.
+    pub latencies_ms: Vec<f64>,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Host wall-clock of the whole replay.
+    pub wall: Duration,
+    /// Host-side serving throughput (requests per wall-clock second).
+    pub req_per_s: f64,
+    /// Cross-tenant cache counters (compile + sim).
+    pub cache: SweepStats,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice; `q` in
+/// (0, 100].
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+impl ServeRequest {
+    fn from_json(i: usize, v: &Value) -> Result<ServeRequest, String> {
+        let model = v
+            .get("model")
+            .and_then(Value::as_str)
+            .ok_or_else(|| format!("request {i}: missing string \"model\""))?
+            .to_string();
+        let arch = match v.get("arch") {
+            None => "db-pim".to_string(),
+            Some(a) => a
+                .as_str()
+                .ok_or_else(|| format!("request {i}: \"arch\" must be a string"))?
+                .to_string(),
+        };
+        if ArchConfig::by_name(&arch).is_none() {
+            return Err(format!("request {i}: unknown arch preset {arch:?}"));
+        }
+        let value_sparsity = match v.get("value_sparsity") {
+            None => 0.6,
+            Some(x) => x
+                .as_f64()
+                .ok_or_else(|| format!("request {i}: \"value_sparsity\" must be a number"))?,
+        };
+        // The pruning pipeline's domain is [0, 1); anything else (1.0,
+        // negatives, NaN) must be an admission error, not a worker
+        // panic deep inside the sweep.
+        if !(0.0..1.0).contains(&value_sparsity) {
+            return Err(format!("request {i}: \"value_sparsity\" must be in [0.0, 1.0)"));
+        }
+        let fta = match v.get("fta") {
+            None => true,
+            Some(x) => {
+                x.as_bool().ok_or_else(|| format!("request {i}: \"fta\" must be a boolean"))?
+            }
+        };
+        // Seeds ride JSON numbers (f64), so only non-negative integers
+        // up to 2^53 replay exactly; fractional, negative or oversized
+        // seeds are rejected rather than silently truncated/wrapped.
+        const MAX_EXACT_SEED: f64 = 9_007_199_254_740_992.0; // 2^53
+        let seed = match v.get("seed").and_then(Value::as_f64) {
+            Some(s) if (0.0..=MAX_EXACT_SEED).contains(&s) && s.fract() == 0.0 => s as u64,
+            _ => {
+                return Err(format!(
+                    "request {i}: \"seed\" must be a non-negative integer (at most 2^53)"
+                ))
+            }
+        };
+        Ok(ServeRequest { model, arch, sparsity: SparsityConfig { value_sparsity, fta }, seed })
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("model", str_(&self.model)),
+            ("arch", str_(&self.arch)),
+            ("value_sparsity", num(self.sparsity.value_sparsity)),
+            ("fta", Value::Bool(self.sparsity.fta)),
+            ("seed", num(self.seed as f64)),
+        ])
+    }
+}
+
+impl ServeSpec {
+    /// Parse a replay trace (`{"models": [...], "traffic": [...]}`).
+    /// Malformed traces are errors with the offending index, never
+    /// panics.
+    pub fn from_json(v: &Value) -> Result<ServeSpec, String> {
+        let models = v
+            .get("models")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "trace: missing \"models\" array".to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                m.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("trace: models[{i}] must be a string"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let traffic = v
+            .get("traffic")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "trace: missing \"traffic\" array".to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| ServeRequest::from_json(i, r))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(ServeSpec { models, traffic })
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("models", arr(self.models.iter().map(|m| str_(m)).collect())),
+            ("traffic", arr(self.traffic.iter().map(ServeRequest::to_json).collect())),
+        ])
+    }
+
+    /// Load a replayable trace from a JSON file.
+    pub fn load(path: &str) -> Result<ServeSpec, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let v = json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+        ServeSpec::from_json(&v)
+    }
+
+    /// Replay the trace with a fresh [`ServeCtx`] over the spec's own
+    /// model list (zoo lookup). See [`ServeSpec::run_with`].
+    pub fn run(&self, max_batch: usize) -> Result<(Vec<SimReport>, ServeStats), String> {
+        let ctx = ServeCtx::new(Registry::from_names(&self.models)?);
+        self.run_with(&ctx, max_batch)
+    }
+
+    /// Replay the trace through an existing serving context: admission →
+    /// batching → pooled execution → completion in admission order.
+    /// `results[i]` is bit-identical to serially simulating request `i`
+    /// alone, for any `max_batch` and worker count.
+    pub fn run_with(
+        &self,
+        ctx: &ServeCtx,
+        max_batch: usize,
+    ) -> Result<(Vec<SimReport>, ServeStats), String> {
+        // Admission control: resolve every request before running any
+        // (also for programmatically built specs that skipped the JSON
+        // validation — an out-of-domain sparsity would otherwise panic
+        // deep inside a pool worker).
+        for (i, r) in self.traffic.iter().enumerate() {
+            if ctx.registry.get(&r.model).is_none() {
+                return Err(format!("request {i}: model {:?} is not deployed", r.model));
+            }
+            if ArchConfig::by_name(&r.arch).is_none() {
+                return Err(format!("request {i}: unknown arch preset {:?}", r.arch));
+            }
+            if !(0.0..1.0).contains(&r.sparsity.value_sparsity) {
+                return Err(format!("request {i}: value sparsity must be in [0.0, 1.0)"));
+            }
+        }
+        let t0 = Instant::now();
+        let batches = plan_batches(&self.traffic, max_batch);
+        let prepared: Vec<_> = batches
+            .iter()
+            .map(|b| {
+                let net = ctx.registry.get(&b.key.model).expect("validated above");
+                let arch = ArchConfig::by_name(&b.key.arch).expect("validated above");
+                let sp = SparsityConfig {
+                    value_sparsity: f64::from_bits(b.key.value_bits),
+                    fta: b.key.fta,
+                };
+                let seeds: Vec<u64> = b.members.iter().map(|&i| self.traffic[i].seed).collect();
+                (net, arch, sp, seeds)
+            })
+            .collect();
+        let jobs: Vec<_> = prepared
+            .iter()
+            .map(|(net, arch, sp, seeds)| {
+                move || {
+                    sim::simulate_batch(net, *sp, arch, seeds, ctx.engine, &ctx.compile, &ctx.sim)
+                }
+            })
+            .collect();
+        let per_batch = pool::run_jobs(jobs);
+
+        // Completion: scatter batch results back to admission slots.
+        let mut slots: Vec<Option<SimReport>> = (0..self.traffic.len()).map(|_| None).collect();
+        for (b, reports) in batches.iter().zip(per_batch) {
+            for (&i, report) in b.members.iter().zip(reports) {
+                slots[i] = Some(report);
+            }
+        }
+        let results: Vec<SimReport> =
+            slots.into_iter().map(|s| s.expect("request not served")).collect();
+        let wall = t0.elapsed();
+
+        let latencies_ms: Vec<f64> = results.iter().map(SimReport::time_ms).collect();
+        let mut sorted = latencies_ms.clone();
+        sorted.sort_by(f64::total_cmp);
+        let stats = ServeStats {
+            requests: results.len(),
+            batches: batches.len(),
+            max_batch: max_batch.max(1),
+            mean_ms: util::mean(&latencies_ms),
+            p50_ms: percentile(&sorted, 50.0),
+            p99_ms: percentile(&sorted, 99.0),
+            latencies_ms,
+            req_per_s: results.len() as f64 / wall.as_secs_f64().max(1e-9),
+            wall,
+            cache: SweepStats { compile: ctx.compile.stats(), sim: ctx.sim.stats() },
+        };
+        Ok((results, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fixtures::{small_net, tiny_net};
+
+    fn req(model: &str, arch: &str, v: f64, seed: u64) -> ServeRequest {
+        ServeRequest {
+            model: model.into(),
+            arch: arch.into(),
+            sparsity: SparsityConfig::hybrid(v),
+            seed,
+        }
+    }
+
+    #[test]
+    fn batcher_groups_compatible_requests_in_admission_order() {
+        let traffic = vec![
+            req("a", "db-pim", 0.5, 1), // batch 0
+            req("b", "db-pim", 0.5, 1), // batch 1 (different model)
+            req("a", "db-pim", 0.5, 1), // batch 0
+            req("a", "db-pim", 0.5, 2), // batch 2 (different seed)
+            req("a", "db-pim", 0.5, 1), // batch 0 — now full (max 3)
+            req("a", "db-pim", 0.5, 1), // batch 3 (batch 0 full)
+            req("a", "baseline", 0.5, 1), // batch 4 (different arch)
+        ];
+        let batches = plan_batches(&traffic, 3);
+        let members: Vec<Vec<usize>> = batches.iter().map(|b| b.members.clone()).collect();
+        assert_eq!(members, vec![vec![0, 2, 4], vec![1], vec![3], vec![5], vec![6]]);
+    }
+
+    #[test]
+    fn batcher_max_batch_one_serializes() {
+        let traffic = vec![req("a", "db-pim", 0.5, 1); 4];
+        let batches = plan_batches(&traffic, 1);
+        assert_eq!(batches.len(), 4);
+        // max_batch 0 is clamped to 1
+        assert_eq!(plan_batches(&traffic, 0).len(), 4);
+    }
+
+    #[test]
+    fn trace_json_roundtrip_and_defaults() {
+        let text = r#"{
+            "models": ["resnet18"],
+            "traffic": [
+                {"model": "resnet18", "seed": 7},
+                {"model": "resnet18", "arch": "baseline", "value_sparsity": 0.0,
+                 "fta": false, "seed": 8}
+            ]
+        }"#;
+        let spec = ServeSpec::from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(spec.models, vec!["resnet18"]);
+        assert_eq!(spec.traffic.len(), 2);
+        // defaults: db-pim hybrid 0.6 with FTA
+        assert_eq!(spec.traffic[0].arch, "db-pim");
+        assert_eq!(spec.traffic[0].sparsity, SparsityConfig::hybrid(0.6));
+        assert_eq!(spec.traffic[1].sparsity, SparsityConfig { value_sparsity: 0.0, fta: false });
+        // roundtrip through to_json
+        let again = ServeSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(again.traffic[1].seed, 8);
+        assert_eq!(again.traffic[1].arch, "baseline");
+    }
+
+    #[test]
+    fn trace_json_rejects_malformed_requests() {
+        for bad in [
+            r#"{"traffic": []}"#,
+            r#"{"models": ["resnet18"]}"#,
+            r#"{"models": [1], "traffic": []}"#,
+            r#"{"models": [], "traffic": [{"seed": 1}]}"#,
+            r#"{"models": [], "traffic": [{"model": "resnet18"}]}"#,
+            r#"{"models": [], "traffic": [{"model": "resnet18", "arch": "warp", "seed": 1}]}"#,
+            r#"{"models": [], "traffic": [{"model": "resnet18", "seed": -1}]}"#,
+            r#"{"models": [], "traffic": [{"model": "resnet18", "seed": 1.5}]}"#,
+            r#"{"models": [], "traffic": [{"model": "resnet18", "value_sparsity": 1.0, "seed": 1}]}"#,
+        ] {
+            assert!(
+                ServeSpec::from_json(&json::parse(bad).unwrap()).is_err(),
+                "accepted malformed trace {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn replay_returns_admission_order_and_shares_caches() {
+        let spec = ServeSpec {
+            models: vec!["small".into(), "tiny".into()],
+            traffic: vec![
+                req("small", "db-pim", 0.5, 1),
+                req("tiny", "db-pim", 0.5, 1),
+                req("small", "db-pim", 0.5, 1),
+                req("tiny", "baseline", 0.0, 2),
+                req("small", "db-pim", 0.5, 1),
+            ],
+        };
+        let ctx = ServeCtx::new(Registry::from_networks(vec![small_net(), tiny_net()]));
+        let (results, stats) = spec.run_with(&ctx, 2).unwrap();
+        assert_eq!(results.len(), 5);
+        // admission order: the result rows name their request's model
+        let nets: Vec<&str> = results.iter().map(|r| r.network.as_str()).collect();
+        assert_eq!(nets, vec!["small", "tiny", "small", "tiny", "small"]);
+        // identical requests produce bit-identical reports
+        assert_eq!(results[0].totals, results[2].totals);
+        assert_eq!(results[0].totals, results[4].totals);
+        assert_eq!(results[0].total_cycles(), results[2].total_cycles());
+        // the three identical "small" requests share one SimCache entry
+        // per layer: 5 requests × 2 PIM layers = 10 lookups over 6
+        // unique keys (deterministic for any schedule)
+        assert_eq!(stats.cache.sim.lookups(), 10);
+        assert_eq!(stats.cache.sim.misses, 6);
+        assert_eq!(stats.cache.sim.hits, 4);
+        assert_eq!(stats.requests, 5);
+        // batches: small×3 fills one batch of 2 + one of 1
+        assert_eq!(stats.batches, 4);
+        assert!(stats.p50_ms > 0.0 && stats.p99_ms >= stats.p50_ms);
+        assert_eq!(stats.latencies_ms.len(), 5);
+    }
+
+    #[test]
+    fn replay_rejects_undeployed_models() {
+        let spec = ServeSpec {
+            models: vec!["small".into()],
+            traffic: vec![req("tiny", "db-pim", 0.5, 1)],
+        };
+        let ctx = ServeCtx::new(Registry::from_networks(vec![small_net()]));
+        let err = spec.run_with(&ctx, 4).unwrap_err();
+        assert!(err.contains("not deployed"), "{err}");
+        // and unknown zoo names fail at registry resolution in run()
+        let bad = ServeSpec { models: vec!["warpnet".into()], traffic: vec![] };
+        assert!(bad.run(4).is_err());
+    }
+
+    #[test]
+    fn example_trace_parses_and_plans() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/serve_trace.json");
+        let spec = ServeSpec::load(path).expect("examples/serve_trace.json must stay valid");
+        assert!(!spec.traffic.is_empty());
+        // every trace model resolves in the zoo registry
+        let reg = Registry::from_names(&spec.models).unwrap();
+        for r in &spec.traffic {
+            assert!(reg.get(&r.model).is_some(), "trace names undeployed model {}", r.model);
+        }
+        // repeats exist by construction, so batching actually groups
+        let batches = plan_batches(&spec.traffic, 8);
+        assert!(batches.len() < spec.traffic.len(), "example trace should batch");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&xs[..1], 50.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+}

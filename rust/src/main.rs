@@ -10,6 +10,10 @@
 //! dbpim fig3|fig11|fig12|fig13|table2|table3
 //!                          regenerate a paper figure/table (prints the
 //!                          rows + writes artifacts/<exp>.json)
+//! dbpim serve --replay <trace.json> [--batch N]
+//!                          replay a multi-tenant traffic trace through
+//!                          the batched serving frontend (admission-order
+//!                          results, p50/p99 latency, req/s)
 //! dbpim info               architecture summary + effective pool size
 //! ```
 //!
@@ -21,6 +25,7 @@ use dbpim::arch::ArchConfig;
 use dbpim::benchlib::{f2, pct, print_table};
 use dbpim::compiler::SparsityConfig;
 use dbpim::coordinator::experiments as exp;
+use dbpim::coordinator::serve;
 use dbpim::json;
 use dbpim::models;
 use dbpim::sim;
@@ -53,10 +58,11 @@ fn main() {
         "table3" => cmd_table3(),
         "energy" => cmd_energy(&args[1..]),
         "trace" => cmd_trace(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dbpim <verify|simulate|energy|trace|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N]"
+                "usage: dbpim <verify|simulate|energy|trace|serve|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N]"
             );
             2
         }
@@ -141,17 +147,17 @@ fn cmd_simulate(args: &[String]) -> i32 {
         );
         return 2;
     };
-    let arch = match flag_value(args, "--arch").as_deref() {
-        None | Some("db-pim") => ArchConfig::db_pim(),
-        Some("baseline") => ArchConfig::dense_baseline(),
-        Some("bit-only") => ArchConfig::bit_only(),
-        Some("value-only") => ArchConfig::value_only(),
-        Some("weights-only") => ArchConfig::weights_only(),
-        Some("dac24") => ArchConfig::dac24(),
-        Some(other) => {
-            eprintln!("unknown arch {other}");
-            return 2;
-        }
+    let arch = match flag_value(args, "--arch") {
+        None => ArchConfig::db_pim(),
+        Some(name) => match ArchConfig::by_name(&name) {
+            Some(a) => a,
+            None => {
+                eprintln!(
+                    "unknown arch {name} (try: db-pim baseline bit-only value-only weights-only dac24)"
+                );
+                return 2;
+            }
+        },
     };
     let v = flag_value(args, "--value-sparsity").and_then(|s| s.parse().ok()).unwrap_or(0.6);
     let sp = if args.iter().any(|a| a == "--no-fta") {
@@ -206,6 +212,7 @@ fn cmd_fig3() -> i32 {
             .map(|r| vec![r.network.clone(), pct(r.group1), pct(r.group8), pct(r.group16)])
             .collect::<Vec<_>>(),
     );
+    write_report("fig3", &exp::fig3_json(&bits, &cols));
     0
 }
 
@@ -295,6 +302,7 @@ fn cmd_table2() -> i32 {
     );
     println!("compile cache: {}", stats.compile.summary());
     println!("sim cache: {}", stats.sim.summary());
+    write_report("table2", &exp::table2_json(&t));
     0
 }
 
@@ -368,6 +376,70 @@ fn cmd_trace(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// Replay a traffic trace through the batched multi-tenant serving
+/// frontend: admission-ordered results, p50/p99 simulated latency and
+/// host-side throughput (DESIGN.md §9).
+fn cmd_serve(args: &[String]) -> i32 {
+    let Some(path) = flag_value(args, "--replay") else {
+        eprintln!("usage: dbpim serve --replay <trace.json> [--batch N] [--workers N]");
+        return 2;
+    };
+    let batch = match flag_value(args, "--batch") {
+        None => 8,
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("--batch expects a positive integer");
+                return 2;
+            }
+        },
+    };
+    let spec = match serve::ServeSpec::load(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error loading trace: {e}");
+            return 1;
+        }
+    };
+    let (results, stats) = match spec.run(batch) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve error: {e}");
+            return 1;
+        }
+    };
+    // per-model latency aggregation (admission order preserved per row)
+    let mut agg: Vec<(String, usize, f64)> = Vec::new();
+    for (r, lat) in results.iter().zip(&stats.latencies_ms) {
+        match agg.iter_mut().find(|a| a.0 == r.network) {
+            Some(a) => {
+                a.1 += 1;
+                a.2 += lat;
+            }
+            None => agg.push((r.network.clone(), 1, *lat)),
+        }
+    }
+    print_table(
+        "Serve replay — per-model simulated latency",
+        &["model", "requests", "mean latency (ms)"],
+        &agg.iter()
+            .map(|(n, c, t)| vec![n.clone(), c.to_string(), f2(t / *c as f64)])
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "{} requests in {} batches (max batch {}): p50 {} ms / p99 {} ms simulated latency",
+        stats.requests,
+        stats.batches,
+        stats.max_batch,
+        f2(stats.p50_ms),
+        f2(stats.p99_ms)
+    );
+    println!("host: {:?} wall, {:.1} req/s", stats.wall, stats.req_per_s);
+    println!("compile cache: {}", stats.cache.compile.summary());
+    println!("sim cache: {}", stats.cache.sim.summary());
+    0
 }
 
 fn cmd_info() -> i32 {

@@ -13,7 +13,7 @@ pub mod mininet;
 mod zoo;
 
 pub use mininet::{default_artifacts_dir, load_mininet, MiniNet, MiniNetLayer};
-pub use zoo::{alexnet, by_name, efficientnet_b0, mobilenet_v2, resnet18, vgg19, zoo};
+pub use zoo::{alexnet, by_name, efficientnet_b0, mobilenet_v2, resnet18, vgg19, zoo, Registry};
 
 use crate::util::Rng;
 

@@ -3,6 +3,9 @@
 //! weights — is what the hardware experiments need; weights are
 //! synthesized per layer with trained-like statistics (DESIGN.md §3).
 
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
 use super::{Layer, LayerKind, Network};
 
 fn conv(name: &str, in_ch: usize, out_ch: usize, k: usize, s: usize, p: usize, hw: usize) -> Layer {
@@ -258,6 +261,55 @@ pub fn by_name(name: &str) -> Option<Network> {
     }
 }
 
+/// Multi-tenant model registry: each deployed model's descriptor is
+/// constructed once and shared (`Arc`) by every request that names it —
+/// the serving frontend's lookup table (`coordinator::serve`). Keys are
+/// the names models were registered under, so a replay trace and its
+/// `models` list must agree on spelling.
+#[derive(Debug, Default)]
+pub struct Registry {
+    models: BTreeMap<String, Arc<Network>>,
+}
+
+impl Registry {
+    /// Resolve zoo names through [`by_name`]. An unknown name is an
+    /// admission error, reported with the offending spelling.
+    pub fn from_names<S: AsRef<str>>(names: &[S]) -> Result<Registry, String> {
+        let mut models = BTreeMap::new();
+        for name in names {
+            let name = name.as_ref();
+            let net = by_name(name)
+                .ok_or_else(|| format!("unknown model {name:?} (not in the zoo)"))?;
+            models.insert(name.to_string(), Arc::new(net));
+        }
+        Ok(Registry { models })
+    }
+
+    /// Register explicit networks under their own names (tests serve
+    /// the `models::fixtures` networks this way).
+    pub fn from_networks(nets: Vec<Network>) -> Registry {
+        Registry { models: nets.into_iter().map(|n| (n.name.clone(), Arc::new(n))).collect() }
+    }
+
+    /// The shared descriptor registered under `name`.
+    pub fn get(&self, name: &str) -> Option<Arc<Network>> {
+        self.models.get(name).map(Arc::clone)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +369,26 @@ mod tests {
             assert_eq!(by_name(&n.name).unwrap().name, n.name);
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn registry_resolves_and_shares_descriptors() {
+        let reg = Registry::from_names(&["resnet18", "mobilenet_v2"]).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["mobilenet_v2", "resnet18"]);
+        let a = reg.get("resnet18").unwrap();
+        let b = reg.get("resnet18").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "lookups must share one descriptor");
+        assert!(reg.get("alexnet").is_none(), "unregistered models are not served");
+        assert!(Registry::from_names(&["resnet18", "nope"]).is_err());
+    }
+
+    #[test]
+    fn registry_from_networks_uses_network_names() {
+        let reg = Registry::from_networks(vec![alexnet(), vgg19()]);
+        assert!(!reg.is_empty());
+        assert_eq!(reg.get("alexnet").unwrap().name, "alexnet");
+        assert!(reg.get("resnet18").is_none());
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!   steady-state simulation is allocation-free.
 //! * [`simcache`] — sweep-wide memo of per-layer simulation results,
 //!   keyed like the CompileCache; repeated sweep cells skip simulation
-//!   entirely.
+//!   entirely. [`simulate_batch`] is the serving frontend's entry
+//!   point on top: a whole batch of requests against one
+//!   (network, sparsity, arch) combination, flattened into one
+//!   (request × layer) pool fan-out (DESIGN.md §9).
 //! * [`ipu`] — input zero-column detection (bit-level input sparsity).
 //! * [`dbmu`] — bit-level DBMU reference datapath (validation).
 //! * [`simd`] — SIMD-core cost model and functional post-ops.
@@ -262,39 +265,104 @@ fn simulate_network_impl(
     cache: Option<&CompileCache>,
     sim_cache: Option<&SimCache>,
 ) -> SimReport {
+    simulate_batch_impl(net, sparsity, arch, std::slice::from_ref(&seed), engine, cache, sim_cache)
+        .pop()
+        .expect("one report per request")
+}
+
+/// Batched serving entry point: one request per entry of `seeds`, all
+/// against the same `(net, sparsity, arch)` combination, sharing one
+/// [`Machine`], the per-worker scratch arenas and — through the caches —
+/// one compiled artifact and one memoized layer result per distinct
+/// key across the whole batch. The flattened (request × layer) job list
+/// fans into the worker pool together, so heterogeneous request
+/// runtimes load-balance better than a per-request fan-out would.
+///
+/// Reports come back in `seeds` order, each bit-identical to the
+/// corresponding serial [`simulate_network_with_engine`] call: batch
+/// boundaries, worker count and steal order never leak into results
+/// (DESIGN.md §8/§9; pinned by `prop_serve_batched_bit_identical`).
+pub fn simulate_batch(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seeds: &[u64],
+    engine: Engine,
+    cache: &CompileCache,
+    sim_cache: &SimCache,
+) -> Vec<SimReport> {
+    simulate_batch_impl(net, sparsity, arch, seeds, engine, Some(cache), Some(sim_cache))
+}
+
+/// Indices of the PIM (std/pw-conv + FC) layers of `net`.
+fn pim_indices(net: &Network) -> Vec<usize> {
+    (0..net.layers.len()).filter(|&i| net.layers[i].kind.matmul_dims().is_some()).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simulate_batch_impl(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seeds: &[u64],
+    engine: Engine,
+    cache: Option<&CompileCache>,
+    sim_cache: Option<&SimCache>,
+) -> Vec<SimReport> {
     // The per-layer machines inherit the outer engine: with
     // Engine::Parallel each layer's core segments spawn into the same
     // shared pool its own job runs on (nested scopes execute or steal —
     // no oversubscription), and Engine::Sequential is the fully serial
     // walk. Reports are bit-identical either way.
     let machine = Machine::with_engine(arch.clone(), engine);
-    let pim_idx: Vec<usize> = (0..net.layers.len())
-        .filter(|&i| net.layers[i].kind.matmul_dims().is_some())
-        .collect();
-    let mut pim_stats: Vec<Option<LayerStats>> = {
+    let pim_idx = pim_indices(net);
+    let cells: Vec<(u64, usize)> =
+        seeds.iter().flat_map(|&seed| pim_idx.iter().map(move |&idx| (seed, idx))).collect();
+    let stats: Vec<LayerStats> = {
         let machine = &machine;
-        let stats: Vec<LayerStats> = match engine {
+        match engine {
             Engine::Parallel => {
-                let jobs: Vec<_> = pim_idx
+                let jobs: Vec<_> = cells
                     .iter()
-                    .map(|&idx| {
-                        move || simulate_pim_layer(net, idx, sparsity, machine, seed, cache, sim_cache)
+                    .map(|&(seed, idx)| {
+                        move || {
+                            simulate_pim_layer(net, idx, sparsity, machine, seed, cache, sim_cache)
+                        }
                     })
                     .collect();
                 crate::coordinator::pool::run_jobs(jobs)
             }
-            Engine::Sequential => pim_idx
+            Engine::Sequential => cells
                 .iter()
-                .map(|&idx| simulate_pim_layer(net, idx, sparsity, machine, seed, cache, sim_cache))
+                .map(|&(seed, idx)| {
+                    simulate_pim_layer(net, idx, sparsity, machine, seed, cache, sim_cache)
+                })
                 .collect(),
-        };
-        let mut slots: Vec<Option<LayerStats>> = (0..net.layers.len()).map(|_| None).collect();
-        for (&idx, s) in pim_idx.iter().zip(stats) {
-            slots[idx] = Some(s);
         }
-        slots
     };
+    let mut stats = stats.into_iter();
+    seeds
+        .iter()
+        .map(|_| {
+            let mut slots: Vec<Option<LayerStats>> = (0..net.layers.len()).map(|_| None).collect();
+            for &idx in &pim_idx {
+                slots[idx] = Some(stats.next().expect("per-layer job missing"));
+            }
+            assemble_report(net, sparsity, &machine, slots)
+        })
+        .collect()
+}
 
+/// Assemble one request's report from its per-PIM-layer stat slots; the
+/// SIMD layers are costed inline (deterministic, data-independent and
+/// cheap), and totals merge in layer order.
+fn assemble_report(
+    net: &Network,
+    sparsity: SparsityConfig,
+    machine: &Machine,
+    mut pim_stats: Vec<Option<LayerStats>>,
+) -> SimReport {
+    let arch = &machine.arch;
     let mut layers = Vec::new();
     let mut totals = EventCounts::default();
     for (idx, layer) in net.layers.iter().enumerate() {
@@ -411,6 +479,36 @@ mod tests {
             assert_eq!(a.core_cycles, b.core_cycles);
             assert_eq!(a.elapsed, b.elapsed);
         }
+    }
+
+    #[test]
+    fn simulate_batch_matches_per_request_reports() {
+        let net = small_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.5);
+        let cc = CompileCache::new();
+        let sc = SimCache::new();
+        let seeds = [3u64, 9, 3, 11];
+        let batch = simulate_batch(&net, sp, &arch, &seeds, Engine::Parallel, &cc, &sc);
+        assert_eq!(batch.len(), seeds.len());
+        for (&seed, got) in seeds.iter().zip(&batch) {
+            let want = simulate_network_with_engine(&net, sp, &arch, seed, Engine::Sequential);
+            assert_eq!(got.totals, want.totals, "seed {seed}");
+            assert_eq!(got.layers.len(), want.layers.len());
+            for (a, b) in got.layers.iter().zip(&want.layers) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.events, b.events);
+                assert_eq!(a.core_cycles, b.core_cycles);
+                assert_eq!(a.elapsed, b.elapsed);
+            }
+        }
+        // 4 requests × 2 PIM layers reach the sim cache; the repeated
+        // seed's layers are hits (hit/miss counts are deterministic for
+        // any schedule — racing duplicates count as dup_computes)
+        let s = sc.stats();
+        assert_eq!(s.lookups(), 8);
+        assert_eq!(s.misses, 6);
+        assert_eq!(s.hits, 2);
     }
 
     #[test]

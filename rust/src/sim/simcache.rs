@@ -25,7 +25,7 @@
 //! simulation of one key is harmless (results are bit-identical, first
 //! insert wins) and keeps long simulations from serializing the shard.
 
-use std::collections::hash_map::DefaultHasher;
+use std::collections::hash_map::{DefaultHasher, Entry};
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -67,6 +67,7 @@ pub struct SimCache {
     shards: Vec<Shard>,
     hits: AtomicU64,
     misses: AtomicU64,
+    dup_computes: AtomicU64,
 }
 
 impl Default for SimCache {
@@ -81,6 +82,7 @@ impl SimCache {
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            dup_computes: AtomicU64::new(0),
         }
     }
 
@@ -92,9 +94,14 @@ impl SimCache {
 
     /// Fetch (or compute via `run`) the simulation result of the PIM
     /// layer at `idx` of `net`. Returns `None` for non-PIM layers
-    /// without invoking `run`. A miss counts one actual simulation;
-    /// `run` executes *outside* the shard lock (a racing duplicate is
-    /// bit-identical; the first insert wins).
+    /// without invoking `run`. `run` executes *outside* the shard lock
+    /// (a racing duplicate is bit-identical; the first insert wins).
+    ///
+    /// Accounting mirrors `CompileCache::get_or_compile`: the lookup
+    /// whose insert lands first is the key's one miss, every other
+    /// lookup is a hit, and a duplicate `run` that lost the insert is
+    /// tallied in [`CacheStats::dup_computes`] — so hit/miss counts are
+    /// identical for any worker count or steal order.
     #[allow(clippy::too_many_arguments)]
     pub fn get_or_run(
         &self,
@@ -114,19 +121,29 @@ impl SimCache {
             return Some((hit.stats.clone(), hit.acc.clone()));
         }
         let (stats, acc) = run();
-        self.misses.fetch_add(1, Ordering::Relaxed);
         let fresh = Arc::new(SimEntry { stats, acc });
         let mut map = shard.lock().unwrap();
-        let entry = map.entry(key).or_insert(fresh);
+        let entry = match map.entry(key) {
+            Entry::Occupied(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.dup_computes.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(e.get())
+            }
+            Entry::Vacant(v) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Arc::clone(v.insert(fresh))
+            }
+        };
         Some((entry.stats.clone(), entry.acc.clone()))
     }
 
-    /// Snapshot of the hit/miss counters (a miss = one actual layer
-    /// simulation).
+    /// Snapshot of the hit/miss counters (a miss = the one simulation
+    /// per key whose insert won; see `get_or_run`).
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
+            dup_computes: self.dup_computes.load(Ordering::Relaxed),
         }
     }
 }
@@ -176,7 +193,7 @@ mod tests {
         assert_eq!(a.0.events, b.0.events);
         assert_eq!(a.0.core_cycles, b.0.core_cycles);
         assert_eq!(a.0.elapsed, b.0.elapsed);
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, dup_computes: 0 });
     }
 
     #[test]
@@ -201,7 +218,7 @@ mod tests {
             .unwrap();
         cache.get_or_run(&net, 2, sp, &arch, 7, false, || layer_result(&net, 2, 7)).unwrap();
         cache.get_or_run(&net, 0, sp, &arch, 7, true, || layer_result(&net, 0, 7)).unwrap();
-        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 6 });
+        assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 6, dup_computes: 0 });
     }
 
     #[test]

@@ -1,0 +1,105 @@
+//! Golden-row snapshot regression suite: every sweep driver's rows,
+//! serialized to committed JSON goldens in `tests/goldens/` and compared
+//! **bit-exactly** on every test run.
+//!
+//! Bit-exactness: both the fresh rows and the committed file go through
+//! the same canonical writer (`json::to_string`, shortest-roundtrip
+//! float formatting), so string equality is f64-bit equality. Any change
+//! to the compiler, simulator, energy table, weight synthesis or driver
+//! axes that moves a single output bit fails here with a pointer to the
+//! first divergence.
+//!
+//! Regeneration (deliberate changes):
+//!
+//! ```bash
+//! DBPIM_UPDATE_GOLDENS=1 cargo test -q --test integration_goldens
+//! ```
+//!
+//! Bootstrap: when a golden file is missing (fresh checkout before the
+//! goldens were ever committed), the test writes it and passes with a
+//! notice — commit the generated `rust/tests/goldens/*.json` (CI uploads
+//! them as the `goldens` artifact). See EXPERIMENTS.md §Goldens.
+
+use dbpim::coordinator::experiments as exp;
+use dbpim::json;
+use std::path::PathBuf;
+
+/// The seed every CLI driver uses (`dbpim fig11` etc.), so goldens match
+/// the `artifacts/<exp>.json` reports bit for bit.
+const SEED: u64 = 42;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens").join(format!("{name}.json"))
+}
+
+/// Compare `fresh` against the committed golden (canonical-string,
+/// bit-exact); regenerate under `DBPIM_UPDATE_GOLDENS=1`; bootstrap the
+/// file when missing.
+fn check_golden(name: &str, fresh: &json::Value) {
+    let path = golden_path(name);
+    let fresh_text = json::to_string(fresh);
+    if std::env::var("DBPIM_UPDATE_GOLDENS").is_ok() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &fresh_text).unwrap();
+        println!("updated golden {}", path.display());
+        return;
+    }
+    let committed = match std::fs::read_to_string(&path) {
+        Ok(text) => text,
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &fresh_text).unwrap();
+            println!("bootstrapped golden {} — commit this file", path.display());
+            return;
+        }
+    };
+    let committed_value = json::parse(&committed)
+        .unwrap_or_else(|e| panic!("golden {name} is unparseable ({e}); regenerate it"));
+    let committed_text = json::to_string(&committed_value);
+    if committed_text != fresh_text {
+        let at = committed_text
+            .bytes()
+            .zip(fresh_text.bytes())
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| committed_text.len().min(fresh_text.len()));
+        let ctx = |s: &str| s[at.saturating_sub(40)..(at + 40).min(s.len())].to_string();
+        panic!(
+            "golden {name} diverged at byte {at}:\n  committed: …{}…\n  fresh:     …{}…\n\
+             If the change is deliberate, regenerate with\n  \
+             DBPIM_UPDATE_GOLDENS=1 cargo test -q --test integration_goldens",
+            ctx(&committed_text),
+            ctx(&fresh_text),
+        );
+    }
+}
+
+#[test]
+fn golden_fig3() {
+    let (bits, cols) = exp::fig3(SEED);
+    check_golden("fig3", &exp::fig3_json(&bits, &cols));
+}
+
+#[test]
+fn golden_fig11() {
+    check_golden("fig11", &exp::fig11_json(&exp::fig11(SEED)));
+}
+
+#[test]
+fn golden_fig12() {
+    check_golden("fig12", &exp::fig12_json(&exp::fig12(SEED)));
+}
+
+#[test]
+fn golden_fig13() {
+    check_golden("fig13", &exp::fig13_json(&exp::fig13(SEED)));
+}
+
+#[test]
+fn golden_table2() {
+    check_golden("table2", &exp::table2_json(&exp::table2(SEED)));
+}
+
+#[test]
+fn golden_table3() {
+    check_golden("table3", &exp::table3_json(&exp::table3(SEED)));
+}

@@ -38,6 +38,7 @@ DEFAULT_CASES = [
     "arena_reuse_row_loop",
     "sim_cached_sweep",
     "dense_eff_prefix",
+    "serve_throughput",
 ]
 
 
