@@ -12,6 +12,14 @@
 //! * `step_major_occ_scan` — the batched step-major occupancy kernel in
 //!   isolation (sim::kernels::scan_tile_occupancy)
 //! * `gemm_accumulate` — the gathered-weight micro-GEMM in isolation
+//! * `kernel_backend_scan` / `kernel_backend_gemm` — the same two
+//!   kernels routed through the layer's *selected* `KernelBackend`
+//!   (sim::backend), each printed against a `ScalarRef` oracle run on
+//!   identical inputs — the selected backend must not lose to the
+//!   oracle
+//! * `requant_relu_arena` — requant/ReLU through the backend trait
+//!   into an arena-recycled i8 buffer (asserts zero arena misses —
+//!   the ISSUE 6 satellite-1 acceptance gate)
 //! * `arena_reuse_row_loop` — the IPU row loop in steady state on an
 //!   arena-warm thread (sequential engine; asserts zero arena misses —
 //!   the allocation-free hot path)
@@ -158,6 +166,95 @@ fn main() {
             }
             out[0]
         }));
+
+        // --- the same kernels through the layer's selected backend,
+        // raced against the ScalarRef oracle on identical inputs ---
+        use dbpim::sim::backend::{self, KernelBackend};
+        use dbpim::sim::kernels::TileScan;
+        let sel = backend::backend_for(layer.program.kernel);
+        println!("  selected kernel backend: {}", layer.program.kernel.name());
+        let mut scan_buf = TileScan::empty();
+        let mut lanes = Vec::new();
+        let s_sel_scan = bench("kernel_backend_scan", 2, iters(300, 20), || {
+            let mut acc = 0u64;
+            for (id, base_step, step_eff) in &scans {
+                sel.scan_tile_occupancy_into(
+                    &mut scan_buf,
+                    &table,
+                    *id,
+                    *base_step,
+                    step_eff,
+                    &mut lanes,
+                );
+                acc = acc.wrapping_add(scan_buf.eff_total);
+            }
+            acc
+        });
+        let s_ref_scan = bench("kernel_backend_scan_scalar_ref", 1, iters(50, 5), || {
+            let mut acc = 0u64;
+            for (id, base_step, step_eff) in &scans {
+                backend::SCALAR_REF.scan_tile_occupancy_into(
+                    &mut scan_buf,
+                    &table,
+                    *id,
+                    *base_step,
+                    step_eff,
+                    &mut lanes,
+                );
+                acc = acc.wrapping_add(scan_buf.eff_total);
+            }
+            acc
+        });
+        let s_sel_gemm = bench("kernel_backend_gemm", 1, iters(50, 5), || {
+            out.fill(0);
+            for mi in 0..m {
+                sel.gemm_accumulate(
+                    &mut out[mi * nf..(mi + 1) * nf],
+                    table_f.gathered_row(mi),
+                    &a0.wblock,
+                );
+            }
+            out[0]
+        });
+        let s_ref_gemm = bench("kernel_backend_gemm_scalar_ref", 1, iters(20, 2), || {
+            out.fill(0);
+            for mi in 0..m {
+                backend::SCALAR_REF.gemm_accumulate(
+                    &mut out[mi * nf..(mi + 1) * nf],
+                    table_f.gathered_row(mi),
+                    &a0.wblock,
+                );
+            }
+            out[0]
+        });
+        println!(
+            "  selected backend vs scalar oracle: scan {:.2}x, gemm {:.2}x",
+            s_ref_scan.median.as_secs_f64() / s_sel_scan.median.as_secs_f64().max(1e-12),
+            s_ref_gemm.median.as_secs_f64() / s_sel_gemm.median.as_secs_f64().max(1e-12),
+        );
+        samples.push(s_sel_scan);
+        samples.push(s_sel_gemm);
+
+        // --- requant/ReLU through the arena-recycled i8 path (the
+        // satellite-1 allocation fix: caller-provided, recycled buffer;
+        // steady state must be allocation-free) ---
+        {
+            use dbpim::sim::arena;
+            let mul = quant::requant_mul(0.01);
+            let warm = arena::take_i8(out.len());
+            arena::give_i8(warm);
+            arena::reset_stats();
+            samples.push(bench("requant_relu_arena", 0, iters(200, 10), || {
+                let mut q = arena::take_i8(out.len());
+                sel.requant_relu_into(&mut q, &out, mul, true);
+                let r = q[0];
+                arena::give_i8(q);
+                r
+            }));
+            let s = arena::stats();
+            assert_eq!(s.misses, 0, "requant arena path still allocating: {s:?}");
+            assert!(s.hits > 0, "requant arena path saw no takes");
+        }
     }
 
     // --- steady-state row loop on an arena-warm thread ---

@@ -40,6 +40,14 @@ use super::{compile_network_layer, CompiledLayer, SparsityConfig};
 /// function of the compiled artifact plus inputs this key already pins
 /// (activation synthesis is seeded by `(seed, layer_idx, m, k)`, and
 /// every arch knob the executor reads is a compile knob).
+///
+/// The kernel-backend tag codegen records in `Program::kernel` is NOT
+/// part of the key: every backend is bit-identical to the scalar
+/// oracle (sim::backend), so the tag cannot change any result, and
+/// selection is process-consistent (policy resolved once, auto choice
+/// memoized per shape class) — a cache hit and a fresh compile of the
+/// same key always carry the same tag
+/// (`cached_artifact_equals_fresh_compile` below).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub(crate) struct CompileKey {
     network: String,

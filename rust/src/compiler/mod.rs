@@ -38,7 +38,7 @@ use crate::tensor::{ConvGeom, MatI8};
 use crate::util::round_up;
 
 pub use cache::{CacheStats, CompileCache};
-pub use packing::{Assignment, Tile};
+pub use packing::{Assignment, KernelShape, Tile};
 pub use program::{Barrier, Phase, Program};
 
 /// Execution attributes of a conv layer (geometry + fused post-ops).

@@ -198,6 +198,36 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
     (assignments, tiles)
 }
 
+/// Shape class of one compiled layer's kernel workload, summarized for
+/// routine selection (`sim::backend::select_kernel`): the M dimension
+/// every scan and GEMM runs over, the widest filter block any
+/// assignment feeds the micro-GEMM, and the tallest tile row count any
+/// occupancy scan walks. The selector buckets the fields by log2, so
+/// near-identical sweep layers share one memoized routine choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelShape {
+    /// Input rows (M): scan rows per step, GEMM calls per tile chunk.
+    pub m: usize,
+    /// Widest `Assignment::filters` — the GEMM's inner output width.
+    pub max_filters: usize,
+    /// Tallest `Tile::rows()` — the scan's step-window upper bound.
+    pub max_tile_rows: usize,
+}
+
+/// The [`KernelShape`] of a packed layer (0 fields for empty layers —
+/// the selector treats those as the smallest bucket).
+pub fn kernel_shape(
+    prep: &PreparedLayer,
+    assignments: &[Assignment],
+    tiles: &[Tile],
+) -> KernelShape {
+    KernelShape {
+        m: prep.m,
+        max_filters: assignments.iter().map(|a| a.filters.len()).max().unwrap_or(0),
+        max_tile_rows: tiles.iter().map(Tile::rows).max().unwrap_or(0),
+    }
+}
+
 /// Gather the `[kept × filters]` row-major dense weight block of one
 /// assignment from the prepared layer's [K, N] matrix.
 pub fn gather_weight_block(prep: &PreparedLayer, kept: &[u32], filters: &[usize]) -> Vec<i8> {
@@ -441,6 +471,21 @@ mod tests {
                 assert!(a.bit_cell_prefix.windows(2).all(|w| w[0] <= w[1]));
             }
         }
+    }
+
+    #[test]
+    fn kernel_shape_summarizes_packing_geometry() {
+        let arch = ArchConfig::db_pim();
+        let p = prep(512, 64, SparsityConfig::hybrid(0.4), &arch);
+        let (asg, tiles) = pack_layer(&p, &arch);
+        let s = kernel_shape(&p, &asg, &tiles);
+        assert_eq!(s.m, p.m);
+        assert_eq!(s.max_filters, asg.iter().map(|a| a.filters.len()).max().unwrap());
+        assert_eq!(s.max_tile_rows, tiles.iter().map(Tile::rows).max().unwrap());
+        assert!(s.max_tile_rows <= arch.k_slots());
+        // empty packing → zeroed shape (smallest selector bucket)
+        let e = kernel_shape(&p, &[], &[]);
+        assert_eq!((e.max_filters, e.max_tile_rows), (0, 0));
     }
 
     #[test]

@@ -70,6 +70,14 @@ pub struct Program {
     /// Core count the program was partitioned for.
     pub n_cores: usize,
     pub phases: Vec<Phase>,
+    /// Kernel routine the simulator runs this program under, selected
+    /// at codegen time from the layer's [`packing::KernelShape`]
+    /// (`sim::backend::select_kernel`). Sim-side metadata only: every
+    /// backend is bit-identical to the `ScalarRef` oracle, so the tag
+    /// is *excluded* from `CompileKey`/`SimKey` and is not carried by
+    /// the flat/byte encodings (`from_instrs`/`decode` restore the
+    /// default).
+    pub kernel: crate::sim::backend::BackendKind,
 }
 
 impl Program {
@@ -97,7 +105,7 @@ impl Program {
         if pending.iter().any(|v| !v.is_empty()) {
             close_phase(&mut pending, Barrier::Open, &mut phases);
         }
-        Program { n_cores, phases }
+        Program { n_cores, phases, kernel: Default::default() }
     }
 
     /// Flatten back to an instruction stream (segments in ascending
@@ -200,6 +208,11 @@ pub fn codegen(
             Phase { segments, barrier: Barrier::Sync },
             Phase { segments: Vec::new(), barrier: Barrier::End },
         ],
+        kernel: crate::sim::backend::select_kernel(packing::kernel_shape(
+            prep,
+            assignments,
+            tiles,
+        )),
     }
 }
 
@@ -224,7 +237,10 @@ mod tests {
         let c = compiled(SparsityConfig::hybrid(0.5), &arch);
         let flat = c.program.to_instrs();
         assert_eq!(flat, c.instrs, "CompiledLayer.instrs is the flattened program");
-        let back = Program::from_instrs(&flat, arch.n_cores);
+        let mut back = Program::from_instrs(&flat, arch.n_cores);
+        // the kernel tag is sim-side metadata the flat stream does not
+        // carry (Program docs) — normalize before the structural compare
+        back.kernel = c.program.kernel;
         assert_eq!(back, c.program);
     }
 
@@ -233,7 +249,12 @@ mod tests {
         let arch = ArchConfig::db_pim();
         let c = compiled(SparsityConfig::hybrid(0.6), &arch);
         let bytes = c.program.encode();
-        assert_eq!(Program::decode(&bytes, arch.n_cores), Some(c.program.clone()));
+        // decode restores the default kernel tag (bytes don't carry it)
+        let back = Program::decode(&bytes, arch.n_cores).map(|mut p| {
+            p.kernel = c.program.kernel;
+            p
+        });
+        assert_eq!(back, Some(c.program.clone()));
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! executor ([`SweepSpec::run`]) owns the sweep-wide [`CompileCache`]
 //! and its hit/miss counters, fans the cells out over the shared
 //! `coordinator::pool`, and returns rows in axis order — bit-identical
-//! for any worker count, steal order, or `DBPIM_ENGINE` choice.
+//! for any worker count, steal order, `DBPIM_ENGINE` choice, or
+//! `DBPIM_KERNEL` backend selection (the sim::backend oracle rule).
 //!
 //! Parallelism nests: a sweep cell's simulation fans out across layers,
 //! and each layer across core segments, all into the same pool (nested

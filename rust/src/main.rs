@@ -20,6 +20,12 @@
 //! `--workers N` (any subcommand) sizes the shared worker pool; the
 //! `DBPIM_WORKERS` env var is consulted when the flag is absent, and
 //! `default_workers()` otherwise. Results never depend on the count.
+//!
+//! `--kernel auto|scalar|swar|wide` (any subcommand) forces the kernel
+//! backend policy; the `DBPIM_KERNEL` env var is consulted when the
+//! flag is absent, and per-shape auto selection otherwise
+//! (sim::backend). Results never depend on the choice — every backend
+//! is bit-identical to the scalar oracle.
 
 use dbpim::arch::ArchConfig;
 use dbpim::benchlib::{f2, pct, print_table};
@@ -46,6 +52,21 @@ fn main() {
             }
         }
     }
+    // Global flag: force the kernel-backend policy before the first
+    // compile resolves it.
+    if let Some(i) = args.iter().position(|a| a == "--kernel") {
+        match args.get(i + 1).map(String::as_str).and_then(dbpim::sim::backend::KernelPolicy::parse)
+        {
+            Some(p) => {
+                dbpim::sim::backend::configure_kernel(p);
+                args.drain(i..=i + 1);
+            }
+            None => {
+                eprintln!("--kernel expects auto|scalar|swar|wide");
+                std::process::exit(2);
+            }
+        }
+    }
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let code = match cmd {
         "verify" => cmd_verify(),
@@ -62,7 +83,7 @@ fn main() {
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dbpim <verify|simulate|energy|trace|serve|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N]"
+                "usage: dbpim <verify|simulate|energy|trace|serve|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
             );
             2
         }
@@ -467,6 +488,11 @@ fn cmd_info() -> i32 {
     println!(
         "worker pool: {} threads (set with --workers N or DBPIM_WORKERS)",
         dbpim::coordinator::pool::effective_workers()
+    );
+    println!(
+        "kernel policy: {} (set with --kernel or DBPIM_KERNEL; avx2 {})",
+        dbpim::sim::backend::effective_policy().describe(),
+        if dbpim::sim::backend::avx2_available() { "available" } else { "unavailable" }
     );
     0
 }

@@ -68,6 +68,7 @@ struct Arena {
     scans: Vec<TileScan>,
     u64s: Vec<Vec<u64>>,
     i32s: Vec<Vec<i32>>,
+    i8s: Vec<Vec<i8>>,
     stats: ArenaStats,
 }
 
@@ -200,6 +201,19 @@ pub fn give_i32(v: Vec<i32>) {
     ARENA.with(|a| give_vec(&mut a.borrow_mut().i32s, v));
 }
 
+/// Take a zero-filled `Vec<i8>` of `len` (requant/ReLU output buffers).
+pub fn take_i8(len: usize) -> Vec<i8> {
+    ARENA.with(|a| {
+        let a = &mut *a.borrow_mut();
+        take_vec(&mut a.i8s, &mut a.stats, len)
+    })
+}
+
+/// Return an i8 buffer to the current thread's free list.
+pub fn give_i8(v: Vec<i8>) {
+    ARENA.with(|a| give_vec(&mut a.borrow_mut().i8s, v));
+}
+
 /// Record that a recycled object had to *grow* its internal buffers
 /// after a pooled take (tables/scans are popped without a capacity
 /// check — the needed sizes are only known at build time). Counted as
@@ -263,6 +277,10 @@ mod tests {
         v.iter_mut().for_each(|x| *x = -7);
         give_i32(v);
         assert_eq!(take_i32(8), vec![0i32; 8]);
+        let mut v = take_i8(8);
+        v.iter_mut().for_each(|x| *x = -7);
+        give_i8(v);
+        assert_eq!(take_i8(8), vec![0i8; 8]);
         retire_thread();
     }
 

@@ -1,0 +1,733 @@
+//! Pluggable kernel backends with runtime SIMD dispatch and per-shape
+//! routine selection.
+//!
+//! The three hot routines of the simulation path — the step-major IPU
+//! occupancy scan, the dense gathered-weight micro-GEMM, and the
+//! SIMD-core requant/ReLU post-op — live behind the [`KernelBackend`]
+//! trait with three implementations:
+//!
+//! * [`ScalarRef`] — first-principles scalar loops, frozen as the
+//!   bit-exact oracle. Never auto-selected; force it with
+//!   `--kernel scalar` / `DBPIM_KERNEL=scalar` to pin the contract
+//!   end-to-end (CI runs the whole test suite that way).
+//! * [`Swar64`] — the word-packed routines from [`super::kernels`]
+//!   (8 occupancy rows per `u64` with SWAR lane popcounts, 4-wide
+//!   unrolled GEMM): the previous hot path, now a first-class backend
+//!   and the default.
+//! * [`Wide`] — AVX2 via `std::arch` on x86_64, gated by a one-time
+//!   `is_x86_feature_detected!("avx2")` check; on other targets (or
+//!   hosts without AVX2) it degrades to the portable word-chunked
+//!   routines, so selecting it is always safe.
+//!
+//! **Oracle rule.** Every backend is bit-identical to [`ScalarRef`]
+//! for every input: popcounts are exact, and all accumulations are
+//! exact integer adds folded in the same per-element order, so a
+//! backend can only change wall-clock — never a result bit. This is
+//! property-tested across random shapes, engines and worker counts
+//! (`tests/prop_invariants.rs::prop_kernel_backends_bit_identical`),
+//! which is what keeps the DESIGN.md §8 determinism contract intact.
+//!
+//! **Selection.** `compiler::program::codegen` calls [`select_kernel`]
+//! with the layer's [`KernelShape`] (M × widest filter block × tallest
+//! tile) and records the answer in `Program::kernel`. The policy
+//! resolves once per process (`--kernel` CLI flag > `DBPIM_KERNEL` env
+//! > auto), and auto selection is memoized per log2 shape class —
+//! optionally seeded by a one-shot calibration micro-run when
+//! `DBPIM_KERNEL_CALIBRATE=1` — so every compile of the same geometry
+//! (fresh or `CompileCache`d) picks the same routine. By the oracle
+//! rule the choice is *excluded* from `CompileKey`/`SimKey`: it cannot
+//! change results, so cached artifacts stay valid under any policy.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::compiler::KernelShape;
+use crate::quant;
+
+use super::kernels::{self, TileScan};
+use super::occupancy::OccupancyTable;
+
+/// Which kernel routine a compiled `Program` runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// First-principles scalar oracle (never auto-selected).
+    Scalar,
+    /// Word-packed SWAR scan + 4-wide unrolled GEMM (the pre-backend
+    /// hot path; `Default` so decoded/flattened programs behave as
+    /// before this field existed).
+    #[default]
+    Swar,
+    /// AVX2 with runtime detection; portable chunked fallback.
+    Wide,
+}
+
+impl BackendKind {
+    /// Every compiled-in kind, oracle first.
+    pub const ALL: [BackendKind; 3] = [BackendKind::Scalar, BackendKind::Swar, BackendKind::Wide];
+
+    /// CLI/env spelling of this kind.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Scalar => "scalar",
+            BackendKind::Swar => "swar",
+            BackendKind::Wide => "wide",
+        }
+    }
+
+    /// Parse the CLI/env spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(BackendKind::Scalar),
+            "swar" => Some(BackendKind::Swar),
+            "wide" => Some(BackendKind::Wide),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide routine-selection policy
+/// (`DBPIM_KERNEL=auto|scalar|swar|wide`, `--kernel` flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPolicy {
+    /// Pick per shape class: static heuristic, or a one-shot
+    /// calibration micro-run when `DBPIM_KERNEL_CALIBRATE=1`.
+    Auto,
+    /// Always use the given backend — full selector bypass.
+    Force(BackendKind),
+}
+
+impl KernelPolicy {
+    /// Parse the CLI/env spelling (`auto` or a backend name).
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "auto" {
+            return Some(KernelPolicy::Auto);
+        }
+        BackendKind::parse(s).map(KernelPolicy::Force)
+    }
+
+    /// CLI/env spelling of this policy (for `dbpim info`).
+    pub fn describe(self) -> &'static str {
+        match self {
+            KernelPolicy::Auto => "auto",
+            KernelPolicy::Force(k) => k.name(),
+        }
+    }
+}
+
+static CONFIGURED: OnceLock<KernelPolicy> = OnceLock::new();
+static RESOLVED: OnceLock<KernelPolicy> = OnceLock::new();
+
+/// Set the policy from the CLI (`--kernel`). Mirrors
+/// `pool::configure_workers`: must run before the first compile
+/// resolves the policy; later calls are ignored.
+pub fn configure_kernel(p: KernelPolicy) {
+    let _ = CONFIGURED.set(p);
+}
+
+/// The process-wide policy: `--kernel` override > `DBPIM_KERNEL` env >
+/// auto. Resolved once and constant for the process lifetime, so
+/// repeated compiles of one layer always select the same routine
+/// (`cached_artifact_equals_fresh_compile` depends on this).
+pub fn effective_policy() -> KernelPolicy {
+    *RESOLVED.get_or_init(|| {
+        if let Some(&p) = CONFIGURED.get() {
+            return p;
+        }
+        match std::env::var("DBPIM_KERNEL") {
+            Ok(v) => KernelPolicy::parse(v.trim()).unwrap_or_else(|| {
+                eprintln!(
+                    "warning: unknown DBPIM_KERNEL={v:?} (want auto|scalar|swar|wide); using auto"
+                );
+                KernelPolicy::Auto
+            }),
+            Err(_) => KernelPolicy::Auto,
+        }
+    })
+}
+
+/// One-time runtime AVX2 detection (x86_64 only).
+#[cfg(target_arch = "x86_64")]
+pub fn avx2_available() -> bool {
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// Non-x86_64 targets have no AVX2; [`Wide`] uses its portable path.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx2_available() -> bool {
+    false
+}
+
+/// The three hot routines of the simulation path. Contract: every
+/// implementation is bit-identical to [`ScalarRef`] on every input
+/// (the oracle rule, module docs) — implementations may only differ in
+/// wall-clock.
+pub trait KernelBackend: Sync + std::fmt::Debug {
+    /// The tag recorded in `Program::kernel` for this backend.
+    fn kind(&self) -> BackendKind;
+
+    /// Step-major occupancy scan of one tile; same contract as
+    /// [`kernels::scan_tile_occupancy_into`] (every output field of
+    /// `scan` is rewritten, `lane_scratch` is cleared/resized inside —
+    /// backends that don't need lane accumulators leave it empty).
+    fn scan_tile_occupancy_into(
+        &self,
+        scan: &mut TileScan,
+        table: &OccupancyTable,
+        tile: u32,
+        base_step: usize,
+        step_eff: &[u64],
+        lane_scratch: &mut Vec<u64>,
+    );
+
+    /// Dense `i32 += i8×i8` row accumulate; same contract as
+    /// [`kernels::gemm_accumulate`].
+    fn gemm_accumulate(&self, out: &mut [i32], gathered: &[u8], wblock: &[i8]);
+
+    /// Requantize + optional ReLU `acc` into the caller-provided `out`
+    /// (same length; arena-recycled in the hot path).
+    fn requant_relu_into(&self, out: &mut [i8], acc: &[i32], mul: i32, relu: bool);
+}
+
+/// Requantize one accumulator (the shared scalar core of every
+/// backend's post-op; exactness lives in [`quant::requantize`]).
+#[inline]
+fn requant1(a: i32, mul: i32, relu: bool) -> i8 {
+    let q = quant::requantize(a, mul);
+    if relu && q < 0 {
+        0
+    } else {
+        q
+    }
+}
+
+/// Word-chunked requant/ReLU (4 accumulators per iteration) shared by
+/// the fast backends. The requantize core is a widening i64 multiply +
+/// 64-bit arithmetic shift; AVX2 has no 64-bit arithmetic right shift
+/// (that is AVX-512) and the op is memory-bound, so chunked scalar is
+/// the fast form on every target — bit-identical to the oracle by
+/// construction (same [`requant1`] per element).
+fn requant_relu_chunked(out: &mut [i8], acc: &[i32], mul: i32, relu: bool) {
+    assert_eq!(out.len(), acc.len());
+    let main = acc.len() - acc.len() % 4;
+    let (a4, a_tail) = acc.split_at(main);
+    let (o4, o_tail) = out.split_at_mut(main);
+    for (o, a) in o4.chunks_exact_mut(4).zip(a4.chunks_exact(4)) {
+        o[0] = requant1(a[0], mul, relu);
+        o[1] = requant1(a[1], mul, relu);
+        o[2] = requant1(a[2], mul, relu);
+        o[3] = requant1(a[3], mul, relu);
+    }
+    for (o, &a) in o_tail.iter_mut().zip(a_tail) {
+        *o = requant1(a, mul, relu);
+    }
+}
+
+/// The bit-exact oracle: per-(step, row) byte walk, plain double-loop
+/// GEMM (zero activations included — adding 0 is exact), per-element
+/// requantize. Deliberately free of batching so the fast backends are
+/// tested against independent first-principles code, not against a
+/// refactoring of themselves.
+#[derive(Debug)]
+pub struct ScalarRef;
+
+impl KernelBackend for ScalarRef {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Scalar
+    }
+
+    fn scan_tile_occupancy_into(
+        &self,
+        scan: &mut TileScan,
+        table: &OccupancyTable,
+        tile: u32,
+        base_step: usize,
+        step_eff: &[u64],
+        _lane_scratch: &mut Vec<u64>,
+    ) {
+        let m_total = table.m_rows();
+        debug_assert!(base_step + step_eff.len() <= table.steps());
+        scan.tile = tile;
+        scan.row_cycles.clear();
+        scan.row_cycles.resize(m_total, 0);
+        let mut eff_total = 0u64;
+        for (s, &eff) in step_eff.iter().enumerate() {
+            let occ_row = table.step_row(base_step + s);
+            for (rc, &b) in scan.row_cycles.iter_mut().zip(occ_row) {
+                let beff = u64::from(b.count_ones());
+                *rc += beff;
+                eff_total += eff * beff;
+            }
+        }
+        scan.eff_total = eff_total;
+    }
+
+    fn gemm_accumulate(&self, out: &mut [i32], gathered: &[u8], wblock: &[i8]) {
+        let nf = out.len();
+        debug_assert_eq!(wblock.len(), gathered.len() * nf);
+        for (ri, &g) in gathered.iter().enumerate() {
+            let xv = g as i8 as i32;
+            for (fi, o) in out.iter_mut().enumerate() {
+                *o += xv * wblock[ri * nf + fi] as i32;
+            }
+        }
+    }
+
+    fn requant_relu_into(&self, out: &mut [i8], acc: &[i32], mul: i32, relu: bool) {
+        super::simd::requant_relu_into(out, acc, mul, relu);
+    }
+}
+
+/// The word-packed SWAR backend: delegates to the [`super::kernels`]
+/// routines (the pre-backend hot path) plus the chunked requant.
+#[derive(Debug)]
+pub struct Swar64;
+
+impl KernelBackend for Swar64 {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Swar
+    }
+
+    fn scan_tile_occupancy_into(
+        &self,
+        scan: &mut TileScan,
+        table: &OccupancyTable,
+        tile: u32,
+        base_step: usize,
+        step_eff: &[u64],
+        lane_scratch: &mut Vec<u64>,
+    ) {
+        kernels::scan_tile_occupancy_into(scan, table, tile, base_step, step_eff, lane_scratch);
+    }
+
+    fn gemm_accumulate(&self, out: &mut [i32], gathered: &[u8], wblock: &[i8]) {
+        kernels::gemm_accumulate(out, gathered, wblock);
+    }
+
+    fn requant_relu_into(&self, out: &mut [i8], acc: &[i32], mul: i32, relu: bool) {
+        requant_relu_chunked(out, acc, mul, relu);
+    }
+}
+
+/// The AVX2 backend: 32 occupancy bytes per vector op in the scan
+/// (nibble-LUT `pshufb` popcount), 8 filters per vector op in the GEMM
+/// (`_mm256_mullo_epi32` — exact, |xv·w| ≤ 127·128 fits i32 with room
+/// to spare). Dispatches at runtime ([`avx2_available`]); without AVX2
+/// it runs the portable word-chunked routines, so `Wide` is valid on
+/// every host.
+#[derive(Debug)]
+pub struct Wide;
+
+impl KernelBackend for Wide {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Wide
+    }
+
+    fn scan_tile_occupancy_into(
+        &self,
+        scan: &mut TileScan,
+        table: &OccupancyTable,
+        tile: u32,
+        base_step: usize,
+        step_eff: &[u64],
+        lane_scratch: &mut Vec<u64>,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if avx2_available() {
+            // SAFETY: AVX2 availability verified at runtime above.
+            unsafe {
+                avx2::scan_tile_occupancy_into(
+                    scan,
+                    table,
+                    tile,
+                    base_step,
+                    step_eff,
+                    lane_scratch,
+                )
+            };
+            return;
+        }
+        kernels::scan_tile_occupancy_into(scan, table, tile, base_step, step_eff, lane_scratch);
+    }
+
+    fn gemm_accumulate(&self, out: &mut [i32], gathered: &[u8], wblock: &[i8]) {
+        #[cfg(target_arch = "x86_64")]
+        if avx2_available() {
+            // SAFETY: AVX2 availability verified at runtime above.
+            unsafe { avx2::gemm_accumulate(out, gathered, wblock) };
+            return;
+        }
+        kernels::gemm_accumulate(out, gathered, wblock);
+    }
+
+    fn requant_relu_into(&self, out: &mut [i8], acc: &[i32], mul: i32, relu: bool) {
+        requant_relu_chunked(out, acc, mul, relu);
+    }
+}
+
+/// The compiled-in backend singletons (trait objects are `Sync`
+/// zero-sized statics — dispatch is one vtable indirection per tile or
+/// chunk, amortized over the whole batched routine).
+pub static SCALAR_REF: ScalarRef = ScalarRef;
+pub static SWAR64: Swar64 = Swar64;
+pub static WIDE: Wide = Wide;
+
+/// The backend implementing `kind` (total — every tag resolves).
+pub fn backend_for(kind: BackendKind) -> &'static dyn KernelBackend {
+    match kind {
+        BackendKind::Scalar => &SCALAR_REF,
+        BackendKind::Swar => &SWAR64,
+        BackendKind::Wide => &WIDE,
+    }
+}
+
+/// Every compiled-in backend, oracle first (the property tests iterate
+/// this).
+pub fn all_backends() -> [&'static dyn KernelBackend; 3] {
+    [&SCALAR_REF, &SWAR64, &WIDE]
+}
+
+/// Pick the routine for one layer shape under the process policy;
+/// called by `compiler::program::codegen`, recorded in
+/// `Program::kernel`.
+pub fn select_kernel(shape: KernelShape) -> BackendKind {
+    select_with_policy(effective_policy(), shape)
+}
+
+/// Policy-explicit selection (unit-testable without process globals).
+/// `Force(k)` bypasses the selector entirely; `Auto` consults the
+/// memoized per-shape-class choice.
+pub fn select_with_policy(policy: KernelPolicy, shape: KernelShape) -> BackendKind {
+    match policy {
+        KernelPolicy::Force(k) => k,
+        KernelPolicy::Auto => auto_select(shape),
+    }
+}
+
+/// log2 buckets of the geometry fields: near-identical sweep layers
+/// share one class (and therefore one memoized selection).
+fn shape_class(shape: KernelShape) -> (u32, u32, u32) {
+    let b = |v: usize| (v.max(1) as u64).ilog2();
+    (b(shape.m), b(shape.max_filters), b(shape.max_tile_rows))
+}
+
+/// Auto selection, memoized per shape class for the process lifetime.
+/// The memo is what makes selection a pure function of the shape class
+/// within a process: a `CompileCache` hit and a fresh compile of the
+/// same layer see the same choice even when calibration timing is
+/// noisy.
+fn auto_select(shape: KernelShape) -> BackendKind {
+    static MEMO: OnceLock<Mutex<HashMap<(u32, u32, u32), BackendKind>>> = OnceLock::new();
+    let memo = MEMO.get_or_init(|| Mutex::new(HashMap::new()));
+    let class = shape_class(shape);
+    let mut memo = memo.lock().unwrap();
+    if let Some(&k) = memo.get(&class) {
+        return k;
+    }
+    let k = if calibrate_enabled() { calibrate(shape) } else { heuristic(shape) };
+    memo.insert(class, k);
+    k
+}
+
+/// Static heuristic: AVX2 pays off when the GEMM rows are wide enough
+/// to fill 8 i32 lanes or the scan covers ≥ 32 input rows (one full
+/// vector of occupancy bytes); the SWAR word path wins on skinnier
+/// shapes. The oracle is never auto-picked.
+fn heuristic(shape: KernelShape) -> BackendKind {
+    if avx2_available() && (shape.max_filters >= 8 || shape.m >= 32) {
+        BackendKind::Wide
+    } else {
+        BackendKind::Swar
+    }
+}
+
+fn calibrate_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("DBPIM_KERNEL_CALIBRATE").as_deref() == Ok("1"))
+}
+
+/// One-shot calibration: time the fast candidates on a synthetic GEMM
+/// of this shape class and keep the faster. Runs once per shape class
+/// per process (memoized by [`auto_select`]), so its cost amortizes
+/// across a sweep. The outcome is timing-dependent across *processes*,
+/// which is fine by the oracle rule: it can only move wall-clock, and
+/// within a process the memo keeps it consistent.
+fn calibrate(shape: KernelShape) -> BackendKind {
+    let nf = shape.max_filters.clamp(1, 512);
+    let rows = shape.max_tile_rows.clamp(1, 1024);
+    let mut rng = crate::util::Rng::new(0xCA11_B8A7E);
+    let gathered: Vec<u8> = (0..rows).map(|_| rng.int8() as u8).collect();
+    let wblock: Vec<i8> = (0..rows * nf).map(|_| rng.int8()).collect();
+    let mut out = vec![0i32; nf];
+    let mut best = (BackendKind::Swar, u128::MAX);
+    for kind in [BackendKind::Swar, BackendKind::Wide] {
+        let b = backend_for(kind);
+        let start = std::time::Instant::now();
+        for _ in 0..8 {
+            out.fill(0);
+            b.gemm_accumulate(&mut out, &gathered, &wblock);
+            std::hint::black_box(&mut out);
+        }
+        let dt = start.elapsed().as_nanos();
+        if dt < best.1 {
+            best = (kind, dt);
+        }
+    }
+    best.0
+}
+
+/// AVX2 routines. Bit-identity argument, per routine:
+///
+/// * scan — the per-byte popcount (nibble-LUT `pshufb`) is exact, the
+///   byte-lane accumulators live in the same `u64` little-endian lane
+///   layout the SWAR path uses (x86_64 is little-endian, so vector
+///   byte lanes coincide with the `to_le_bytes` lanes `flush_lanes`
+///   drains), and the flush cadence is the same 31-step bound.
+/// * gemm — `i8` weights widen to `i32` before an exact
+///   `_mm256_mullo_epi32` and `_mm256_add_epi32`; per output column
+///   the adds fold in the same kept-rows-ascending order as scalar.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use crate::sim::kernels::{flush_lanes, lane_popcount, TileScan, LANE_FLUSH_STEPS};
+    use crate::sim::occupancy::OccupancyTable;
+
+    /// Step-major occupancy scan, 32 occupancy bytes per vector op.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scan_tile_occupancy_into(
+        scan: &mut TileScan,
+        table: &OccupancyTable,
+        tile: u32,
+        base_step: usize,
+        step_eff: &[u64],
+        lane_scratch: &mut Vec<u64>,
+    ) {
+        let m_total = table.m_rows();
+        debug_assert!(base_step + step_eff.len() <= table.steps());
+        scan.tile = tile;
+        scan.row_cycles.clear();
+        scan.row_cycles.resize(m_total, 0);
+        let row_cycles = &mut scan.row_cycles;
+        let words = m_total / 8;
+        lane_scratch.clear();
+        lane_scratch.resize(words, 0);
+        // 4 u64 lanes = one 256-bit in-memory byte-lane accumulator
+        let vec_words = words - words % 4;
+        // nibble popcount LUT for pshufb (both 128-bit halves)
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3,
+            2, 3, 3, 4,
+        );
+        let low_mask = _mm256_set1_epi8(0x0f);
+        let zero = _mm256_setzero_si256();
+        let shift4 = _mm_cvtsi32_si128(4);
+        let mut eff_total = 0u64;
+        let mut pending = 0u32;
+        for (s, &eff) in step_eff.iter().enumerate() {
+            let occ_row = table.step_row(base_step + s);
+            let (word_bytes, tail) = occ_row.split_at(words * 8);
+            for g in 0..vec_words / 4 {
+                let v = _mm256_loadu_si256(word_bytes.as_ptr().add(g * 32) as *const __m256i);
+                let lo = _mm256_shuffle_epi8(lut, _mm256_and_si256(v, low_mask));
+                let hi = _mm256_shuffle_epi8(
+                    lut,
+                    _mm256_and_si256(_mm256_srl_epi16(v, shift4), low_mask),
+                );
+                let pc = _mm256_add_epi8(lo, hi);
+                let accp = lane_scratch.as_mut_ptr().add(g * 4) as *mut __m256i;
+                let lanes = _mm256_loadu_si256(accp);
+                _mm256_storeu_si256(accp, _mm256_add_epi8(lanes, pc));
+                // per-step total popcount of the 32 bytes, for the
+                // eff-weighted column-cycle sum
+                let sums = _mm256_sad_epu8(pc, zero);
+                let mut q = [0u64; 4];
+                _mm256_storeu_si256(q.as_mut_ptr() as *mut __m256i, sums);
+                eff_total += eff * (q[0] + q[1] + q[2] + q[3]);
+            }
+            // remainder words (< 4) via the SWAR word path
+            for (lanes, chunk) in lane_scratch[vec_words..]
+                .iter_mut()
+                .zip(word_bytes[vec_words * 8..].chunks_exact(8))
+            {
+                let word = u64::from_le_bytes(chunk.try_into().unwrap());
+                *lanes += lane_popcount(word);
+                eff_total += eff * u64::from(word.count_ones());
+            }
+            // tail rows (m_total % 8) byte-wise
+            for (rc, &b) in row_cycles[words * 8..].iter_mut().zip(tail) {
+                let beff = u64::from(b.count_ones());
+                *rc += beff;
+                eff_total += eff * beff;
+            }
+            pending += 1;
+            if pending == LANE_FLUSH_STEPS {
+                flush_lanes(lane_scratch, row_cycles);
+                pending = 0;
+            }
+        }
+        if pending > 0 {
+            flush_lanes(lane_scratch, row_cycles);
+        }
+        scan.eff_total = eff_total;
+    }
+
+    /// Dense row accumulate, 8 filter columns per vector op.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_accumulate(out: &mut [i32], gathered: &[u8], wblock: &[i8]) {
+        let nf = out.len();
+        debug_assert_eq!(wblock.len(), gathered.len() * nf);
+        let main = nf - nf % 8;
+        for (ri, &g) in gathered.iter().enumerate() {
+            let xv = g as i8 as i32;
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &wblock[ri * nf..(ri + 1) * nf];
+            let xb = _mm256_set1_epi32(xv);
+            let mut fi = 0;
+            while fi < main {
+                let w8 =
+                    _mm256_cvtepi8_epi32(_mm_loadl_epi64(wrow.as_ptr().add(fi) as *const __m128i));
+                let op = out.as_mut_ptr().add(fi) as *mut __m256i;
+                let o = _mm256_loadu_si256(op);
+                _mm256_storeu_si256(op, _mm256_add_epi32(o, _mm256_mullo_epi32(w8, xb)));
+                fi += 8;
+            }
+            for (o, &w) in out[main..].iter_mut().zip(&wrow[main..]) {
+                *o += xv * w as i32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::MatI8;
+    use crate::util::{ceil_div, Rng};
+
+    fn shape(m: usize, nf: usize, rows: usize) -> KernelShape {
+        KernelShape { m, max_filters: nf, max_tile_rows: rows }
+    }
+
+    #[test]
+    fn names_parse_and_dispatch_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+            assert_eq!(backend_for(k).kind(), k);
+            assert_eq!(KernelPolicy::parse(k.name()), Some(KernelPolicy::Force(k)));
+        }
+        assert_eq!(BackendKind::parse("bogus"), None);
+        assert_eq!(KernelPolicy::parse("auto"), Some(KernelPolicy::Auto));
+        assert_eq!(KernelPolicy::parse(""), None);
+        assert_eq!(BackendKind::default(), BackendKind::Swar);
+    }
+
+    /// ISSUE 6 satellite pin: a forced policy (`--kernel scalar` /
+    /// `DBPIM_KERNEL=scalar`) bypasses the selector entirely — every
+    /// shape gets the forced backend, including shapes the heuristic
+    /// would route elsewhere.
+    #[test]
+    fn forced_policy_bypasses_selector() {
+        for s in [shape(1, 1, 1), shape(256, 128, 1024), shape(64, 8, 64)] {
+            assert_eq!(
+                select_with_policy(KernelPolicy::Force(BackendKind::Scalar), s),
+                BackendKind::Scalar
+            );
+            for k in BackendKind::ALL {
+                assert_eq!(select_with_policy(KernelPolicy::Force(k), s), k);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_never_selects_the_scalar_oracle() {
+        for m in [1usize, 4, 32, 256] {
+            for nf in [1usize, 2, 8, 48] {
+                for rows in [1usize, 64, 1024] {
+                    let k = select_with_policy(KernelPolicy::Auto, shape(m, nf, rows));
+                    assert_ne!(k, BackendKind::Scalar, "auto picked the oracle at {m}x{nf}x{rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_backends_match_scalar_oracle() {
+        let mut rng = Rng::new(91);
+        for _ in 0..40 {
+            let kept = rng.below(80) as usize;
+            let nf = 1 + rng.below(40) as usize;
+            let gathered: Vec<u8> = (0..kept)
+                .map(|_| if rng.below(3) == 0 { 0 } else { rng.int8() as u8 })
+                .collect();
+            let wblock: Vec<i8> = (0..kept * nf).map(|_| rng.int8()).collect();
+            // non-zero starting accumulators: backends must add on top
+            let base: Vec<i32> = (0..nf).map(|_| rng.int8() as i32 * 1000).collect();
+            let mut want = base.clone();
+            SCALAR_REF.gemm_accumulate(&mut want, &gathered, &wblock);
+            for b in all_backends() {
+                let mut got = base.clone();
+                b.gemm_accumulate(&mut got, &gathered, &wblock);
+                assert_eq!(got, want, "{:?} kept {kept} nf {nf}", b.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn scan_backends_match_scalar_oracle() {
+        let mut rng = Rng::new(92);
+        for _ in 0..20 {
+            let m_total = 1 + rng.below(70) as usize;
+            let k = 8 + rng.below(300) as usize;
+            let comp = 16;
+            let x = MatI8::from_vec(
+                m_total,
+                k,
+                (0..m_total * k)
+                    .map(|_| if rng.below(2) == 0 { 0 } else { rng.int8() })
+                    .collect(),
+            );
+            let kept: Vec<u32> = (0..k as u32).filter(|_| rng.below(4) > 0).collect();
+            if kept.is_empty() {
+                continue;
+            }
+            let table = OccupancyTable::build(0, &x, &kept, comp, m_total, true, false);
+            let steps = ceil_div(kept.len(), comp);
+            let step_eff: Vec<u64> = (0..steps).map(|_| rng.below(512)).collect();
+            let mut want = TileScan::empty();
+            let mut scratch = Vec::new();
+            SCALAR_REF.scan_tile_occupancy_into(&mut want, &table, 3, 0, &step_eff, &mut scratch);
+            for b in all_backends() {
+                let mut got = TileScan::empty();
+                let mut scratch = Vec::new();
+                b.scan_tile_occupancy_into(&mut got, &table, 3, 0, &step_eff, &mut scratch);
+                assert_eq!(got.tile, want.tile, "{:?}", b.kind());
+                assert_eq!(got.row_cycles, want.row_cycles, "{:?}", b.kind());
+                assert_eq!(got.eff_total, want.eff_total, "{:?}", b.kind());
+            }
+        }
+    }
+
+    #[test]
+    fn requant_backends_match_scalar_on_edge_values() {
+        let acc = vec![100_000, -100_000, 0, 6553, i32::MAX, i32::MIN, -1, 1, 65_536];
+        let mul = quant::requant_mul(0.01);
+        for relu in [false, true] {
+            let mut want = vec![0i8; acc.len()];
+            SCALAR_REF.requant_relu_into(&mut want, &acc, mul, relu);
+            for b in all_backends() {
+                let mut got = vec![0i8; acc.len()];
+                b.requant_relu_into(&mut got, &acc, mul, relu);
+                assert_eq!(got, want, "{:?} relu {relu}", b.kind());
+            }
+        }
+    }
+}

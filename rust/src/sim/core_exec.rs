@@ -10,11 +10,14 @@
 //! shared state is mutated between barriers, segments of one phase can
 //! execute on worker threads and merge deterministically (sim::engine).
 //!
-//! The hot loops live in [`super::kernels`]: IPU timing is a step-major
-//! word-batched occupancy scan computed once per tile (Compute chunks
-//! then read back per-row cycle counts), and the functional accumulate
-//! is a dense i8×i8 micro-GEMM over the assignment's compile-time
-//! gathered weight block. The timing/event semantics remain an exact
+//! The hot loops are reached through the layer's selected
+//! [`KernelBackend`] (`Program::kernel`, resolved once at
+//! construction): IPU timing is a step-major batched occupancy scan
+//! computed once per tile (Compute chunks then read back per-row cycle
+//! counts), and the functional accumulate is a dense i8×i8 micro-GEMM
+//! over the assignment's compile-time gathered weight block. Every
+//! backend is bit-identical to the `ScalarRef` oracle
+//! (sim::backend docs), and the timing/event semantics remain an exact
 //! port of the original single-thread interpreter loop (machine.rs
 //! pre-refactor, DESIGN.md §6): every engine built on this executor is
 //! bit-identical to it.
@@ -27,13 +30,14 @@ use crate::tensor::{MatI8, MatI32};
 use crate::util::ceil_div;
 
 use super::arena;
-use super::kernels::{self, TileScan};
+use super::backend::{self, KernelBackend};
+use super::kernels::TileScan;
 use super::occupancy::OccupancyTable;
 
 /// Dense functional accumulator block of one assignment:
 /// `data[m * filters.len() + fi]` accumulates input row m against the
 /// assignment's fi-th filter — the contiguous GEMM target of
-/// [`kernels::gemm_accumulate`].
+/// [`KernelBackend::gemm_accumulate`].
 #[derive(Debug, Clone)]
 pub struct AccBlock {
     /// Assignment index in the layer (executor lookup key).
@@ -132,6 +136,9 @@ pub struct CoreExecutor<'a> {
     table: Option<OccupancyTable>,
     /// Cached step-major occupancy scan for the tile being walked.
     scan: Option<TileScan>,
+    /// Kernel routines for this layer (`Program::kernel`), resolved to
+    /// a backend once per executor.
+    backend: &'static dyn KernelBackend,
 }
 
 impl<'a> CoreExecutor<'a> {
@@ -155,6 +162,7 @@ impl<'a> CoreExecutor<'a> {
             acc,
             table: None,
             scan: None,
+            backend: backend::backend_for(layer.program.kernel),
         }
     }
 
@@ -276,7 +284,14 @@ impl<'a> CoreExecutor<'a> {
         // the kernel's resize
         let mut lanes_buf = arena::take_u64(table.m_rows() / 8);
         let cap = scan.row_cycles.capacity();
-        kernels::scan_tile_occupancy_into(&mut scan, table, t.id, base_step, &step_eff, &mut lanes_buf);
+        self.backend.scan_tile_occupancy_into(
+            &mut scan,
+            table,
+            t.id,
+            base_step,
+            &step_eff,
+            &mut lanes_buf,
+        );
         if scan.row_cycles.capacity() != cap {
             arena::note_growth();
         }
@@ -335,6 +350,7 @@ impl<'a> CoreExecutor<'a> {
         if arch.input_skipping {
             self.ensure_scan(tile_idx);
         }
+        let backend = self.backend;
         let Self { table, scan, acc, events, .. } = self;
 
         let mut worst = 0u64;
@@ -378,11 +394,7 @@ impl<'a> CoreExecutor<'a> {
             for mi in 0..m_count {
                 let m = m_base + mi;
                 let gathered = &table.gathered_row(m)[t.row_start..t.row_end];
-                kernels::gemm_accumulate(
-                    &mut block.data[m * nf..(m + 1) * nf],
-                    gathered,
-                    wtile,
-                );
+                backend.gemm_accumulate(&mut block.data[m * nf..(m + 1) * nf], gathered, wtile);
             }
         }
 

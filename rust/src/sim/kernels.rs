@@ -24,6 +24,10 @@
 //! Both kernels are property-tested bit-identical to scalar
 //! first-principles references (unit tests below and
 //! tests/prop_invariants.rs).
+//!
+//! These routines are the engine of the `Swar64` backend (and the
+//! portable fallback of `Wide`) in [`super::backend`]; the executor
+//! reaches them through the [`super::backend::KernelBackend`] trait.
 
 use super::occupancy::OccupancyTable;
 
@@ -71,8 +75,10 @@ impl TileScan {
 }
 
 /// Lane accumulators flush to 64-bit counters before a byte lane can
-/// saturate: 31 steps × max popcount 8 = 248 < 256.
-const LANE_FLUSH_STEPS: u32 = 31;
+/// saturate: 31 steps × max popcount 8 = 248 < 256. Shared with the
+/// AVX2 scan in `sim::backend`, whose 32-byte lanes have the same
+/// saturation bound.
+pub(crate) const LANE_FLUSH_STEPS: u32 = 31;
 
 /// Step-major occupancy scan of one tile: for global steps
 /// `base_step .. base_step + step_eff.len()`, fold every input row's
@@ -141,7 +147,9 @@ pub fn scan_tile_occupancy_into(
 }
 
 /// Drain the byte-lane accumulators into the 64-bit per-row counters.
-fn flush_lanes(lane_acc: &mut [u64], row_cycles: &mut [u64]) {
+/// `pub(crate)`: the AVX2 scan in `sim::backend` accumulates into the
+/// same little-endian `u64` byte-lane layout and drains through here.
+pub(crate) fn flush_lanes(lane_acc: &mut [u64], row_cycles: &mut [u64]) {
     for (w, lanes) in lane_acc.iter_mut().enumerate() {
         if *lanes != 0 {
             for (i, b) in lanes.to_le_bytes().into_iter().enumerate() {

@@ -10,6 +10,11 @@
 //!   IPU inner loop (step-major storage).
 //! * [`kernels`] — batched hot-loop kernels: the step-major word-batched
 //!   occupancy scan and the dense gathered-weight micro-GEMM accumulate.
+//! * [`backend`] — pluggable kernel backends behind those routines:
+//!   `ScalarRef` bit-exact oracle, `Swar64` word path, AVX2 `Wide` with
+//!   runtime dispatch; plus the per-shape routine selector whose choice
+//!   is recorded in each compiled `Program`
+//!   (`DBPIM_KERNEL=auto|scalar|swar|wide`, `--kernel`).
 //! * [`arena`] — thread-local scratch arenas recycling the hot-path
 //!   working set (occupancy tables, tile scans, accumulator blocks), so
 //!   steady-state simulation is allocation-free.
@@ -31,6 +36,7 @@
 //! by "removing all sparsity support".
 
 pub mod arena;
+pub mod backend;
 pub mod core_exec;
 pub mod dbmu;
 pub mod engine;

@@ -14,7 +14,7 @@ use crate::energy::EventCounts;
 use crate::isa::SimdOp;
 use crate::models::MiniNet;
 use crate::sim::machine::{LayerStats, Machine};
-use crate::sim::simd;
+use crate::sim::{arena, backend, simd};
 use crate::tensor::{self, TensorI8};
 
 /// Result of a functional MiniNet run.
@@ -72,8 +72,16 @@ pub fn run_mininet(net: &MiniNet, arch: &ArchConfig) -> crate::Result<MiniNetRun
             totals.add(&stats.events);
             layers.push(stats);
             let acc = acc.context("functional run returned no accumulators")?;
-            // SIMD: requant + ReLU
-            let out = simd::requant_relu(&acc, l.requant_mul, true);
+            // SIMD: requant + ReLU through the layer's selected kernel
+            // backend, into an arena-recycled buffer (no per-layer
+            // `Vec<i8>` allocation)
+            let mut out = arena::take_i8(acc.data.len());
+            backend::backend_for(compiled.program.kernel).requant_relu_into(
+                &mut out,
+                &acc.data,
+                l.requant_mul,
+                true,
+            );
             let s = machine.run_simd_layer(
                 &format!("{}_requant", l.name),
                 SimdOp::Requant,
@@ -82,6 +90,7 @@ pub fn run_mininet(net: &MiniNet, arch: &ArchConfig) -> crate::Result<MiniNetRun
             totals.add(&s.events);
             layers.push(s);
             let mut t = tensor::cols2im(&out, net.batch, oh, ow, info.out_ch);
+            arena::give_i8(out);
             if info.pool {
                 let s = machine.run_simd_layer(
                     &format!("{}_pool", l.name),

@@ -18,7 +18,10 @@
 //! feature flags), and activation synthesis is seeded by
 //! `(seed, layer_idx, m, k)`, all in the key. Engine choice and worker
 //! count are excluded *by the determinism contract* (§8): they cannot
-//! change a single bit of the result. The only sim-side extension is
+//! change a single bit of the result. The `Program::kernel` backend
+//! tag is excluded for the same reason — every kernel backend is
+//! bit-identical to the `ScalarRef` oracle (sim::backend), so the
+//! choice affects only wall-clock. The only sim-side extension is
 //! the `functional` flag (accumulators computed or not).
 //!
 //! Sharded + counted exactly like the CompileCache; a racing duplicate

@@ -23,24 +23,34 @@ pub fn lane_ops(op: SimdOp, elems: u64) -> u64 {
     }
 }
 
-/// Cycles to execute the op over `elems` elements.
+/// Cycles to execute the op over `elems` elements. The ceil-div stays
+/// in `u64` the whole way: the old `lane_ops(..) as usize` narrowing
+/// silently truncated huge elem counts on 32-bit targets before
+/// dividing.
 pub fn simd_cycles(op: SimdOp, elems: u64, arch: &ArchConfig) -> u64 {
-    crate::util::ceil_div(lane_ops(op, elems) as usize, arch.simd_lanes) as u64
+    let lanes = (arch.simd_lanes as u64).max(1);
+    lane_ops(op, elems).div_ceil(lanes)
 }
 
-/// Functional: requantize + optional ReLU an accumulator matrix into i8.
+/// Functional: requantize + optional ReLU a raw accumulator slice into
+/// a caller-provided `i8` buffer (arena-recycled in the pipeline hot
+/// path — the old signature allocated a fresh `Vec<i8>` per layer).
+/// This per-element scalar loop is the `ScalarRef` oracle routine; the
+/// chunked fast backends in [`super::backend`] are tested bit-identical
+/// to it.
+pub fn requant_relu_into(out: &mut [i8], acc: &[i32], mul: i32, relu: bool) {
+    assert_eq!(out.len(), acc.len());
+    for (o, &a) in out.iter_mut().zip(acc) {
+        let q = quant::requantize(a, mul);
+        *o = if relu && q < 0 { 0 } else { q };
+    }
+}
+
+/// Allocating convenience wrapper over [`requant_relu_into`].
 pub fn requant_relu(acc: &MatI32, mul: i32, relu: bool) -> Vec<i8> {
-    acc.data
-        .iter()
-        .map(|&a| {
-            let q = quant::requantize(a, mul);
-            if relu && q < 0 {
-                0
-            } else {
-                q
-            }
-        })
-        .collect()
+    let mut out = vec![0i8; acc.data.len()];
+    requant_relu_into(&mut out, &acc.data, mul, relu);
+    out
 }
 
 /// Functional 2×2 max pool (thin wrapper for pipeline symmetry).
@@ -76,5 +86,40 @@ mod tests {
     #[test]
     fn dwconv_lane_ops_equal_macs() {
         assert_eq!(lane_ops(SimdOp::DwConv, 12345), 12345);
+    }
+
+    #[test]
+    fn cycles_survive_huge_elem_counts_without_narrowing() {
+        let arch = ArchConfig::db_pim();
+        assert_eq!(arch.simd_lanes, 64);
+        // > u32::MAX lane-ops: the old `as usize` narrowing truncated
+        // this on 32-bit targets before the ceil-div.
+        let elems = (1u64 << 40) + 1;
+        assert_eq!(simd_cycles(SimdOp::Relu, elems, &arch), (1u64 << 34) + 1);
+        // exact multiple: no remainder cycle
+        assert_eq!(simd_cycles(SimdOp::Relu, 1u64 << 40, &arch), 1u64 << 34);
+        assert_eq!(simd_cycles(SimdOp::Relu, 0, &arch), 0);
+    }
+
+    #[test]
+    fn requant_relu_into_reuses_arena_buffers() {
+        use crate::sim::arena;
+        let acc =
+            MatI32 { rows: 4, cols: 8, data: (0..32).map(|i| i * 1000 - 16_000).collect() };
+        let mul = quant::requant_mul(0.01);
+        let want = requant_relu(&acc, mul, true);
+        // warm-up take/give seeds the thread-local free list
+        let out = arena::take_i8(acc.data.len());
+        arena::give_i8(out);
+        arena::reset_stats();
+        for _ in 0..5 {
+            let mut out = arena::take_i8(acc.data.len());
+            requant_relu_into(&mut out, &acc.data, mul, true);
+            assert_eq!(out, want);
+            arena::give_i8(out);
+        }
+        let s = arena::stats();
+        assert_eq!(s.misses, 0, "steady-state requant still allocating: {s:?}");
+        assert!(s.hits >= 5);
     }
 }

@@ -17,6 +17,10 @@
 //!   scalar first-principles walk straight off the input matrix, and
 //!   the compile-time gathered weight block (the micro-GEMM operand)
 //!   matches the prepared weight matrix
+//! * backends: every kernel backend (`Swar64`, `Wide`) is bit-identical
+//!   to the `ScalarRef` oracle on the isolated scan/GEMM/requant
+//!   routines and at whole-layer granularity for forced kernel tags,
+//!   both engines and random core counts
 //! * caching: simulating through a CompileCache is bit-identical to
 //!   fresh compilation, and repeated sweep points hit; simulating
 //!   through a SimCache is bit-identical to the uncached path, repeated
@@ -225,6 +229,138 @@ fn prop_engines_bit_identical_to_legacy_interp() {
         }
         // the batched kernels themselves vs scalar first principles
         check_batched_kernels(&layer, &x, &arch)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_backends_bit_identical() {
+    // The KernelBackend oracle rule: every fast backend — Swar64 and
+    // Wide (AVX2 where the host has it, portable chunked elsewhere) —
+    // must be bit-identical to the ScalarRef oracle on every input.
+    // Checked two ways per case: the three isolated routines on random
+    // occupancy tables / weight blocks / accumulator states (including
+    // the requant clamp and ReLU edge values), and a whole layer run
+    // with `Program::kernel` forced to each backend, which must
+    // reproduce the scalar-forced run exactly under both engines and
+    // random core counts.
+    use dbpim::sim::backend::{self, BackendKind, KernelBackend};
+    use dbpim::sim::kernels::TileScan;
+    use dbpim::sim::occupancy::OccupancyTable;
+    use dbpim::util::ceil_div;
+    check_cases(12, |rng| {
+        // --- isolated occupancy scan on a random table ---
+        let m_total = 1 + rng.below(40) as usize;
+        let k = 8 + rng.below(300) as usize;
+        let comp = [1usize, 4, 16][rng.below(3) as usize];
+        let x = MatI8::from_vec(
+            m_total,
+            k,
+            (0..m_total * k)
+                .map(|_| if rng.below(2) == 0 { 0 } else { rng.int8() })
+                .collect(),
+        );
+        let kept: Vec<u32> = (0..k as u32).filter(|_| rng.below(4) > 0).collect();
+        if !kept.is_empty() {
+            let table = OccupancyTable::build(0, &x, &kept, comp, m_total, true, false);
+            let steps = ceil_div(kept.len(), comp);
+            let step_eff: Vec<u64> = (0..steps).map(|_| rng.below(512)).collect();
+            let mut want = TileScan::empty();
+            let mut scratch = Vec::new();
+            backend::SCALAR_REF
+                .scan_tile_occupancy_into(&mut want, &table, 3, 0, &step_eff, &mut scratch);
+            for b in backend::all_backends() {
+                let mut got = TileScan::empty();
+                let mut scratch = Vec::new();
+                b.scan_tile_occupancy_into(&mut got, &table, 3, 0, &step_eff, &mut scratch);
+                if got.tile != want.tile
+                    || got.row_cycles != want.row_cycles
+                    || got.eff_total != want.eff_total
+                {
+                    return Err(format!(
+                        "{:?} scan diverges from oracle (m {m_total} kept {})",
+                        b.kind(),
+                        kept.len()
+                    ));
+                }
+            }
+        }
+        // --- isolated GEMM over non-zero base accumulators, with zero
+        // and 0x80 (-128) activation bytes salted in ---
+        let rows = rng.below(48) as usize;
+        let nf = 1 + rng.below(40) as usize;
+        let gathered: Vec<u8> = (0..rows)
+            .map(|_| match rng.below(4) {
+                0 => 0,
+                1 => 0x80,
+                _ => rng.int8() as u8,
+            })
+            .collect();
+        let wblock: Vec<i8> = (0..rows * nf).map(|_| rng.int8()).collect();
+        let base: Vec<i32> = (0..nf).map(|_| (rng.next_u64() as i32) >> 8).collect();
+        let mut want = base.clone();
+        backend::SCALAR_REF.gemm_accumulate(&mut want, &gathered, &wblock);
+        for b in backend::all_backends() {
+            let mut got = base.clone();
+            b.gemm_accumulate(&mut got, &gathered, &wblock);
+            if got != want {
+                return Err(format!(
+                    "{:?} gemm diverges from oracle (rows {rows} nf {nf})",
+                    b.kind()
+                ));
+            }
+        }
+        // --- isolated requant/ReLU with clamp edge values ---
+        let mut accs: Vec<i32> =
+            (0..rng.below(64) as usize).map(|_| rng.next_u64() as i32).collect();
+        accs.extend([0, 1, -1, i32::MAX, i32::MIN, 100_000, -100_000, 6553, 65_536]);
+        let mul = quant::requant_mul(0.001 + rng.f64() * 0.1);
+        for relu in [false, true] {
+            let mut want = vec![0i8; accs.len()];
+            backend::SCALAR_REF.requant_relu_into(&mut want, &accs, mul, relu);
+            for b in backend::all_backends() {
+                let mut got = vec![0i8; accs.len()];
+                b.requant_relu_into(&mut got, &accs, mul, relu);
+                if got != want {
+                    return Err(format!(
+                        "{:?} requant diverges from oracle (relu={relu})",
+                        b.kind()
+                    ));
+                }
+            }
+        }
+        // --- whole layer with the kernel tag forced per backend ---
+        let mut arch = random_arch(rng);
+        arch.n_cores = 1 + rng.below(8) as usize;
+        let functional = rng.below(2) == 0;
+        let (layer, x) = random_layer(rng, &arch);
+        let mut oracle_layer = layer.clone();
+        oracle_layer.program.kernel = BackendKind::Scalar;
+        let seq = Machine::with_engine(arch.clone(), Engine::Sequential);
+        let par = Machine::with_engine(arch.clone(), Engine::Parallel);
+        let want = seq.run_pim_layer(&oracle_layer, Some(&x), functional);
+        for kind in BackendKind::ALL {
+            let mut forced = layer.clone();
+            forced.program.kernel = kind;
+            for (label, machine) in [("sequential", &seq), ("parallel", &par)] {
+                let (stats, acc) = machine.run_pim_layer(&forced, Some(&x), functional);
+                if stats.events != want.0.events
+                    || stats.core_cycles != want.0.core_cycles
+                    || stats.elapsed != want.0.elapsed
+                {
+                    return Err(format!(
+                        "{kind:?} {label} stats diverge from scalar oracle on {} cores={}",
+                        arch.name, arch.n_cores
+                    ));
+                }
+                if acc != want.1 {
+                    return Err(format!(
+                        "{kind:?} {label} accumulators diverge on {}",
+                        arch.name
+                    ));
+                }
+            }
+        }
         Ok(())
     });
 }

@@ -39,6 +39,9 @@ DEFAULT_CASES = [
     "sim_cached_sweep",
     "dense_eff_prefix",
     "serve_throughput",
+    "kernel_backend_scan",
+    "kernel_backend_gemm",
+    "requant_relu_arena",
 ]
 
 
