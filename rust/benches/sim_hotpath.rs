@@ -36,6 +36,10 @@
 //! * `serve_throughput` — a 48-request multi-tenant replay through the
 //!   batched serving frontend (dynamic batching + cross-tenant cache
 //!   sharing + pooled batch fan-out; admission-order results)
+//! * `serve_loop_saturation` — the open-loop continuous-batching serve
+//!   loop driven far past saturation (Poisson arrivals at ~1M rps into
+//!   a bounded queue): measures the admission/shed/EDF-dispatch event
+//!   loop itself, and asserts load shedding stays a typed outcome
 //! * `pool_spawn_overhead` — scheduling cost of the persistent
 //!   work-stealing pool: 256 trivial jobs through `pool::run_jobs`
 //! * `pool_nested_sweep` — a miniature sweep × layer × segment nested
@@ -376,6 +380,67 @@ fn main() {
                 "replay must share sim-cache entries across requests"
             );
             results.len()
+        }));
+    }
+
+    // --- open-loop serve loop at saturation ---
+    // 96 Poisson arrivals at ~1M rps into a 16-deep queue on 2×4-lane
+    // chips with a tight deadline: far past capacity, so the measured
+    // work is the admission / shed / EDF-dispatch / continuous-batching
+    // event loop under stress. Shedding must stay a typed outcome (the
+    // loop never panics under overload), and the books must balance.
+    {
+        use dbpim::coordinator::arrivals::ArrivalProcess;
+        use dbpim::coordinator::faults::FaultSpec;
+        use dbpim::coordinator::serve::{ServeCtx, ServeRequest};
+        use dbpim::coordinator::serve_loop::OpenLoopSpec;
+        use dbpim::models::Registry;
+        let spec = OpenLoopSpec {
+            models: vec!["small".into(), "tiny".into()],
+            workload: vec![
+                ServeRequest {
+                    model: "small".into(),
+                    arch: "db-pim".into(),
+                    sparsity: SparsityConfig::hybrid(0.6),
+                    seed: 1,
+                },
+                ServeRequest {
+                    model: "tiny".into(),
+                    arch: "db-pim".into(),
+                    sparsity: SparsityConfig::hybrid(0.4),
+                    seed: 2,
+                },
+            ],
+            arrivals: ArrivalProcess::Poisson { rate_rps: 1.0e6 },
+            requests: 96,
+            queue_cap: 16,
+            deadline_ms: 0.2,
+            timeout_ms: 50.0,
+            max_batch: 4,
+            chips: 2,
+            max_retries: 1,
+            backoff_ms: 0.05,
+            seed: 42,
+            faults: FaultSpec::off(),
+            trace_events: false,
+        };
+        samples.push(bench("serve_loop_saturation", 0, iters(5, 2), || {
+            // fresh context per run: one cold open-loop episode, not
+            // cache decay across iterations
+            let ctx = ServeCtx::new(Registry::from_networks(vec![
+                dbpim::models::fixtures::small_net(),
+                dbpim::models::fixtures::tiny_net(),
+            ]));
+            let (outcomes, stats) = spec.run_with(&ctx).unwrap();
+            assert_eq!(outcomes.len(), 96);
+            assert!(stats.shed > 0, "saturation run must shed load");
+            assert!(stats.done > 0, "saturation run must still serve");
+            assert_eq!(
+                stats.done + stats.shed + stats.failed + stats.timed_out,
+                96,
+                "outcome conservation"
+            );
+            stats.done
         }));
     }
 

@@ -1,0 +1,341 @@
+//! Seeded open-loop arrival processes (DESIGN.md §11).
+//!
+//! A closed-loop replay (PR 5's `dbpim serve --replay`) issues the next
+//! request only when the previous one is done, so it can never exhibit
+//! saturation: offered load adapts to service capacity by construction.
+//! The open-loop serve loop instead draws arrival *times* from one of
+//! the processes below — requests arrive whether or not the system is
+//! keeping up, which is what exposes backpressure, shedding and tail
+//! blow-up past the saturation point.
+//!
+//! Every process is a pure function of `(spec, seed)`: the same seed
+//! always produces the same arrival times, which is half of the serve
+//! loop's bit-exact replay contract (the other half is the virtual
+//! clock in [`super::clock`]).
+
+use crate::json::{self, arr, num, obj, str_, Value};
+use crate::util::Rng;
+
+use super::clock::VirtualNs;
+
+/// An open-loop arrival process. Times are virtual nanoseconds from the
+/// start of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant mean rate (requests/second).
+    Poisson { rate_rps: f64 },
+    /// Two-state Markov-modulated Poisson process: a calm phase at
+    /// `base_rps` and a burst phase at `burst_rps`, with exponentially
+    /// distributed phase dwell times of mean `mean_phase_ms` each.
+    Bursty { base_rps: f64, burst_rps: f64, mean_phase_ms: f64 },
+    /// Replay of explicit arrival offsets (milliseconds, ascending).
+    /// When more arrivals are requested than the trace holds, the
+    /// inter-arrival deltas cycle, extending the finite trace into an
+    /// open-ended stream with the same shape.
+    Trace { times_ms: Vec<f64> },
+}
+
+/// Exponential variate with the given rate (events per second),
+/// returned in nanoseconds.
+fn exp_ns(rng: &mut Rng, rate_rps: f64) -> f64 {
+    // 1 - f64() is in (0, 1], so ln is finite and <= 0.
+    -(1.0 - rng.f64()).ln() / rate_rps * 1e9
+}
+
+impl ArrivalProcess {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+            ArrivalProcess::Trace { .. } => "trace",
+        }
+    }
+
+    /// Long-run mean offered rate (requests/second) — the x-axis of a
+    /// rate sweep. Bursty phases have equal mean dwell, so the mean
+    /// rate is the plain average of the two phase rates.
+    pub fn nominal_rps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => *rate_rps,
+            ArrivalProcess::Bursty { base_rps, burst_rps, .. } => 0.5 * (base_rps + burst_rps),
+            ArrivalProcess::Trace { times_ms } => {
+                if times_ms.len() < 2 {
+                    return 0.0;
+                }
+                let span_ms = times_ms[times_ms.len() - 1] - times_ms[0];
+                if span_ms <= 0.0 {
+                    return 0.0;
+                }
+                (times_ms.len() - 1) as f64 / (span_ms / 1e3)
+            }
+        }
+    }
+
+    /// The same process with its offered load scaled by `factor`
+    /// (rate-sweep axis): rates multiply, trace gaps divide.
+    pub fn scaled(&self, factor: f64) -> ArrivalProcess {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                ArrivalProcess::Poisson { rate_rps: rate_rps * factor }
+            }
+            ArrivalProcess::Bursty { base_rps, burst_rps, mean_phase_ms } => {
+                ArrivalProcess::Bursty {
+                    base_rps: base_rps * factor,
+                    burst_rps: burst_rps * factor,
+                    mean_phase_ms: *mean_phase_ms,
+                }
+            }
+            ArrivalProcess::Trace { times_ms } => ArrivalProcess::Trace {
+                times_ms: times_ms.iter().map(|t| t / factor).collect(),
+            },
+        }
+    }
+
+    /// Reject degenerate parameters up front (admission errors, never
+    /// worker panics).
+    pub fn validate(&self) -> Result<(), String> {
+        let finite_pos = |v: f64| v.is_finite() && v > 0.0;
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                if !finite_pos(*rate_rps) {
+                    return Err(format!(
+                        "poisson arrivals: rate must be finite and > 0, got {rate_rps}"
+                    ));
+                }
+            }
+            ArrivalProcess::Bursty { base_rps, burst_rps, mean_phase_ms } => {
+                if !finite_pos(*base_rps) || !finite_pos(*burst_rps) {
+                    return Err(format!(
+                        "bursty arrivals: rates must be finite and > 0, got base {base_rps} / burst {burst_rps}"
+                    ));
+                }
+                if !finite_pos(*mean_phase_ms) {
+                    return Err(format!(
+                        "bursty arrivals: mean_phase_ms must be finite and > 0, got {mean_phase_ms}"
+                    ));
+                }
+            }
+            ArrivalProcess::Trace { times_ms } => {
+                if times_ms.is_empty() {
+                    return Err("trace arrivals: empty times".to_string());
+                }
+                for (i, w) in times_ms.windows(2).enumerate() {
+                    if w[1] < w[0] {
+                        return Err(format!("trace arrivals: times[{}] < times[{}]", i + 1, i));
+                    }
+                }
+                if times_ms.iter().any(|t| !t.is_finite() || *t < 0.0) {
+                    return Err("trace arrivals: times must be finite and >= 0".to_string());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The first `n` arrival times under this process, deterministic in
+    /// `seed`. Times are non-decreasing.
+    pub fn times(&self, n: usize, seed: u64) -> Vec<VirtualNs> {
+        let mut out = Vec::with_capacity(n);
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => {
+                let mut rng = Rng::new(seed ^ 0xA881_55C4_11E0_97D3);
+                let mut t = 0.0f64;
+                for _ in 0..n {
+                    t += exp_ns(&mut rng, *rate_rps);
+                    out.push(t as VirtualNs);
+                }
+            }
+            ArrivalProcess::Bursty { base_rps, burst_rps, mean_phase_ms } => {
+                let mut rng = Rng::new(seed ^ 0xB0B5_7D0C_6A41_29F1);
+                let phase_rate = 1e3 / mean_phase_ms; // phase switches per second
+                let mut t = 0.0f64;
+                let mut burst = false;
+                let mut phase_end = exp_ns(&mut rng, phase_rate);
+                for _ in 0..n {
+                    loop {
+                        let rate = if burst { *burst_rps } else { *base_rps };
+                        let dt = exp_ns(&mut rng, rate);
+                        if t + dt <= phase_end {
+                            t += dt;
+                            break;
+                        }
+                        // Exponential inter-arrivals are memoryless, so
+                        // restarting the draw at the phase boundary is
+                        // statistically exact.
+                        t = phase_end;
+                        burst = !burst;
+                        phase_end = t + exp_ns(&mut rng, phase_rate);
+                    }
+                    out.push(t as VirtualNs);
+                }
+            }
+            ArrivalProcess::Trace { times_ms } => {
+                // Cycle: repeat the trace shifted by one full period per
+                // lap. The period is last + mean-gap so the wrap gap
+                // matches the trace's own cadence.
+                let len = times_ms.len();
+                let mean_gap = if len >= 2 {
+                    (times_ms[len - 1] - times_ms[0]) / (len - 1) as f64
+                } else {
+                    1.0
+                };
+                let period = times_ms[len - 1] + mean_gap.max(1e-6);
+                for i in 0..n {
+                    let (lap, j) = (i / len, i % len);
+                    let t_ms = times_ms[j] + lap as f64 * period;
+                    out.push(super::clock::ms_to_ns(t_ms));
+                }
+            }
+        }
+        // Belt and braces: the serve loop requires monotone arrivals.
+        for i in 1..out.len() {
+            if out[i] < out[i - 1] {
+                out[i] = out[i - 1];
+            }
+        }
+        out
+    }
+
+    /// Parse from a spec object: `{"kind": "poisson", "rate_rps": R}` |
+    /// `{"kind": "bursty", "base_rps", "burst_rps", "mean_phase_ms"}` |
+    /// `{"kind": "trace", "times_ms": [...]}`.
+    pub fn from_json(v: &Value) -> Result<ArrivalProcess, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or_else(|| "arrivals: missing string \"kind\"".to_string())?;
+        let f = |key: &str| -> Result<f64, String> {
+            v.get(key)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("arrivals ({kind}): missing number \"{key}\""))
+        };
+        let p = match kind {
+            "poisson" => ArrivalProcess::Poisson { rate_rps: f("rate_rps")? },
+            "bursty" => ArrivalProcess::Bursty {
+                base_rps: f("base_rps")?,
+                burst_rps: f("burst_rps")?,
+                mean_phase_ms: f("mean_phase_ms")?,
+            },
+            "trace" => {
+                let times = v
+                    .get("times_ms")
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| "arrivals (trace): missing \"times_ms\" array".to_string())?
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| {
+                        t.as_f64().ok_or_else(|| {
+                            format!("arrivals (trace): times_ms[{i}] must be a number")
+                        })
+                    })
+                    .collect::<Result<Vec<_>, _>>()?;
+                ArrivalProcess::Trace { times_ms: times }
+            }
+            other => return Err(format!("arrivals: unknown kind {other:?}")),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            ArrivalProcess::Poisson { rate_rps } => obj(vec![
+                ("kind", str_("poisson")),
+                ("rate_rps", num(*rate_rps)),
+            ]),
+            ArrivalProcess::Bursty { base_rps, burst_rps, mean_phase_ms } => obj(vec![
+                ("kind", str_("bursty")),
+                ("base_rps", num(*base_rps)),
+                ("burst_rps", num(*burst_rps)),
+                ("mean_phase_ms", num(*mean_phase_ms)),
+            ]),
+            ArrivalProcess::Trace { times_ms } => obj(vec![
+                ("kind", str_("trace")),
+                ("times_ms", arr(times_ms.iter().map(|t| num(*t)).collect())),
+            ]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_seeded_monotone_and_rate_accurate() {
+        let p = ArrivalProcess::Poisson { rate_rps: 1000.0 };
+        let a = p.times(4000, 7);
+        let b = p.times(4000, 7);
+        assert_eq!(a, b, "same seed must replay bit-exactly");
+        assert_ne!(a, p.times(4000, 8), "different seeds must differ");
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "times must be non-decreasing");
+        // 4000 arrivals at 1000 rps ≈ 4 s of virtual time (loose bound)
+        let span_s = *a.last().unwrap() as f64 / 1e9;
+        assert!((3.0..5.0).contains(&span_s), "span {span_s}s");
+    }
+
+    #[test]
+    fn bursty_mixes_two_rates() {
+        let p =
+            ArrivalProcess::Bursty { base_rps: 100.0, burst_rps: 10_000.0, mean_phase_ms: 20.0 };
+        let a = p.times(2000, 42);
+        assert_eq!(a, p.times(2000, 42));
+        assert!(a.windows(2).all(|w| w[1] >= w[0]));
+        // the mean observed rate sits strictly between the two phase
+        // rates (loose — both phases must actually contribute)
+        let span_s = (*a.last().unwrap() - a[0]) as f64 / 1e9;
+        let rate = (a.len() - 1) as f64 / span_s;
+        assert!(rate > 150.0 && rate < 9000.0, "observed rate {rate}");
+        assert!((p.nominal_rps() - 5050.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_replays_and_cycles() {
+        let p = ArrivalProcess::Trace { times_ms: vec![0.0, 1.0, 3.0] };
+        let a = p.times(6, 0);
+        // period = 3.0 + mean gap 1.5 = 4.5 ms
+        let ms: Vec<f64> = a.iter().map(|&t| t as f64 / 1e6).collect();
+        let want = [0.0, 1.0, 3.0, 4.5, 5.5, 7.5];
+        for (got, want) in ms.iter().zip(want) {
+            assert!((got - want).abs() < 1e-6, "{ms:?}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_processes() {
+        assert!(ArrivalProcess::Poisson { rate_rps: 0.0 }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rate_rps: f64::NAN }.validate().is_err());
+        assert!(ArrivalProcess::Bursty { base_rps: 1.0, burst_rps: -1.0, mean_phase_ms: 5.0 }
+            .validate()
+            .is_err());
+        assert!(ArrivalProcess::Bursty { base_rps: 1.0, burst_rps: 2.0, mean_phase_ms: 0.0 }
+            .validate()
+            .is_err());
+        assert!(ArrivalProcess::Trace { times_ms: vec![] }.validate().is_err());
+        assert!(ArrivalProcess::Trace { times_ms: vec![2.0, 1.0] }.validate().is_err());
+        assert!(ArrivalProcess::Poisson { rate_rps: 10.0 }.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_all_kinds() {
+        for p in [
+            ArrivalProcess::Poisson { rate_rps: 500.0 },
+            ArrivalProcess::Bursty { base_rps: 100.0, burst_rps: 2000.0, mean_phase_ms: 25.0 },
+            ArrivalProcess::Trace { times_ms: vec![0.0, 0.5, 2.0] },
+        ] {
+            let back = ArrivalProcess::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+        }
+        assert!(ArrivalProcess::from_json(&json::parse("{\"kind\": \"warp\"}").unwrap()).is_err());
+        assert!(ArrivalProcess::from_json(&json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn scaling_moves_the_nominal_rate() {
+        let p = ArrivalProcess::Poisson { rate_rps: 100.0 };
+        assert!((p.scaled(4.0).nominal_rps() - 400.0).abs() < 1e-9);
+        let t = ArrivalProcess::Trace { times_ms: vec![0.0, 2.0, 4.0] };
+        // halving every gap doubles the rate
+        assert!((t.scaled(2.0).nominal_rps() - 2.0 * t.nominal_rps()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,192 @@
+//! Virtual time for the open-loop serve loop (DESIGN.md §11).
+//!
+//! The serve loop is a deterministic discrete-event simulation: arrival
+//! times, service completions, retries, timeouts and chip outages all
+//! live on one **virtual clock**, measured in integer nanoseconds, that
+//! only advances when the loop pops the next event. Nothing in the loop
+//! ever reads host time, so an entire serve run — outcomes, stats and
+//! event order — is a pure function of the spec and its seeds, and is
+//! replayable bit-exactly on any host and for any worker count (the
+//! worker pool only parallelizes the simulations *inside* one event,
+//! which are themselves schedule-independent by the §8 contract).
+//!
+//! [`EventQueue`] is the matching deterministic priority queue: events
+//! pop in `(time, push-sequence)` order, so simultaneous events resolve
+//! in the order they were scheduled — a total order independent of heap
+//! internals.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual-time instant/duration in nanoseconds.
+pub type VirtualNs = u64;
+
+/// Convert a millisecond quantity (the spec/CLI currency) to virtual
+/// nanoseconds, saturating at 0 below and at ~292 years above so
+/// malformed specs cannot overflow the clock.
+pub fn ms_to_ns(ms: f64) -> VirtualNs {
+    let ns = (ms * 1e6).round();
+    if ns.is_nan() || ns <= 0.0 {
+        return 0;
+    }
+    if ns >= 9.2e18 {
+        return 9_200_000_000_000_000_000;
+    }
+    ns as VirtualNs
+}
+
+/// Virtual nanoseconds back to milliseconds (for reports).
+pub fn ns_to_ms(ns: VirtualNs) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// The monotone virtual clock. Advancing backwards is a logic error in
+/// the event loop (events pop in time order), so it panics loudly
+/// instead of silently reordering history.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VirtualClock {
+    now: VirtualNs,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> VirtualNs {
+        self.now
+    }
+
+    /// Advance to `t` (monotone; equal time is fine — simultaneous
+    /// events share an instant).
+    pub fn advance_to(&mut self, t: VirtualNs) {
+        assert!(t >= self.now, "virtual clock moved backwards: {} -> {}", self.now, t);
+        self.now = t;
+    }
+}
+
+/// One scheduled event: ordered by `(time, seq)` — `seq` is the push
+/// sequence number, so ties break deterministically in schedule order.
+struct Entry<E> {
+    time: VirtualNs,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Deterministic event queue: min-heap on `(time, push-sequence)`.
+/// The payload type needs no ordering of its own.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue::default()
+    }
+
+    /// Schedule `event` at virtual time `time`.
+    pub fn push(&mut self, time: VirtualNs, event: E) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Entry { time, seq, event });
+    }
+
+    /// Pop the earliest event (ties in push order).
+    pub fn pop(&mut self) -> Option<(VirtualNs, E)> {
+        self.heap.pop().map(|e| (e.time, e.event))
+    }
+
+    /// Time of the earliest pending event, without popping it. The
+    /// serve loop uses this to drain every event of the current instant
+    /// before forming batches, so simultaneous arrivals batch together
+    /// instead of dispatching one by one.
+    pub fn peek_time(&self) -> Option<VirtualNs> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order_with_fifo_ties() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a1");
+        q.push(20, "b");
+        q.push(10, "a2");
+        q.push(10, "a3");
+        assert_eq!(q.peek_time(), Some(10));
+        let order: Vec<(VirtualNs, &str)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(q.peek_time(), None);
+        assert_eq!(order, vec![(10, "a1"), (10, "a2"), (10, "a3"), (20, "b"), (30, "c")]);
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn clock_is_monotone() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0);
+        c.advance_to(5);
+        c.advance_to(5); // same instant is fine
+        c.advance_to(9);
+        assert_eq!(c.now(), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "moved backwards")]
+    fn clock_rejects_backwards_time() {
+        let mut c = VirtualClock::new();
+        c.advance_to(10);
+        c.advance_to(9);
+    }
+
+    #[test]
+    fn ms_ns_conversion_is_safe_on_garbage() {
+        assert_eq!(ms_to_ns(1.0), 1_000_000);
+        assert_eq!(ms_to_ns(0.0), 0);
+        assert_eq!(ms_to_ns(-3.0), 0);
+        assert_eq!(ms_to_ns(f64::NAN), 0);
+        assert!(ms_to_ns(f64::INFINITY) > 0);
+        assert!((ns_to_ms(2_500_000) - 2.5).abs() < 1e-12);
+    }
+}

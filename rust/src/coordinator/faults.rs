@@ -1,0 +1,360 @@
+//! Deterministic fault injection for the open-loop serve loop
+//! (DESIGN.md §11).
+//!
+//! The fault taxonomy has three axes, all derived from one fault seed:
+//!
+//! * **transient failures** — an individual simulation attempt fails and
+//!   must be retried (models flaky chip readout / ECC-uncorrectable
+//!   events);
+//! * **latency spikes** — an attempt completes but takes `spike_factor`×
+//!   its nominal service time (models refresh collisions, thermal
+//!   throttling);
+//! * **chip down intervals** — a whole chip goes offline for a window,
+//!   failing its in-flight work and rejoining later (models brown-outs
+//!   and resets).
+//!
+//! Every decision is a pure hash of `(fault_seed, request id, attempt)`
+//! — or, for down windows, a per-chip PRNG stream consumed monotonically
+//! by the single-threaded event loop — so a seeded run injects exactly
+//! the same faults at exactly the same virtual times on every replay,
+//! for any worker count. Faults are *decisions*, not host events: no
+//! wall clock, no OS signals, no shared mutable state.
+
+use crate::json::{num, obj, Value};
+use crate::util::Rng;
+
+use super::clock::{ms_to_ns, VirtualNs};
+
+/// Fault-model parameters. `off()` (all zeros) disables every axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Root seed for every fault decision in the run.
+    pub seed: u64,
+    /// Probability an individual attempt fails transiently, in [0, 1].
+    pub transient_rate: f64,
+    /// Probability an attempt's service time is multiplied by
+    /// `spike_factor`, in [0, 1].
+    pub spike_rate: f64,
+    /// Latency multiplier applied on a spike (>= 1).
+    pub spike_factor: f64,
+    /// Mean virtual uptime between chip outages (ms); 0 disables
+    /// outages.
+    pub down_mean_ms: f64,
+    /// Mean duration of one chip outage (ms).
+    pub down_duration_ms: f64,
+}
+
+impl FaultSpec {
+    /// No faults at all — the loop still exercises deadlines, shedding
+    /// and continuous batching, just on a perfectly healthy fabric.
+    pub fn off() -> FaultSpec {
+        FaultSpec {
+            seed: 0,
+            transient_rate: 0.0,
+            spike_rate: 0.0,
+            spike_factor: 1.0,
+            down_mean_ms: 0.0,
+            down_duration_ms: 0.0,
+        }
+    }
+
+    /// The stock fault mix used by `--faults` and the CI fault leg:
+    /// 2% transient attempt failures, 2% latency spikes at 4×, and a
+    /// ~20 ms outage roughly every 200 ms of uptime per chip.
+    pub fn default_with_seed(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            transient_rate: 0.02,
+            spike_rate: 0.02,
+            spike_factor: 4.0,
+            down_mean_ms: 200.0,
+            down_duration_ms: 20.0,
+        }
+    }
+
+    /// Whether any fault axis is active.
+    pub fn enabled(&self) -> bool {
+        self.transient_rate > 0.0 || self.spike_rate > 0.0 || self.down_mean_ms > 0.0
+    }
+
+    /// `DBPIM_FAULT_SEED=N` turns on the stock fault mix seeded with
+    /// `N` (the CI fault-injection leg sets this); unset or
+    /// unparsable → `None`.
+    pub fn from_env() -> Option<FaultSpec> {
+        let raw = std::env::var("DBPIM_FAULT_SEED").ok()?;
+        let seed = raw.trim().parse::<u64>().ok()?;
+        Some(FaultSpec::default_with_seed(seed))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let unit = |v: f64| (0.0..=1.0).contains(&v); // NaN fails both bounds
+        if !unit(self.transient_rate) {
+            return Err(format!(
+                "faults: transient_rate must be in [0, 1], got {}",
+                self.transient_rate
+            ));
+        }
+        if !unit(self.spike_rate) {
+            return Err(format!("faults: spike_rate must be in [0, 1], got {}", self.spike_rate));
+        }
+        if !(self.spike_factor >= 1.0 && self.spike_factor.is_finite()) {
+            return Err(format!(
+                "faults: spike_factor must be finite and >= 1, got {}",
+                self.spike_factor
+            ));
+        }
+        if !(self.down_mean_ms >= 0.0 && self.down_mean_ms.is_finite()) {
+            return Err(format!(
+                "faults: down_mean_ms must be finite and >= 0, got {}",
+                self.down_mean_ms
+            ));
+        }
+        if self.down_mean_ms > 0.0
+            && !(self.down_duration_ms > 0.0 && self.down_duration_ms.is_finite())
+        {
+            return Err(format!(
+                "faults: down_duration_ms must be finite and > 0 when outages are on, got {}",
+                self.down_duration_ms
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse an optional `"faults"` spec object; every field defaults to
+    /// its `off()` value except `seed` (default 0), so partial objects
+    /// enable only the named axes.
+    pub fn from_json(v: &Value) -> Result<FaultSpec, String> {
+        let base = FaultSpec::off();
+        let f = |key: &str, dflt: f64| -> Result<f64, String> {
+            match v.get(key) {
+                None => Ok(dflt),
+                Some(x) => {
+                    x.as_f64().ok_or_else(|| format!("faults: \"{key}\" must be a number"))
+                }
+            }
+        };
+        let seed = match v.get("seed") {
+            None => 0,
+            Some(x) => x
+                .as_usize()
+                .ok_or_else(|| "faults: \"seed\" must be a non-negative integer".to_string())?
+                as u64,
+        };
+        let spec = FaultSpec {
+            seed,
+            transient_rate: f("transient_rate", base.transient_rate)?,
+            spike_rate: f("spike_rate", base.spike_rate)?,
+            spike_factor: f("spike_factor", base.spike_factor)?,
+            down_mean_ms: f("down_mean_ms", base.down_mean_ms)?,
+            down_duration_ms: f("down_duration_ms", base.down_duration_ms)?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("seed", num(self.seed as f64)),
+            ("transient_rate", num(self.transient_rate)),
+            ("spike_rate", num(self.spike_rate)),
+            ("spike_factor", num(self.spike_factor)),
+            ("down_mean_ms", num(self.down_mean_ms)),
+            ("down_duration_ms", num(self.down_duration_ms)),
+        ])
+    }
+}
+
+/// Decision tags keep the per-(request, attempt) hash streams for the
+/// three pure decisions independent of each other.
+const TAG_TRANSIENT: u64 = 0x7A11_5EED_0000_0001;
+const TAG_SPIKE: u64 = 0x7A11_5EED_0000_0002;
+const TAG_JITTER: u64 = 0x7A11_5EED_0000_0003;
+
+/// Stateless fault decisions plus the per-chip outage streams. One
+/// injector lives inside one serve-loop run; the loop queries it from a
+/// single thread in event order, which makes the outage streams (the
+/// only stateful part) deterministic too.
+pub struct FaultInjector {
+    spec: FaultSpec,
+    /// Per-chip PRNG streams for outage windows, consumed monotonically.
+    chip_rngs: Vec<Rng>,
+}
+
+/// One decision hash: a fresh SplitMix64 stream keyed by
+/// `(seed, tag, request, attempt)`. One draw, then discarded — there is
+/// no sequence to keep in sync across replays.
+fn decide(seed: u64, tag: u64, req: u64, attempt: u64) -> u64 {
+    Rng::new(
+        seed ^ tag
+            ^ req.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ attempt.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    )
+    .next_u64()
+}
+
+/// Map a hash to a uniform f64 in [0, 1).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec, chips: usize) -> FaultInjector {
+        let chip_rngs = (0..chips)
+            .map(|c| {
+                Rng::new(spec.seed ^ 0xC41F_D0D0 ^ (c as u64).wrapping_mul(0xFF51_AFD7_ED55_8CCD))
+            })
+            .collect();
+        FaultInjector { spec, chip_rngs }
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Does attempt number `attempt` (1-based) of request `req` fail
+    /// transiently? Pure in `(spec.seed, req, attempt)`.
+    pub fn attempt_fails(&self, req: u64, attempt: u64) -> bool {
+        self.spec.transient_rate > 0.0
+            && unit(decide(self.spec.seed, TAG_TRANSIENT, req, attempt)) < self.spec.transient_rate
+    }
+
+    /// Service-time multiplier for this attempt (1.0 nominally,
+    /// `spike_factor` on a latency spike). Pure.
+    pub fn latency_factor(&self, req: u64, attempt: u64) -> f64 {
+        if self.spec.spike_rate > 0.0
+            && unit(decide(self.spec.seed, TAG_SPIKE, req, attempt)) < self.spec.spike_rate
+        {
+            self.spec.spike_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Deterministic backoff jitter in [1, 2): full exponential backoff
+    /// windows double on every retry, and the jitter decorrelates
+    /// retry storms without breaking replay. Pure.
+    pub fn backoff_jitter(&self, req: u64, attempt: u64) -> f64 {
+        1.0 + unit(decide(self.spec.seed, TAG_JITTER, req, attempt))
+    }
+
+    /// Next `(down_at, up_at)` outage window for `chip`, strictly after
+    /// `after`. Draws exponential uptime/downtime from the chip's own
+    /// stream; `None` when outages are disabled. Must be called in
+    /// non-decreasing `after` order per chip (the event loop does —
+    /// it asks only when scheduling the chip's next outage).
+    pub fn next_down_window(
+        &mut self,
+        chip: usize,
+        after: VirtualNs,
+    ) -> Option<(VirtualNs, VirtualNs)> {
+        if self.spec.down_mean_ms <= 0.0 || chip >= self.chip_rngs.len() {
+            return None;
+        }
+        let rng = &mut self.chip_rngs[chip];
+        let up_ms = -(1.0 - rng.f64()).ln() * self.spec.down_mean_ms;
+        let down_ms = -(1.0 - rng.f64()).ln() * self.spec.down_duration_ms;
+        let down_at = after.saturating_add(ms_to_ns(up_ms).max(1));
+        let up_at = down_at.saturating_add(ms_to_ns(down_ms).max(1));
+        Some((down_at, up_at))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_and_seeded() {
+        let a = FaultInjector::new(FaultSpec::default_with_seed(7), 2);
+        let b = FaultInjector::new(FaultSpec::default_with_seed(7), 2);
+        for req in 0..200u64 {
+            for attempt in 1..4u64 {
+                assert_eq!(a.attempt_fails(req, attempt), b.attempt_fails(req, attempt));
+                assert_eq!(a.latency_factor(req, attempt), b.latency_factor(req, attempt));
+                assert_eq!(a.backoff_jitter(req, attempt), b.backoff_jitter(req, attempt));
+                assert!(a.latency_factor(req, attempt) >= 1.0);
+                let j = a.backoff_jitter(req, attempt);
+                assert!((1.0..2.0).contains(&j));
+            }
+        }
+        // a different seed flips at least some decisions
+        let c = FaultInjector::new(FaultSpec::default_with_seed(8), 2);
+        let flips = (0..2000u64)
+            .filter(|&r| a.attempt_fails(r, 1) != c.attempt_fails(r, 1))
+            .count();
+        assert!(flips > 0, "seed must matter");
+    }
+
+    #[test]
+    fn transient_rate_is_roughly_respected() {
+        let spec = FaultSpec { transient_rate: 0.25, ..FaultSpec::off() };
+        let inj = FaultInjector::new(FaultSpec { seed: 3, ..spec }, 1);
+        let n = 20_000u64;
+        let fails = (0..n).filter(|&r| inj.attempt_fails(r, 1)).count() as f64 / n as f64;
+        assert!((fails - 0.25).abs() < 0.02, "observed transient rate {fails}");
+    }
+
+    #[test]
+    fn off_spec_injects_nothing() {
+        let mut inj = FaultInjector::new(FaultSpec::off(), 4);
+        for req in 0..500u64 {
+            assert!(!inj.attempt_fails(req, 1));
+            assert_eq!(inj.latency_factor(req, 1), 1.0);
+        }
+        assert!(inj.next_down_window(0, 0).is_none());
+        assert!(!FaultSpec::off().enabled());
+        assert!(FaultSpec::default_with_seed(1).enabled());
+    }
+
+    #[test]
+    fn down_windows_are_ordered_and_per_chip_deterministic() {
+        let mut a = FaultInjector::new(FaultSpec::default_with_seed(11), 2);
+        let mut b = FaultInjector::new(FaultSpec::default_with_seed(11), 2);
+        let mut after = 0;
+        for _ in 0..50 {
+            let (d0, u0) = a.next_down_window(0, after).unwrap();
+            assert_eq!((d0, u0), b.next_down_window(0, after).unwrap());
+            assert!(d0 > after && u0 > d0, "windows must be ordered");
+            after = u0;
+        }
+        // chip streams are independent: chip 1 differs from chip 0
+        let w0 = FaultInjector::new(FaultSpec::default_with_seed(11), 2)
+            .next_down_window(0, 0)
+            .unwrap();
+        let w1 = FaultInjector::new(FaultSpec::default_with_seed(11), 2)
+            .next_down_window(1, 0)
+            .unwrap();
+        assert_ne!(w0, w1);
+    }
+
+    #[test]
+    fn validate_rejects_garbage() {
+        let ok = FaultSpec::default_with_seed(1);
+        assert!(ok.validate().is_ok());
+        assert!(FaultSpec { transient_rate: 1.5, ..ok }.validate().is_err());
+        assert!(FaultSpec { transient_rate: f64::NAN, ..ok }.validate().is_err());
+        assert!(FaultSpec { spike_rate: -0.1, ..ok }.validate().is_err());
+        assert!(FaultSpec { spike_factor: 0.5, ..ok }.validate().is_err());
+        assert!(FaultSpec { down_mean_ms: -1.0, ..ok }.validate().is_err());
+        assert!(FaultSpec { down_duration_ms: 0.0, ..ok }.validate().is_err());
+        // outages off → duration irrelevant
+        assert!(FaultSpec { down_mean_ms: 0.0, down_duration_ms: 0.0, ..ok }.validate().is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_and_partial_defaults() {
+        let spec = FaultSpec::default_with_seed(9);
+        let back = FaultSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // partial: only transients on
+        let v = crate::json::parse(r#"{"seed": 3, "transient_rate": 0.1}"#).unwrap();
+        let p = FaultSpec::from_json(&v).unwrap();
+        assert_eq!(p.seed, 3);
+        assert_eq!(p.transient_rate, 0.1);
+        assert_eq!(p.spike_rate, 0.0);
+        assert_eq!(p.down_mean_ms, 0.0);
+        let bad = crate::json::parse(r#"{"transient_rate": 2.0}"#).unwrap();
+        assert!(FaultSpec::from_json(&bad).is_err());
+        assert!(FaultSpec::from_json(&crate::json::parse(r#"{"seed": -1}"#).unwrap()).is_err());
+    }
+}

@@ -3,7 +3,10 @@
 //! declarative experiment drivers ([`experiments`]) that regenerate the
 //! paper's figures/tables on top of it, and the batched multi-tenant
 //! serving frontend ([`serve`]) that replays request traffic over the
-//! same pool and caches.
+//! same pool and caches. The open-loop regime lives in [`serve_loop`]
+//! (continuous batching on a virtual clock — [`clock`] — under seeded
+//! arrivals — [`arrivals`] — with deterministic fault injection —
+//! [`faults`]; DESIGN.md §11).
 //!
 //! (The offline image has no tokio/rayon; [`pool`] is std threads with
 //! a global injector + per-worker deques. Nested `scope()`s execute or
@@ -11,9 +14,13 @@
 //! segment parallelism composes without oversubscription — DESIGN.md
 //! §5/§8.)
 
+pub mod arrivals;
+pub mod clock;
 pub mod experiments;
+pub mod faults;
 pub mod pool;
 pub mod serve;
+pub mod serve_loop;
 
 /// Default worker count (leave headroom for the OS).
 pub fn default_workers() -> usize {

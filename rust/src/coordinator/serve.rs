@@ -51,7 +51,7 @@ use super::pool;
 /// One admitted request: which deployed model to run, under which arch
 /// preset and precision/sparsity configuration, on which activation
 /// seed. Replay traces are lists of these (see [`ServeSpec::from_json`]).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeRequest {
     /// Model id — must be registered in the spec's `models` list.
     pub model: String,
@@ -78,17 +78,17 @@ pub struct ServeSpec {
 /// per-layer `CompileKey`s, so a batch shares one compiled `Program`
 /// and one `SimCache` entry per layer.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-struct BatchKey {
-    model: String,
-    arch: String,
+pub(crate) struct BatchKey {
+    pub(crate) model: String,
+    pub(crate) arch: String,
     /// `SparsityConfig::value_sparsity` as raw bits (f64 is not `Hash`).
-    value_bits: u64,
-    fta: bool,
-    seed: u64,
+    pub(crate) value_bits: u64,
+    pub(crate) fta: bool,
+    pub(crate) seed: u64,
 }
 
 impl BatchKey {
-    fn of(r: &ServeRequest) -> BatchKey {
+    pub(crate) fn of(r: &ServeRequest) -> BatchKey {
         BatchKey {
             model: r.model.clone(),
             arch: r.arch.clone(),
@@ -174,8 +174,9 @@ pub struct ServeStats {
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice; `q` in
-/// (0, 100].
-fn percentile(sorted: &[f64], q: f64) -> f64 {
+/// (0, 100]. Empty input yields 0 (an empty trace has well-defined
+/// all-zero stats, not NaN).
+pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
@@ -184,7 +185,7 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
 }
 
 impl ServeRequest {
-    fn from_json(i: usize, v: &Value) -> Result<ServeRequest, String> {
+    pub(crate) fn from_json(i: usize, v: &Value) -> Result<ServeRequest, String> {
         let model = v
             .get("model")
             .and_then(Value::as_str)
@@ -233,7 +234,7 @@ impl ServeRequest {
         Ok(ServeRequest { model, arch, sparsity: SparsityConfig { value_sparsity, fta }, seed })
     }
 
-    fn to_json(&self) -> Value {
+    pub(crate) fn to_json(&self) -> Value {
         obj(vec![
             ("model", str_(&self.model)),
             ("arch", str_(&self.arch)),
@@ -261,14 +262,24 @@ impl ServeSpec {
                     .ok_or_else(|| format!("trace: models[{i}] must be a string"))
             })
             .collect::<Result<Vec<_>, _>>()?;
-        let traffic = v
+        // Collect every invalid request in one pass: a trace with
+        // three bad rows reports all three indices at once instead of
+        // making the user fix-and-rerun three times.
+        let raw = v
             .get("traffic")
             .and_then(Value::as_arr)
-            .ok_or_else(|| "trace: missing \"traffic\" array".to_string())?
-            .iter()
-            .enumerate()
-            .map(|(i, r)| ServeRequest::from_json(i, r))
-            .collect::<Result<Vec<_>, _>>()?;
+            .ok_or_else(|| "trace: missing \"traffic\" array".to_string())?;
+        let mut traffic = Vec::with_capacity(raw.len());
+        let mut errs: Vec<String> = Vec::new();
+        for (i, r) in raw.iter().enumerate() {
+            match ServeRequest::from_json(i, r) {
+                Ok(req) => traffic.push(req),
+                Err(e) => errs.push(e),
+            }
+        }
+        if !errs.is_empty() {
+            return Err(errs.join("; "));
+        }
         Ok(ServeSpec { models, traffic })
     }
 
@@ -279,11 +290,12 @@ impl ServeSpec {
         ])
     }
 
-    /// Load a replayable trace from a JSON file.
+    /// Load a replayable trace from a JSON file. Every error names the
+    /// file, including per-request validation errors.
     pub fn load(path: &str) -> Result<ServeSpec, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         let v = json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
-        ServeSpec::from_json(&v)
+        ServeSpec::from_json(&v).map_err(|e| format!("{path}: {e}"))
     }
 
     /// Replay the trace with a fresh [`ServeCtx`] over the spec's own
@@ -305,17 +317,20 @@ impl ServeSpec {
         // Admission control: resolve every request before running any
         // (also for programmatically built specs that skipped the JSON
         // validation — an out-of-domain sparsity would otherwise panic
-        // deep inside a pool worker).
+        // deep inside a pool worker). All invalid indices are reported
+        // in one error.
+        let mut errs: Vec<String> = Vec::new();
         for (i, r) in self.traffic.iter().enumerate() {
             if ctx.registry.get(&r.model).is_none() {
-                return Err(format!("request {i}: model {:?} is not deployed", r.model));
+                errs.push(format!("request {i}: model {:?} is not deployed", r.model));
+            } else if ArchConfig::by_name(&r.arch).is_none() {
+                errs.push(format!("request {i}: unknown arch preset {:?}", r.arch));
+            } else if !(0.0..1.0).contains(&r.sparsity.value_sparsity) {
+                errs.push(format!("request {i}: value sparsity must be in [0.0, 1.0)"));
             }
-            if ArchConfig::by_name(&r.arch).is_none() {
-                return Err(format!("request {i}: unknown arch preset {:?}", r.arch));
-            }
-            if !(0.0..1.0).contains(&r.sparsity.value_sparsity) {
-                return Err(format!("request {i}: value sparsity must be in [0.0, 1.0)"));
-            }
+        }
+        if !errs.is_empty() {
+            return Err(errs.join("; "));
         }
         let t0 = Instant::now();
         let batches = plan_batches(&self.traffic, max_batch);
@@ -516,6 +531,65 @@ mod tests {
         // repeats exist by construction, so batching actually groups
         let batches = plan_batches(&spec.traffic, 8);
         assert!(batches.len() < spec.traffic.len(), "example trace should batch");
+    }
+
+    #[test]
+    fn empty_trace_yields_well_defined_zero_stats() {
+        let spec = ServeSpec { models: vec!["small".into()], traffic: vec![] };
+        let ctx = ServeCtx::new(Registry::from_networks(vec![small_net()]));
+        let (results, stats) = spec.run_with(&ctx, 4).unwrap();
+        assert!(results.is_empty());
+        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.batches, 0);
+        assert!(stats.latencies_ms.is_empty());
+        // no NaN / division-by-zero artifacts anywhere
+        assert_eq!(stats.mean_ms, 0.0);
+        assert_eq!(stats.p50_ms, 0.0);
+        assert_eq!(stats.p99_ms, 0.0);
+        assert!(stats.req_per_s.is_finite() && stats.req_per_s >= 0.0);
+    }
+
+    #[test]
+    fn trace_validation_reports_all_invalid_indices() {
+        let text = r#"{
+            "models": [],
+            "traffic": [
+                {"model": "resnet18", "seed": -1},
+                {"model": "resnet18", "seed": 1},
+                {"model": "resnet18", "arch": "warp", "seed": 2}
+            ]
+        }"#;
+        let err = ServeSpec::from_json(&json::parse(text).unwrap()).unwrap_err();
+        assert!(err.contains("request 0"), "{err}");
+        assert!(err.contains("request 2"), "{err}");
+        assert!(!err.contains("request 1"), "{err}");
+
+        // run_with does the same for programmatically built specs
+        let spec = ServeSpec {
+            models: vec!["small".into()],
+            traffic: vec![
+                req("ghost", "db-pim", 0.5, 1),
+                req("small", "db-pim", 0.5, 1),
+                req("small", "warp", 0.5, 1),
+            ],
+        };
+        let ctx = ServeCtx::new(Registry::from_networks(vec![small_net()]));
+        let err = spec.run_with(&ctx, 4).unwrap_err();
+        assert!(err.contains("request 0") && err.contains("request 2"), "{err}");
+    }
+
+    #[test]
+    fn load_error_names_the_file() {
+        let err = ServeSpec::load("/nonexistent/trace.json").unwrap_err();
+        assert!(err.contains("/nonexistent/trace.json"), "{err}");
+        // validation errors name the file too
+        let dir = std::env::temp_dir();
+        let path = dir.join("dbpim_bad_trace_test.json");
+        std::fs::write(&path, r#"{"models": [], "traffic": [{"seed": 1}]}"#).unwrap();
+        let err = ServeSpec::load(path.to_str().unwrap()).unwrap_err();
+        assert!(err.contains("dbpim_bad_trace_test.json"), "{err}");
+        assert!(err.contains("request 0"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,1020 @@
+//! Open-loop continuous-batching serve loop with fault injection
+//! (DESIGN.md §11).
+//!
+//! PR 5's [`super::serve`] replays a *closed-loop* trace: it plans all
+//! batches up front and reports latency as if requests waited for each
+//! other. This module is the open-loop counterpart — a long-running
+//! deterministic admission loop driven by a seeded arrival process
+//! ([`super::arrivals`]) on a virtual clock ([`super::clock`]), hardened
+//! with an explicit fault model ([`super::faults`]):
+//!
+//! * **Bounded admission queue with load shedding** — when the queue is
+//!   full, arriving (or retrying) requests get a typed
+//!   [`Outcome::Shed`], never a panic and never unbounded memory.
+//! * **Deadlines and EDF batch formation** — every request carries a
+//!   relative deadline; the batcher always serves the earliest-deadline
+//!   queued request next and fills the rest of the batch with
+//!   compatible (same [`BatchKey`]) requests in deadline order.
+//! * **Continuous batching** — chips are `max_batch`-lane servers;
+//!   whenever lanes free up (a member finishes) the batcher immediately
+//!   re-forms a batch from whatever is queued *now*, instead of waiting
+//!   for the slowest member of a pre-planned batch. All events at one
+//!   virtual instant are drained before batch formation, so
+//!   simultaneous arrivals/completions batch together.
+//! * **Faults, retries, timeouts** — transient attempt failures and
+//!   latency spikes (per-attempt, hash-seeded) and whole-chip down
+//!   intervals (per-chip seeded streams) are injected deterministically;
+//!   the loop answers with bounded retries under full exponential
+//!   backoff + deterministic jitter, per-request timeouts, and typed
+//!   terminal outcomes ([`Outcome::Failed`] / [`Outcome::TimedOut`]).
+//!
+//! The loop itself is single-threaded discrete-event simulation; the
+//! worker pool only parallelizes the `sim::simulate_batch` calls inside
+//! one event, which are bit-identical for any worker count (DESIGN.md
+//! §8). Hence an entire open-loop run — per-request outcomes, stats,
+//! and the event log — is a pure function of the spec, replayable
+//! bit-exactly anywhere (pinned by
+//! `prop_open_loop_deterministic_across_worker_counts`).
+
+use std::time::{Duration, Instant};
+
+use crate::arch::ArchConfig;
+use crate::compiler::SparsityConfig;
+use crate::json::{self, arr, num, obj, str_, Value};
+use crate::models::Registry;
+use crate::sim;
+use crate::util::{self, Rng};
+
+use super::arrivals::ArrivalProcess;
+use super::clock::{ms_to_ns, ns_to_ms, EventQueue, VirtualClock, VirtualNs};
+use super::experiments::SweepStats;
+use super::faults::{FaultInjector, FaultSpec};
+use super::serve::{percentile, BatchKey, ServeCtx, ServeRequest};
+
+/// Terminal outcome of one open-loop request. Every request gets
+/// exactly one; nothing in the loop panics on overload or faults.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed. `latency_ns` is virtual sojourn time (arrival →
+    /// completion); `deadline_met` is the SLO bit.
+    Done { latency_ns: VirtualNs, attempts: u32, deadline_met: bool },
+    /// Rejected because the admission queue was full (at arrival:
+    /// `attempts == 0`; on a retry re-entry: the attempts so far).
+    Shed { attempts: u32 },
+    /// Exceeded its per-request timeout before completing.
+    TimedOut { attempts: u32 },
+    /// Exhausted the retry budget on injected failures
+    /// (`attempts == max_retries + 1`).
+    Failed { attempts: u32 },
+}
+
+/// One request's identity plus its terminal outcome, in admission-id
+/// order. `PartialEq`/`Eq` so replays can be compared wholesale.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestOutcome {
+    /// Arrival index (also the fault-decision key).
+    pub id: usize,
+    pub model: String,
+    pub arrival_ns: VirtualNs,
+    pub outcome: Outcome,
+}
+
+/// A replayable open-loop serving workload: deployment + workload
+/// templates + arrival process + loop/fault parameters. Entirely
+/// seed-determined — same spec, same run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpenLoopSpec {
+    /// Deployed model set (zoo names for [`OpenLoopSpec::run`]).
+    pub models: Vec<String>,
+    /// Request templates; each arrival is assigned one template by a
+    /// seeded hash of its index.
+    pub workload: Vec<ServeRequest>,
+    pub arrivals: ArrivalProcess,
+    /// Number of arrivals to draw from the process.
+    pub requests: usize,
+    /// Admission-queue bound; arrivals beyond it are shed.
+    pub queue_cap: usize,
+    /// Relative SLO deadline per request (ms of virtual time).
+    pub deadline_ms: f64,
+    /// Hard per-request timeout (ms of virtual time, >= deadline).
+    pub timeout_ms: f64,
+    /// Lanes per chip — the continuous batcher's batch-size cap.
+    pub max_batch: usize,
+    /// Number of `max_batch`-lane chips.
+    pub chips: usize,
+    /// Retry budget per request (total attempts = max_retries + 1).
+    pub max_retries: u32,
+    /// Base backoff (ms); attempt `n` backs off
+    /// `backoff_ms * 2^(n-1) * jitter`, jitter in [1, 2).
+    pub backoff_ms: f64,
+    /// Root seed: arrival times and template assignment.
+    pub seed: u64,
+    pub faults: FaultSpec,
+    /// Record a human-readable event log in `LoopStats::events`
+    /// (replay debugging and the event-order property test).
+    pub trace_events: bool,
+}
+
+/// Summary of one open-loop run. Every field except `wall` (host time)
+/// and `cache.{compile,sim}.dup_computes` (benign scheduling races,
+/// DESIGN.md §8) is deterministic in the spec.
+#[derive(Debug, Clone)]
+pub struct LoopStats {
+    /// Total arrivals drawn (= spec.requests).
+    pub offered: usize,
+    /// Arrivals that entered the queue (offered - shed-at-admission).
+    pub admitted: usize,
+    pub done: usize,
+    pub shed: usize,
+    pub failed: usize,
+    pub timed_out: usize,
+    /// Completions that met their deadline (the SLO numerator).
+    pub deadline_met: usize,
+    /// Retry attempts scheduled (backoff re-entries).
+    pub retries: u64,
+    /// Batches dispatched (continuous batching re-forms these live).
+    pub batches: usize,
+    pub peak_queue: usize,
+    /// Offered load (nominal arrival rate, requests/s).
+    pub offered_rps: f64,
+    /// Deadline-met completions per virtual second.
+    pub goodput_rps: f64,
+    /// deadline_met / offered, in [0, 1] (0 for an empty run).
+    pub slo_attainment: f64,
+    /// Virtual time of the last terminal outcome (ms).
+    pub makespan_ms: f64,
+    /// Virtual sojourn latency of completed requests (ms).
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Host wall-clock of the run (not deterministic).
+    pub wall: Duration,
+    pub cache: SweepStats,
+    /// Event log (empty unless `trace_events`): one line per event in
+    /// deterministic virtual-time order.
+    pub events: Vec<String>,
+}
+
+/// Seeded template assignment for arrival `i` — a one-shot hash stream,
+/// independent of every other arrival.
+fn pick_template(seed: u64, i: usize, n: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    Rng::new(seed ^ 0x5EED_7E3A_11AD_0001 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .below(n as u64) as usize
+}
+
+impl OpenLoopSpec {
+    /// Reject every invalid parameter and workload index in one error
+    /// (same all-indices policy as `ServeSpec`).
+    pub fn validate(&self) -> Result<(), String> {
+        self.arrivals.validate()?;
+        self.faults.validate()?;
+        let mut errs: Vec<String> = Vec::new();
+        if self.requests > 0 && self.workload.is_empty() {
+            errs.push("open-loop spec: empty workload with requests > 0".to_string());
+        }
+        let pos = |v: f64| v.is_finite() && v > 0.0;
+        if !pos(self.deadline_ms) {
+            errs.push(format!(
+                "open-loop spec: deadline_ms must be finite and > 0, got {}",
+                self.deadline_ms
+            ));
+        }
+        if !pos(self.timeout_ms) {
+            errs.push(format!(
+                "open-loop spec: timeout_ms must be finite and > 0, got {}",
+                self.timeout_ms
+            ));
+        }
+        if !pos(self.backoff_ms) {
+            errs.push(format!(
+                "open-loop spec: backoff_ms must be finite and > 0, got {}",
+                self.backoff_ms
+            ));
+        }
+        if self.chips == 0 {
+            errs.push("open-loop spec: chips must be >= 1".to_string());
+        }
+        if self.queue_cap == 0 {
+            errs.push("open-loop spec: queue_cap must be >= 1".to_string());
+        }
+        if self.max_batch == 0 {
+            errs.push("open-loop spec: max_batch must be >= 1".to_string());
+        }
+        for (i, r) in self.workload.iter().enumerate() {
+            if !self.models.iter().any(|m| m == &r.model) {
+                errs.push(format!("workload {i}: model {:?} is not in \"models\"", r.model));
+            }
+            if ArchConfig::by_name(&r.arch).is_none() {
+                errs.push(format!("workload {i}: unknown arch preset {:?}", r.arch));
+            }
+            if !(0.0..1.0).contains(&r.sparsity.value_sparsity) {
+                errs.push(format!("workload {i}: value sparsity must be in [0.0, 1.0)"));
+            }
+        }
+        if errs.is_empty() { Ok(()) } else { Err(errs.join("; ")) }
+    }
+
+    /// Parse an open-loop spec. Required: `models`, `workload`,
+    /// `arrivals`. Everything else defaults to the stock loop
+    /// parameters (see field docs).
+    pub fn from_json(v: &Value) -> Result<OpenLoopSpec, String> {
+        let models = v
+            .get("models")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "open-loop spec: missing \"models\" array".to_string())?
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                m.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("open-loop spec: models[{i}] must be a string"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let raw = v
+            .get("workload")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| "open-loop spec: missing \"workload\" array".to_string())?;
+        let mut workload = Vec::with_capacity(raw.len());
+        let mut errs: Vec<String> = Vec::new();
+        for (i, r) in raw.iter().enumerate() {
+            match ServeRequest::from_json(i, r) {
+                Ok(t) => workload.push(t),
+                Err(e) => errs.push(format!("workload {e}")),
+            }
+        }
+        if !errs.is_empty() {
+            return Err(errs.join("; "));
+        }
+        let arrivals = ArrivalProcess::from_json(
+            v.get("arrivals")
+                .ok_or_else(|| "open-loop spec: missing \"arrivals\" object".to_string())?,
+        )?;
+        let faults = match v.get("faults") {
+            None => FaultSpec::off(),
+            Some(f) => FaultSpec::from_json(f)?,
+        };
+        let u = |key: &str, dflt: usize| -> Result<usize, String> {
+            match v.get(key) {
+                None => Ok(dflt),
+                Some(x) => x.as_usize().ok_or_else(|| {
+                    format!("open-loop spec: \"{key}\" must be a non-negative integer")
+                }),
+            }
+        };
+        let f = |key: &str, dflt: f64| -> Result<f64, String> {
+            match v.get(key) {
+                None => Ok(dflt),
+                Some(x) => {
+                    x.as_f64().ok_or_else(|| format!("open-loop spec: \"{key}\" must be a number"))
+                }
+            }
+        };
+        let deadline_ms = f("deadline_ms", 50.0)?;
+        let spec = OpenLoopSpec {
+            models,
+            workload,
+            arrivals,
+            requests: u("requests", 32)?,
+            queue_cap: u("queue_cap", 64)?,
+            deadline_ms,
+            timeout_ms: f("timeout_ms", 4.0 * deadline_ms)?,
+            max_batch: u("max_batch", 8)?,
+            chips: u("chips", 2)?,
+            max_retries: u32::try_from(u("max_retries", 3)?)
+                .map_err(|_| "open-loop spec: \"max_retries\" too large".to_string())?,
+            backoff_ms: f("backoff_ms", 1.0)?,
+            seed: u("seed", 42)? as u64,
+            faults,
+            trace_events: false,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("models", arr(self.models.iter().map(|m| str_(m)).collect())),
+            ("workload", arr(self.workload.iter().map(ServeRequest::to_json).collect())),
+            ("arrivals", self.arrivals.to_json()),
+            ("requests", num(self.requests as f64)),
+            ("queue_cap", num(self.queue_cap as f64)),
+            ("deadline_ms", num(self.deadline_ms)),
+            ("timeout_ms", num(self.timeout_ms)),
+            ("max_batch", num(self.max_batch as f64)),
+            ("chips", num(self.chips as f64)),
+            ("max_retries", num(self.max_retries as f64)),
+            ("backoff_ms", num(self.backoff_ms)),
+            ("seed", num(self.seed as f64)),
+            ("faults", self.faults.to_json()),
+        ])
+    }
+
+    /// Load a spec from a JSON file; every error names the file.
+    pub fn load(path: &str) -> Result<OpenLoopSpec, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let v = json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?;
+        OpenLoopSpec::from_json(&v).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Run with a fresh [`ServeCtx`] over the spec's model list (zoo
+    /// lookup). See [`OpenLoopSpec::run_with`].
+    pub fn run(&self) -> Result<(Vec<RequestOutcome>, LoopStats), String> {
+        let ctx = ServeCtx::new(Registry::from_names(&self.models)?);
+        self.run_with(&ctx)
+    }
+
+    /// Run the open-loop serve loop through an existing serving
+    /// context. Deterministic in the spec for any worker count.
+    pub fn run_with(&self, ctx: &ServeCtx) -> Result<(Vec<RequestOutcome>, LoopStats), String> {
+        self.validate()?;
+        let mut errs: Vec<String> = Vec::new();
+        for (i, r) in self.workload.iter().enumerate() {
+            if ctx.registry.get(&r.model).is_none() {
+                errs.push(format!("workload {i}: model {:?} is not deployed", r.model));
+            }
+        }
+        if !errs.is_empty() {
+            return Err(errs.join("; "));
+        }
+        Ok(Runner::new(self, ctx).run())
+    }
+
+    /// Sweep offered load by scaling the arrival process by each factor
+    /// and re-running the loop over one shared context (warm caches —
+    /// exactly how a long-lived deployment would see the sweep).
+    pub fn rate_sweep_with(
+        &self,
+        ctx: &ServeCtx,
+        factors: &[f64],
+    ) -> Result<Vec<(f64, LoopStats)>, String> {
+        let mut out = Vec::with_capacity(factors.len());
+        for &factor in factors {
+            let mut point = self.clone();
+            point.arrivals = self.arrivals.scaled(factor);
+            let (_, stats) = point.run_with(ctx)?;
+            out.push((factor, stats));
+        }
+        Ok(out)
+    }
+
+    /// [`OpenLoopSpec::rate_sweep_with`] over a fresh context.
+    pub fn rate_sweep(&self, factors: &[f64]) -> Result<Vec<(f64, LoopStats)>, String> {
+        let ctx = ServeCtx::new(Registry::from_names(&self.models)?);
+        self.rate_sweep_with(&ctx, factors)
+    }
+}
+
+/// Request lifecycle. `Pending` → (`Queued` ⇄ `InFlight` ⇄
+/// `BackingOff`) → `Terminal`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RState {
+    Pending,
+    Queued,
+    InFlight,
+    BackingOff,
+    Terminal,
+}
+
+struct Req {
+    template: usize,
+    arrival_ns: VirtualNs,
+    deadline_at: VirtualNs,
+    timeout_at: VirtualNs,
+    attempts: u32,
+    state: RState,
+}
+
+/// One simulated chip: a `max_batch`-lane server that can be down.
+/// `epoch` invalidates in-flight completions across an outage.
+struct Chip {
+    down: bool,
+    epoch: u64,
+    busy: usize,
+    inflight: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    Arrive(usize),
+    Finish { chip: usize, epoch: u64, req: usize, attempt: u32, ok: bool },
+    Timeout(usize),
+    Retry(usize),
+    ChipDown { chip: usize, up_at: VirtualNs },
+    ChipUp(usize),
+}
+
+struct Runner<'a> {
+    spec: &'a OpenLoopSpec,
+    ctx: &'a ServeCtx,
+    keys: Vec<BatchKey>,
+    clock: VirtualClock,
+    events: EventQueue<Ev>,
+    reqs: Vec<Req>,
+    /// Admission queue (request ids); EDF selection scans it, so order
+    /// here is arrival order and does not matter for results.
+    queue: Vec<usize>,
+    chips: Vec<Chip>,
+    inj: FaultInjector,
+    outcomes: Vec<Option<Outcome>>,
+    done_count: usize,
+    admitted: usize,
+    retries: u64,
+    batches: usize,
+    peak_queue: usize,
+    log: Vec<String>,
+}
+
+impl<'a> Runner<'a> {
+    fn new(spec: &'a OpenLoopSpec, ctx: &'a ServeCtx) -> Runner<'a> {
+        let arrivals = spec.arrivals.times(spec.requests, spec.seed);
+        let deadline = ms_to_ns(spec.deadline_ms).max(1);
+        let timeout = ms_to_ns(spec.timeout_ms).max(1);
+        let mut events = EventQueue::new();
+        let mut reqs = Vec::with_capacity(spec.requests);
+        for (i, &t) in arrivals.iter().enumerate() {
+            reqs.push(Req {
+                template: pick_template(spec.seed, i, spec.workload.len()),
+                arrival_ns: t,
+                deadline_at: t.saturating_add(deadline),
+                timeout_at: t.saturating_add(timeout),
+                attempts: 0,
+                state: RState::Pending,
+            });
+            events.push(t, Ev::Arrive(i));
+        }
+        let mut inj = FaultInjector::new(spec.faults, spec.chips);
+        let chips = (0..spec.chips)
+            .map(|c| {
+                if let Some((down_at, up_at)) = inj.next_down_window(c, 0) {
+                    events.push(down_at, Ev::ChipDown { chip: c, up_at });
+                }
+                Chip { down: false, epoch: 0, busy: 0, inflight: Vec::new() }
+            })
+            .collect();
+        Runner {
+            spec,
+            ctx,
+            keys: spec.workload.iter().map(BatchKey::of).collect(),
+            clock: VirtualClock::new(),
+            events,
+            outcomes: vec![None; spec.requests],
+            reqs,
+            queue: Vec::new(),
+            chips,
+            inj,
+            done_count: 0,
+            admitted: 0,
+            retries: 0,
+            batches: 0,
+            peak_queue: 0,
+            log: Vec::new(),
+        }
+    }
+
+    fn trace(&mut self, msg: impl FnOnce() -> String) {
+        if self.spec.trace_events {
+            let line = format!("t={}ns {}", self.clock.now(), msg());
+            self.log.push(line);
+        }
+    }
+
+    fn run(mut self) -> (Vec<RequestOutcome>, LoopStats) {
+        let t_host = Instant::now();
+        while self.done_count < self.spec.requests {
+            let Some((t, ev)) = self.events.pop() else { break };
+            self.clock.advance_to(t);
+            self.handle(ev);
+            // Drain every event of this instant before forming batches:
+            // simultaneous arrivals/completions batch together instead
+            // of dispatching one by one. Handlers only schedule strictly
+            // future events, so this inner drain terminates.
+            while self.events.peek_time() == Some(self.clock.now()) {
+                let (_, ev) = self.events.pop().expect("peeked event");
+                self.handle(ev);
+            }
+            self.try_dispatch();
+        }
+        self.finish_run(t_host.elapsed())
+    }
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(i) => self.on_arrive(i),
+            Ev::Finish { chip, epoch, req, attempt, ok } => {
+                self.on_finish(chip, epoch, req, attempt, ok)
+            }
+            Ev::Timeout(i) => self.on_timeout(i),
+            Ev::Retry(i) => self.on_retry(i),
+            Ev::ChipDown { chip, up_at } => self.on_chip_down(chip, up_at),
+            Ev::ChipUp(chip) => self.on_chip_up(chip),
+        }
+    }
+
+    fn finish_req(&mut self, i: usize, outcome: Outcome) {
+        debug_assert!(self.outcomes[i].is_none(), "request {i} finished twice");
+        self.outcomes[i] = Some(outcome);
+        self.reqs[i].state = RState::Terminal;
+        self.done_count += 1;
+    }
+
+    fn enqueue(&mut self, i: usize) {
+        self.reqs[i].state = RState::Queued;
+        self.queue.push(i);
+        self.peak_queue = self.peak_queue.max(self.queue.len());
+    }
+
+    fn on_arrive(&mut self, i: usize) {
+        if self.queue.len() >= self.spec.queue_cap {
+            self.trace(|| format!("shed r{i} at admission (queue full)"));
+            self.finish_req(i, Outcome::Shed { attempts: 0 });
+            return;
+        }
+        self.admitted += 1;
+        self.enqueue(i);
+        let timeout_at = self.reqs[i].timeout_at;
+        self.events.push(timeout_at, Ev::Timeout(i));
+        self.trace(|| format!("admit r{i}"));
+    }
+
+    fn on_timeout(&mut self, i: usize) {
+        if self.reqs[i].state == RState::Terminal {
+            return;
+        }
+        if self.reqs[i].state == RState::Queued {
+            self.queue.retain(|&r| r != i);
+        }
+        // In-flight lanes free when their (now stale for this request)
+        // Finish event lands; backing-off retries no-op on Terminal.
+        let attempts = self.reqs[i].attempts;
+        self.trace(|| format!("timeout r{i} (after {attempts} attempts)"));
+        self.finish_req(i, Outcome::TimedOut { attempts });
+    }
+
+    fn on_retry(&mut self, i: usize) {
+        if self.reqs[i].state == RState::Terminal {
+            return;
+        }
+        if self.queue.len() >= self.spec.queue_cap {
+            let attempts = self.reqs[i].attempts;
+            self.trace(|| format!("shed r{i} on retry (queue full)"));
+            self.finish_req(i, Outcome::Shed { attempts });
+            return;
+        }
+        self.enqueue(i);
+        self.trace(|| format!("requeue r{i} for retry"));
+    }
+
+    fn on_finish(&mut self, chip: usize, epoch: u64, req: usize, attempt: u32, ok: bool) {
+        if self.chips[chip].epoch != epoch {
+            // The chip went down after dispatch; its lanes were already
+            // reset and the attempt already failed over to retry.
+            return;
+        }
+        self.chips[chip].busy -= 1;
+        self.chips[chip].inflight.retain(|&r| r != req);
+        if self.reqs[req].state == RState::Terminal {
+            return; // timed out while in flight — lane freed, that's all
+        }
+        if ok {
+            let now = self.clock.now();
+            let latency_ns = now - self.reqs[req].arrival_ns;
+            let deadline_met = now <= self.reqs[req].deadline_at;
+            self.trace(|| format!("done r{req} (attempt {attempt}, slo_met={deadline_met})"));
+            self.finish_req(req, Outcome::Done { latency_ns, attempts: attempt, deadline_met });
+        } else {
+            self.trace(|| format!("fault r{req} (attempt {attempt} failed transiently)"));
+            self.fail_attempt(req);
+        }
+    }
+
+    /// One attempt of `req` failed (transient fault or chip outage):
+    /// either exhaust the retry budget into a typed [`Outcome::Failed`]
+    /// or schedule a backoff retry.
+    fn fail_attempt(&mut self, req: usize) {
+        if self.reqs[req].state == RState::Terminal {
+            return;
+        }
+        let attempt = self.reqs[req].attempts;
+        if attempt > self.spec.max_retries {
+            self.trace(|| format!("fail r{req} (retry budget exhausted after {attempt} attempts)"));
+            self.finish_req(req, Outcome::Failed { attempts: attempt });
+            return;
+        }
+        self.retries += 1;
+        self.reqs[req].state = RState::BackingOff;
+        // Full exponential backoff with deterministic jitter in [1, 2).
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(16) as i32);
+        let jitter = self.inj.backoff_jitter(req as u64, attempt as u64);
+        let backoff = ms_to_ns(self.spec.backoff_ms * exp * jitter).max(1);
+        let at = self.clock.now().saturating_add(backoff);
+        self.events.push(at, Ev::Retry(req));
+        self.trace(|| format!("backoff r{req} (attempt {attempt} failed)"));
+    }
+
+    fn on_chip_down(&mut self, chip: usize, up_at: VirtualNs) {
+        self.chips[chip].down = true;
+        self.chips[chip].epoch += 1;
+        self.chips[chip].busy = 0;
+        let inflight = std::mem::take(&mut self.chips[chip].inflight);
+        self.trace(|| format!("chip {chip} down ({} in flight)", inflight.len()));
+        for r in inflight {
+            self.fail_attempt(r);
+        }
+        let at = up_at.max(self.clock.now().saturating_add(1));
+        self.events.push(at, Ev::ChipUp(chip));
+    }
+
+    fn on_chip_up(&mut self, chip: usize) {
+        self.chips[chip].down = false;
+        self.trace(|| format!("chip {chip} up"));
+        let now = self.clock.now();
+        if let Some((down_at, up_at)) = self.inj.next_down_window(chip, now) {
+            self.events.push(down_at, Ev::ChipDown { chip, up_at });
+        }
+    }
+
+    /// Continuous EDF batch formation: while there is a queued request
+    /// and an up chip with free lanes, serve the earliest-deadline
+    /// request and fill the batch with compatible queued requests in
+    /// deadline order.
+    fn try_dispatch(&mut self) {
+        let max_batch = self.spec.max_batch.max(1);
+        loop {
+            if self.queue.is_empty() {
+                return;
+            }
+            let Some(c) = self.chips.iter().position(|ch| !ch.down && ch.busy < max_batch)
+            else {
+                return;
+            };
+            let free = max_batch - self.chips[c].busy;
+            let &head = self
+                .queue
+                .iter()
+                .min_by_key(|&&r| (self.reqs[r].deadline_at, r))
+                .expect("queue checked non-empty");
+            let key = self.keys[self.reqs[head].template].clone();
+            let mut members: Vec<usize> = self
+                .queue
+                .iter()
+                .copied()
+                .filter(|&r| self.keys[self.reqs[r].template] == key)
+                .collect();
+            members.sort_by_key(|&r| (self.reqs[r].deadline_at, r));
+            members.truncate(free);
+            self.queue.retain(|r| !members.contains(r));
+            self.dispatch(c, &key, &members);
+        }
+    }
+
+    fn dispatch(&mut self, c: usize, key: &BatchKey, members: &[usize]) {
+        let net = self.ctx.registry.get(&key.model).expect("validated at admission");
+        let arch = ArchConfig::by_name(&key.arch).expect("validated at admission");
+        let sp = SparsityConfig { value_sparsity: f64::from_bits(key.value_bits), fta: key.fta };
+        // All members share the key, hence the seed (it is a compile
+        // input — DESIGN.md §9); simulate_batch returns one report per
+        // member.
+        let seeds: Vec<u64> = members.iter().map(|_| key.seed).collect();
+        let reports = sim::simulate_batch(
+            &net,
+            sp,
+            &arch,
+            &seeds,
+            self.ctx.engine,
+            &self.ctx.compile,
+            &self.ctx.sim,
+        );
+        self.batches += 1;
+        let now = self.clock.now();
+        let epoch = self.chips[c].epoch;
+        for (&r, rep) in members.iter().zip(&reports) {
+            self.reqs[r].attempts += 1;
+            let attempt = self.reqs[r].attempts;
+            let ok = !self.inj.attempt_fails(r as u64, attempt as u64);
+            let factor = self.inj.latency_factor(r as u64, attempt as u64);
+            let svc = ((rep.time_ns() as f64) * factor).round().max(1.0) as VirtualNs;
+            self.reqs[r].state = RState::InFlight;
+            self.chips[c].busy += 1;
+            self.chips[c].inflight.push(r);
+            self.events
+                .push(now.saturating_add(svc), Ev::Finish { chip: c, epoch, req: r, attempt, ok });
+        }
+        let n = members.len();
+        self.trace(|| format!("dispatch batch of {n} on chip {c} ({}@{})", key.model, key.arch));
+    }
+
+    fn finish_run(self, wall: Duration) -> (Vec<RequestOutcome>, LoopStats) {
+        let outcomes: Vec<RequestOutcome> = self
+            .outcomes
+            .iter()
+            .enumerate()
+            .map(|(i, o)| RequestOutcome {
+                id: i,
+                model: self.spec.workload[self.reqs[i].template].model.clone(),
+                arrival_ns: self.reqs[i].arrival_ns,
+                outcome: o.expect("event loop drained with open requests"),
+            })
+            .collect();
+        let (mut done, mut shed, mut failed, mut timed_out, mut met) = (0, 0, 0, 0, 0);
+        let mut lat: Vec<f64> = Vec::new();
+        for o in &outcomes {
+            match o.outcome {
+                Outcome::Done { latency_ns, deadline_met, .. } => {
+                    done += 1;
+                    if deadline_met {
+                        met += 1;
+                    }
+                    lat.push(ns_to_ms(latency_ns));
+                }
+                Outcome::Shed { .. } => shed += 1,
+                Outcome::TimedOut { .. } => timed_out += 1,
+                Outcome::Failed { .. } => failed += 1,
+            }
+        }
+        let mut sorted = lat.clone();
+        sorted.sort_by(f64::total_cmp);
+        let offered = outcomes.len();
+        let makespan_ms = ns_to_ms(self.clock.now());
+        let makespan_s = makespan_ms / 1e3;
+        let stats = LoopStats {
+            offered,
+            admitted: self.admitted,
+            done,
+            shed,
+            failed,
+            timed_out,
+            deadline_met: met,
+            retries: self.retries,
+            batches: self.batches,
+            peak_queue: self.peak_queue,
+            offered_rps: self.spec.arrivals.nominal_rps(),
+            goodput_rps: if makespan_s > 0.0 { met as f64 / makespan_s } else { 0.0 },
+            slo_attainment: if offered > 0 { met as f64 / offered as f64 } else { 0.0 },
+            makespan_ms,
+            mean_ms: util::mean(&lat),
+            p50_ms: percentile(&sorted, 50.0),
+            p99_ms: percentile(&sorted, 99.0),
+            wall,
+            cache: SweepStats { compile: self.ctx.compile.stats(), sim: self.ctx.sim.stats() },
+            events: self.log,
+        };
+        (outcomes, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::fixtures::{small_net, tiny_net};
+
+    fn tpl(model: &str, seed: u64) -> ServeRequest {
+        ServeRequest {
+            model: model.into(),
+            arch: "db-pim".into(),
+            sparsity: SparsityConfig::hybrid(0.5),
+            seed,
+        }
+    }
+
+    fn fixture_ctx() -> ServeCtx {
+        ServeCtx::new(Registry::from_networks(vec![small_net(), tiny_net()]))
+    }
+
+    fn base_spec() -> OpenLoopSpec {
+        OpenLoopSpec {
+            models: vec!["small".into(), "tiny".into()],
+            workload: vec![tpl("small", 1), tpl("tiny", 2)],
+            arrivals: ArrivalProcess::Poisson { rate_rps: 2000.0 },
+            requests: 24,
+            queue_cap: 64,
+            deadline_ms: 1e6,
+            timeout_ms: 4e6,
+            max_batch: 4,
+            chips: 2,
+            max_retries: 3,
+            backoff_ms: 0.5,
+            seed: 42,
+            faults: FaultSpec::off(),
+            trace_events: false,
+        }
+    }
+
+    #[test]
+    fn healthy_run_completes_every_request() {
+        let (outcomes, stats) = base_spec().run_with(&fixture_ctx()).unwrap();
+        assert_eq!(outcomes.len(), 24);
+        for (i, o) in outcomes.iter().enumerate() {
+            assert_eq!(o.id, i);
+            match o.outcome {
+                Outcome::Done { latency_ns, attempts, deadline_met } => {
+                    assert!(latency_ns > 0);
+                    assert_eq!(attempts, 1);
+                    assert!(deadline_met);
+                }
+                other => panic!("request {i} not served: {other:?}"),
+            }
+        }
+        assert_eq!(stats.done, 24);
+        assert_eq!(stats.admitted, 24);
+        assert_eq!(stats.shed + stats.failed + stats.timed_out, 0);
+        assert_eq!(stats.retries, 0);
+        assert_eq!(stats.slo_attainment, 1.0);
+        assert!(stats.mean_ms > 0.0 && stats.p99_ms >= stats.p50_ms);
+        assert!(stats.makespan_ms > 0.0 && stats.goodput_rps > 0.0);
+        assert!(stats.batches >= 1 && stats.batches <= 24);
+    }
+
+    #[test]
+    fn zero_requests_yield_well_defined_zero_stats() {
+        let mut spec = base_spec();
+        spec.requests = 0;
+        spec.workload.clear(); // even an empty workload is fine at 0 requests
+        let (outcomes, stats) = spec.run_with(&fixture_ctx()).unwrap();
+        assert!(outcomes.is_empty());
+        assert_eq!(stats.offered, 0);
+        assert_eq!(stats.done + stats.shed + stats.failed + stats.timed_out, 0);
+        // all ratios are well-defined zeros, not NaN
+        assert_eq!(stats.slo_attainment, 0.0);
+        assert_eq!(stats.goodput_rps, 0.0);
+        assert_eq!(stats.mean_ms, 0.0);
+        assert_eq!(stats.p50_ms, 0.0);
+        assert_eq!(stats.p99_ms, 0.0);
+        assert_eq!(stats.makespan_ms, 0.0);
+    }
+
+    #[test]
+    fn saturation_sheds_with_typed_outcomes_and_no_panics() {
+        let mut spec = base_spec();
+        spec.arrivals = ArrivalProcess::Poisson { rate_rps: 1e9 }; // far past saturation
+        spec.requests = 64;
+        spec.queue_cap = 4;
+        spec.chips = 1;
+        spec.max_batch = 2;
+        spec.deadline_ms = 0.05;
+        spec.timeout_ms = 0.2;
+        let (outcomes, stats) = spec.run_with(&fixture_ctx()).unwrap();
+        assert_eq!(outcomes.len(), 64);
+        assert_eq!(stats.done + stats.shed + stats.failed + stats.timed_out, 64);
+        assert!(stats.shed > 0, "overload must shed: {stats:?}");
+        assert!(stats.peak_queue <= 4, "queue bound violated: {}", stats.peak_queue);
+        assert!(stats.slo_attainment < 1.0);
+    }
+
+    #[test]
+    fn continuous_batching_reforms_batches_as_lanes_free() {
+        let mut spec = base_spec();
+        // 8 simultaneous compatible arrivals onto one 4-lane chip:
+        // one batch of 4 now, one batch of 4 re-formed at completion.
+        spec.workload = vec![tpl("small", 1)];
+        spec.models = vec!["small".into()];
+        spec.arrivals = ArrivalProcess::Trace { times_ms: vec![0.0; 8] };
+        spec.requests = 8;
+        spec.chips = 1;
+        spec.max_batch = 4;
+        spec.queue_cap = 16;
+        let (outcomes, stats) = spec.run_with(&fixture_ctx()).unwrap();
+        assert!(outcomes.iter().all(|o| matches!(o.outcome, Outcome::Done { .. })));
+        assert_eq!(stats.done, 8);
+        assert_eq!(stats.batches, 2, "continuous batcher should form 2 batches of 4");
+        assert!(stats.peak_queue >= 4);
+    }
+
+    #[test]
+    fn serve_loop_fault_exhaustion_yields_typed_failures() {
+        let mut spec = base_spec();
+        spec.requests = 6;
+        spec.max_retries = 2;
+        spec.faults = FaultSpec { seed: 9, transient_rate: 1.0, ..FaultSpec::off() };
+        let ctx = fixture_ctx();
+        let (outcomes, stats) = spec.run_with(&ctx).unwrap();
+        for o in &outcomes {
+            assert_eq!(
+                o.outcome,
+                Outcome::Failed { attempts: 3 },
+                "every attempt faults, budget is 2 retries"
+            );
+        }
+        assert_eq!(stats.failed, 6);
+        assert_eq!(stats.done, 0);
+        assert_eq!(stats.retries, 12, "6 requests x 2 retries each");
+        // the context (pool, caches) is not poisoned: a healthy run
+        // through the same ctx still completes
+        let mut healthy = base_spec();
+        healthy.requests = 4;
+        let (_, s2) = healthy.run_with(&ctx).unwrap();
+        assert_eq!(s2.done, 4);
+    }
+
+    #[test]
+    fn serve_loop_replays_bit_exactly() {
+        let mut spec = base_spec();
+        spec.requests = 16;
+        spec.deadline_ms = 1.0;
+        spec.timeout_ms = 4.0;
+        spec.faults = FaultSpec::default_with_seed(5);
+        spec.trace_events = true;
+        let (o1, s1) = spec.run_with(&fixture_ctx()).unwrap();
+        let (o2, s2) = spec.run_with(&fixture_ctx()).unwrap();
+        assert_eq!(o1, o2, "outcomes must replay bit-exactly");
+        assert_eq!(s1.events, s2.events, "event order must replay bit-exactly");
+        assert_eq!(
+            (s1.done, s1.shed, s1.failed, s1.timed_out, s1.retries, s1.batches, s1.peak_queue),
+            (s2.done, s2.shed, s2.failed, s2.timed_out, s2.retries, s2.batches, s2.peak_queue)
+        );
+        assert_eq!(s1.makespan_ms, s2.makespan_ms);
+        assert!(!s1.events.is_empty());
+    }
+
+    #[test]
+    fn rate_sweep_degrades_gracefully() {
+        let mut spec = base_spec();
+        spec.requests = 32;
+        spec.queue_cap = 8;
+        spec.chips = 1;
+        spec.max_batch = 2;
+        spec.deadline_ms = 0.05;
+        spec.timeout_ms = 0.2;
+        spec.arrivals = ArrivalProcess::Poisson { rate_rps: 1e4 };
+        let ctx = fixture_ctx();
+        let sweep = spec.rate_sweep_with(&ctx, &[1.0, 1e4]).unwrap();
+        assert_eq!(sweep.len(), 2);
+        for (_, s) in &sweep {
+            assert_eq!(s.done + s.shed + s.failed + s.timed_out, 32, "no lost requests");
+        }
+        // past saturation the load is shed, never panicked on
+        let (f_hi, hi) = &sweep[1];
+        assert_eq!(*f_hi, 1e4);
+        assert!(hi.shed > 0, "saturated point must shed: {hi:?}");
+        assert!(hi.offered_rps > sweep[0].1.offered_rps);
+    }
+
+    #[test]
+    fn validate_reports_all_bad_indices_and_load_names_file() {
+        let mut spec = base_spec();
+        spec.workload = vec![
+            tpl("ghost", 1),                  // not in models
+            tpl("small", 2),                  // fine
+            ServeRequest { arch: "warp".into(), ..tpl("tiny", 3) }, // bad arch
+        ];
+        let err = spec.validate().unwrap_err();
+        assert!(err.contains("workload 0"), "{err}");
+        assert!(err.contains("workload 2"), "{err}");
+        assert!(!err.contains("workload 1"), "{err}");
+        // degenerate loop parameters are all reported too
+        let mut bad = base_spec();
+        bad.deadline_ms = f64::NAN;
+        bad.chips = 0;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("deadline_ms") && err.contains("chips"), "{err}");
+        // file errors name the file
+        let err = OpenLoopSpec::load("/nonexistent/openloop.json").unwrap_err();
+        assert!(err.contains("/nonexistent/openloop.json"), "{err}");
+    }
+
+    #[test]
+    fn example_openloop_spec_parses_and_resolves() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/serve_openloop.json");
+        let spec = OpenLoopSpec::load(path).expect("examples/serve_openloop.json must stay valid");
+        assert!(matches!(spec.arrivals, ArrivalProcess::Bursty { .. }), "example is bursty");
+        assert!(spec.requests > 0 && !spec.workload.is_empty());
+        assert!(spec.faults.enabled(), "example exercises the fault model");
+        // every workload model resolves in the zoo registry
+        let reg = Registry::from_names(&spec.models).unwrap();
+        for t in &spec.workload {
+            assert!(reg.get(&t.model).is_some(), "undeployed model {}", t.model);
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let mut spec = base_spec();
+        spec.faults = FaultSpec::default_with_seed(3);
+        spec.arrivals =
+            ArrivalProcess::Bursty { base_rps: 100.0, burst_rps: 5000.0, mean_phase_ms: 10.0 };
+        let back = OpenLoopSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // defaults: a minimal spec parses with stock parameters
+        let v = json::parse(
+            r#"{"models": ["small"],
+                "workload": [{"model": "small", "seed": 1}],
+                "arrivals": {"kind": "poisson", "rate_rps": 100.0}}"#,
+        )
+        .unwrap();
+        let d = OpenLoopSpec::from_json(&v).unwrap();
+        assert_eq!(d.queue_cap, 64);
+        assert_eq!(d.max_retries, 3);
+        assert_eq!(d.timeout_ms, 4.0 * d.deadline_ms);
+        assert!(!d.faults.enabled());
+        // workload errors accumulate across indices
+        let bad = json::parse(
+            r#"{"models": [], "workload": [{"seed": 1}, {"model": "m", "seed": 2}, {"seed": 3}],
+                "arrivals": {"kind": "poisson", "rate_rps": 100.0}}"#,
+        )
+        .unwrap();
+        let err = OpenLoopSpec::from_json(&bad).unwrap_err();
+        assert!(err.contains("request 0") && err.contains("request 2"), "{err}");
+    }
+}

@@ -14,6 +14,18 @@
 //!                          replay a multi-tenant traffic trace through
 //!                          the batched serving frontend (admission-order
 //!                          results, p50/p99 latency, req/s)
+//! dbpim serve --open-loop [--spec <openloop.json>] [--rate R]
+//!             [--requests N] [--arrival poisson|bursty] [--deadline-ms D]
+//!             [--queue-cap Q] [--chips C] [--batch B] [--seed S]
+//!             [--rate-sweep]
+//!                          run the open-loop continuous-batching serve
+//!                          loop on a virtual clock: seeded arrivals,
+//!                          bounded admission queue with shedding, EDF
+//!                          deadlines, retries/timeouts; `--rate-sweep`
+//!                          sweeps offered load to saturation. Fault
+//!                          injection: `DBPIM_FAULT_SEED=N` (or a
+//!                          "faults" object in the spec file) — see
+//!                          DESIGN.md §11
 //! dbpim info               architecture summary + effective pool size
 //! ```
 //!
@@ -30,8 +42,11 @@
 use dbpim::arch::ArchConfig;
 use dbpim::benchlib::{f2, pct, print_table};
 use dbpim::compiler::SparsityConfig;
+use dbpim::coordinator::arrivals::ArrivalProcess;
 use dbpim::coordinator::experiments as exp;
+use dbpim::coordinator::faults::FaultSpec;
 use dbpim::coordinator::serve;
+use dbpim::coordinator::serve_loop::OpenLoopSpec;
 use dbpim::json;
 use dbpim::models;
 use dbpim::sim;
@@ -93,6 +108,21 @@ fn main() {
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Parse an optional integer flag with a lower bound. `Ok(None)` when
+/// absent; `Err(exit_code)` (after printing usage) when malformed.
+fn usize_flag(args: &[String], name: &str, min: usize) -> Result<Option<usize>, i32> {
+    match flag_value(args, name) {
+        None => Ok(None),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= min => Ok(Some(n)),
+            _ => {
+                eprintln!("{name} expects an integer >= {min}");
+                Err(2)
+            }
+        },
+    }
 }
 
 fn write_report(name: &str, value: &json::Value) {
@@ -403,8 +433,13 @@ fn cmd_trace(args: &[String]) -> i32 {
 /// frontend: admission-ordered results, p50/p99 simulated latency and
 /// host-side throughput (DESIGN.md §9).
 fn cmd_serve(args: &[String]) -> i32 {
+    if args.iter().any(|a| a == "--open-loop") {
+        return cmd_serve_open_loop(args);
+    }
     let Some(path) = flag_value(args, "--replay") else {
-        eprintln!("usage: dbpim serve --replay <trace.json> [--batch N] [--workers N]");
+        eprintln!(
+            "usage: dbpim serve --replay <trace.json> [--batch N] [--workers N]\n       dbpim serve --open-loop [--spec <openloop.json>] [--rate R] [--requests N] [--rate-sweep]"
+        );
         return 2;
     };
     let batch = match flag_value(args, "--batch") {
@@ -458,6 +493,209 @@ fn cmd_serve(args: &[String]) -> i32 {
         f2(stats.p99_ms)
     );
     println!("host: {:?} wall, {:.1} req/s", stats.wall, stats.req_per_s);
+    println!("compile cache: {}", stats.cache.compile.summary());
+    println!("sim cache: {}", stats.cache.sim.summary());
+    0
+}
+
+/// Open-loop serving: seeded arrival process on a virtual clock,
+/// bounded admission queue with shedding, EDF deadlines, continuous
+/// batching, deterministic fault injection (DESIGN.md §11).
+fn cmd_serve_open_loop(args: &[String]) -> i32 {
+    let mut spec = match flag_value(args, "--spec") {
+        Some(path) => match OpenLoopSpec::load(&path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("error loading open-loop spec: {e}");
+                return 1;
+            }
+        },
+        None => {
+            // Stock workload: the two zoo models the replay example
+            // serves, under the default loop parameters.
+            let tpl = |model: &str, seed: u64| serve::ServeRequest {
+                model: model.into(),
+                arch: "db-pim".into(),
+                sparsity: SparsityConfig::hybrid(0.6),
+                seed,
+            };
+            OpenLoopSpec {
+                models: vec!["resnet18".into(), "mobilenet_v2".into()],
+                workload: vec![tpl("resnet18", 1), tpl("mobilenet_v2", 1)],
+                arrivals: ArrivalProcess::Poisson { rate_rps: 500.0 },
+                requests: 64,
+                queue_cap: 64,
+                deadline_ms: 50.0,
+                timeout_ms: 200.0,
+                max_batch: 8,
+                chips: 2,
+                max_retries: 3,
+                backoff_ms: 1.0,
+                seed: 42,
+                faults: FaultSpec::off(),
+                trace_events: false,
+            }
+        }
+    };
+    // CLI overrides on top of the spec (file or stock).
+    if let Some(kind) = flag_value(args, "--arrival") {
+        let rate = spec.arrivals.nominal_rps().max(1.0);
+        spec.arrivals = match kind.as_str() {
+            "poisson" => ArrivalProcess::Poisson { rate_rps: rate },
+            "bursty" => ArrivalProcess::Bursty {
+                base_rps: rate / 2.0,
+                burst_rps: 2.0 * rate,
+                mean_phase_ms: 25.0,
+            },
+            _ => {
+                eprintln!("--arrival expects poisson|bursty");
+                return 2;
+            }
+        };
+    }
+    if let Some(s) = flag_value(args, "--rate") {
+        match s.parse::<f64>() {
+            Ok(r) if r.is_finite() && r > 0.0 => {
+                let nominal = spec.arrivals.nominal_rps();
+                spec.arrivals = if nominal > 0.0 {
+                    spec.arrivals.scaled(r / nominal)
+                } else {
+                    ArrivalProcess::Poisson { rate_rps: r }
+                };
+            }
+            _ => {
+                eprintln!("--rate expects a positive number (requests/second)");
+                return 2;
+            }
+        }
+    }
+    // `--requests 0` is a valid (empty) run; the others must be >= 1.
+    match usize_flag(args, "--requests", 0) {
+        Err(code) => return code,
+        Ok(Some(n)) => spec.requests = n,
+        Ok(None) => {}
+    }
+    for (flag, slot) in [
+        ("--queue-cap", &mut spec.queue_cap),
+        ("--chips", &mut spec.chips),
+        ("--batch", &mut spec.max_batch),
+    ] {
+        match usize_flag(args, flag, 1) {
+            Err(code) => return code,
+            Ok(Some(n)) => *slot = n,
+            Ok(None) => {}
+        }
+    }
+    if let Some(s) = flag_value(args, "--deadline-ms") {
+        match s.parse::<f64>() {
+            Ok(d) if d.is_finite() && d > 0.0 => {
+                spec.deadline_ms = d;
+                spec.timeout_ms = spec.timeout_ms.max(d);
+            }
+            _ => {
+                eprintln!("--deadline-ms expects a positive number");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = flag_value(args, "--seed") {
+        match s.parse::<u64>() {
+            Ok(n) => spec.seed = n,
+            Err(_) => {
+                eprintln!("--seed expects a non-negative integer");
+                return 2;
+            }
+        }
+    }
+    // DBPIM_FAULT_SEED turns on the stock fault mix (CI fault leg).
+    if let Some(f) = FaultSpec::from_env() {
+        spec.faults = f;
+    }
+
+    if args.iter().any(|a| a == "--rate-sweep") {
+        const FACTORS: [f64; 6] = [0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+        let sweep = match spec.rate_sweep(&FACTORS) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve error: {e}");
+                return 1;
+            }
+        };
+        print_table(
+            "Open-loop rate sweep — goodput & SLO vs offered load",
+            &[
+                "load x", "offered rps", "goodput rps", "SLO", "done", "shed", "failed",
+                "timeout", "retries", "p99 ms",
+            ],
+            &sweep
+                .iter()
+                .map(|(f, s)| {
+                    vec![
+                        f2(*f),
+                        f2(s.offered_rps),
+                        f2(s.goodput_rps),
+                        pct(s.slo_attainment),
+                        s.done.to_string(),
+                        s.shed.to_string(),
+                        s.failed.to_string(),
+                        s.timed_out.to_string(),
+                        s.retries.to_string(),
+                        f2(s.p99_ms),
+                    ]
+                })
+                .collect::<Vec<_>>(),
+        );
+        return 0;
+    }
+
+    let (_, stats) = match spec.run() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("serve error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "open-loop serve: {} arrivals ({} at {} rps nominal), {} chip(s) x {} lanes, queue cap {}, deadline {} ms",
+        stats.offered,
+        spec.arrivals.name(),
+        f2(stats.offered_rps),
+        spec.chips,
+        spec.max_batch,
+        spec.queue_cap,
+        f2(spec.deadline_ms),
+    );
+    if spec.faults.enabled() {
+        println!(
+            "faults on (seed {}): transient {} / spike {} at {}x / outages ~{} ms every ~{} ms",
+            spec.faults.seed,
+            pct(spec.faults.transient_rate),
+            pct(spec.faults.spike_rate),
+            f2(spec.faults.spike_factor),
+            f2(spec.faults.down_duration_ms),
+            f2(spec.faults.down_mean_ms),
+        );
+    }
+    println!(
+        "outcomes: {} done ({} in SLO) / {} shed / {} failed / {} timed out; {} retries, {} batches, peak queue {}",
+        stats.done,
+        stats.deadline_met,
+        stats.shed,
+        stats.failed,
+        stats.timed_out,
+        stats.retries,
+        stats.batches,
+        stats.peak_queue,
+    );
+    println!(
+        "goodput {} rps, SLO attainment {}, latency p50 {} / p99 {} ms, makespan {} ms virtual",
+        f2(stats.goodput_rps),
+        pct(stats.slo_attainment),
+        f2(stats.p50_ms),
+        f2(stats.p99_ms),
+        f2(stats.makespan_ms),
+    );
+    println!("host: {:?} wall", stats.wall);
     println!("compile cache: {}", stats.cache.compile.summary());
     println!("sim cache: {}", stats.cache.sim.summary());
     0

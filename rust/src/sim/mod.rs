@@ -96,6 +96,14 @@ impl SimReport {
         self.pim_cycles() as f64 * self.arch.clock_ns() / 1e6
     }
 
+    /// Makespan in integer virtual nanoseconds — the serve loop's
+    /// service-time currency (`coordinator::clock`). At least 1 ns so a
+    /// degenerate zero-cycle report still advances virtual time.
+    pub fn time_ns(&self) -> u64 {
+        let ns = (self.total_cycles() as f64 * self.arch.clock_ns()).round();
+        if ns >= 1.0 { ns as u64 } else { 1 }
+    }
+
     /// Total energy in microjoules.
     pub fn energy_uj(&self) -> f64 {
         let table = EnergyTable::default28nm();

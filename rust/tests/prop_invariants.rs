@@ -43,6 +43,14 @@
 //! * serving: a batched multi-tenant replay (random traces, batch
 //!   sizes and worker counts) returns admission-ordered results
 //!   bitwise identical to serial per-request `simulate_network`
+//! * open-loop serving: a seeded open-loop run (random Poisson/bursty
+//!   arrivals, fault injection on) replays bit-exactly — same
+//!   per-request outcomes, same deterministic stats, same event order —
+//!   across 1, 2 and N workers
+//! * fault surfacing: an injected fault that exhausts its retry budget
+//!   produces a typed per-request `Failed` outcome with exact retry
+//!   counters, never a pool poisoning or a panic, for every worker
+//!   count
 
 use dbpim::arch::ArchConfig;
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
@@ -1022,6 +1030,177 @@ fn prop_isa_roundtrip_random_streams() {
         let bytes = dbpim::isa::encode_stream(&instrs);
         if dbpim::isa::decode_stream(&bytes) != Some(instrs) {
             return Err("stream roundtrip failed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_open_loop_deterministic_across_worker_counts() {
+    // ISSUE 7 acceptance: a seeded open-loop run — per-request
+    // outcomes, goodput/SLO/shed/retry stats, and event order — is
+    // bit-identical across 1, 2 and N workers, with fault injection
+    // on. The loop itself is single-threaded discrete-event simulation
+    // in virtual time; the pool only parallelizes the simulations
+    // inside one event, which are schedule-independent (DESIGN.md
+    // §8/§11). Host wall time and `dup_computes` are the only fields
+    // allowed to vary.
+    use dbpim::coordinator::arrivals::ArrivalProcess;
+    use dbpim::coordinator::faults::FaultSpec;
+    use dbpim::coordinator::pool::Pool;
+    use dbpim::coordinator::serve::{ServeCtx, ServeRequest};
+    use dbpim::coordinator::serve_loop::OpenLoopSpec;
+    use dbpim::models::fixtures::{small_net, tiny_net};
+    use dbpim::models::Registry;
+    check_cases(4, |rng| {
+        let arrivals = if rng.below(2) == 0 {
+            ArrivalProcess::Poisson { rate_rps: 500.0 + rng.below(4000) as f64 }
+        } else {
+            ArrivalProcess::Bursty {
+                base_rps: 200.0 + rng.below(500) as f64,
+                burst_rps: 2000.0 + rng.below(8000) as f64,
+                mean_phase_ms: 5.0 + rng.below(20) as f64,
+            }
+        };
+        let tpl = |model: &str, seed: u64| ServeRequest {
+            model: model.into(),
+            arch: "db-pim".into(),
+            sparsity: SparsityConfig::hybrid(0.5),
+            seed,
+        };
+        let spec = OpenLoopSpec {
+            models: vec!["small".into(), "tiny".into()],
+            workload: vec![tpl("small", 1 + rng.below(2)), tpl("tiny", rng.below(2))],
+            arrivals,
+            requests: 6 + rng.below(10) as usize,
+            queue_cap: 4 + rng.below(8) as usize,
+            deadline_ms: 0.5 + 0.5 * rng.below(4) as f64,
+            timeout_ms: 8.0,
+            max_batch: 1 + rng.below(4) as usize,
+            chips: 1 + rng.below(3) as usize,
+            max_retries: 1 + rng.below(3) as u32,
+            backoff_ms: 0.25,
+            seed: rng.next_u64(),
+            faults: FaultSpec::default_with_seed(rng.next_u64()),
+            trace_events: true,
+        };
+        let run_under = |workers: usize| {
+            let pool = Pool::new(workers);
+            let ctx = ServeCtx::new(Registry::from_networks(vec![small_net(), tiny_net()]));
+            let (spec_ref, ctx_ref) = (&spec, &ctx);
+            pool.run_jobs(vec![move || spec_ref.run_with(ctx_ref).unwrap()]).pop().unwrap()
+        };
+        let (o1, s1) = run_under(1);
+        let (o2, s2) = run_under(2);
+        let w = 3 + rng.below(10) as usize;
+        let (ow, sw) = run_under(w);
+        if o1 != o2 || o1 != ow {
+            return Err(format!("outcomes diverge across 1/2/{w} workers"));
+        }
+        if s1.events != s2.events || s1.events != sw.events {
+            return Err(format!("event order diverges across 1/2/{w} workers"));
+        }
+        for (label, s) in [("2", &s2), ("N", &sw)] {
+            let a = (s1.done, s1.shed, s1.failed, s1.timed_out, s1.deadline_met, s1.retries);
+            let b = (s.done, s.shed, s.failed, s.timed_out, s.deadline_met, s.retries);
+            if a != b {
+                return Err(format!("outcome counters diverge at {label} workers: {a:?} vs {b:?}"));
+            }
+            let a = (s1.admitted, s1.batches, s1.peak_queue);
+            let b = (s.admitted, s.batches, s.peak_queue);
+            if a != b {
+                return Err(format!("loop counters diverge at {label} workers: {a:?} vs {b:?}"));
+            }
+            if s1.makespan_ms != s.makespan_ms
+                || s1.slo_attainment != s.slo_attainment
+                || s1.goodput_rps != s.goodput_rps
+                || s1.p99_ms != s.p99_ms
+            {
+                return Err(format!("derived stats diverge at {label} workers"));
+            }
+            if (s1.cache.sim.hits, s1.cache.sim.misses) != (s.cache.sim.hits, s.cache.sim.misses)
+            {
+                return Err(format!("sim cache stats schedule-dependent at {label} workers"));
+            }
+        }
+        if s1.done + s1.shed + s1.failed + s1.timed_out != spec.requests {
+            return Err(format!("outcome conservation broken: {s1:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_open_loop_fault_exhaustion_typed_outcomes() {
+    // ISSUE 7 satellite: an injected fault that exhausts its retry
+    // budget must surface as a typed per-request `Failed` outcome with
+    // exact shed/retry counters — never a pool poisoning, never a
+    // panic — for every worker count. transient_rate = 1.0 makes every
+    // attempt fail deterministically.
+    use dbpim::coordinator::arrivals::ArrivalProcess;
+    use dbpim::coordinator::faults::FaultSpec;
+    use dbpim::coordinator::pool::Pool;
+    use dbpim::coordinator::serve::{ServeCtx, ServeRequest};
+    use dbpim::coordinator::serve_loop::{OpenLoopSpec, Outcome};
+    use dbpim::models::fixtures::small_net;
+    use dbpim::models::Registry;
+    check_cases(4, |rng| {
+        let workers = 1 + rng.below(8) as usize;
+        let n = 3 + rng.below(6) as usize;
+        let max_retries = rng.below(3) as u32;
+        let spec = OpenLoopSpec {
+            models: vec!["small".into()],
+            workload: vec![ServeRequest {
+                model: "small".into(),
+                arch: "db-pim".into(),
+                sparsity: SparsityConfig::hybrid(0.5),
+                seed: rng.below(3),
+            }],
+            arrivals: ArrivalProcess::Poisson { rate_rps: 1000.0 },
+            requests: n,
+            queue_cap: 64,
+            deadline_ms: 1e6,
+            timeout_ms: 4e6,
+            max_batch: 1 + rng.below(4) as usize,
+            chips: 1 + rng.below(2) as usize,
+            max_retries,
+            backoff_ms: 0.5,
+            seed: rng.next_u64(),
+            faults: FaultSpec { seed: rng.next_u64(), transient_rate: 1.0, ..FaultSpec::off() },
+            trace_events: false,
+        };
+        let pool = Pool::new(workers);
+        let ctx = ServeCtx::new(Registry::from_networks(vec![small_net()]));
+        let (spec_ref, ctx_ref) = (&spec, &ctx);
+        let (outcomes, stats) =
+            pool.run_jobs(vec![move || spec_ref.run_with(ctx_ref).unwrap()]).pop().unwrap();
+        for o in &outcomes {
+            let want = Outcome::Failed { attempts: max_retries + 1 };
+            if o.outcome != want {
+                return Err(format!(
+                    "request {} not a typed failure: {:?} (want {want:?}, {workers} workers)",
+                    o.id, o.outcome
+                ));
+            }
+        }
+        if stats.failed != n || stats.done != 0 || stats.shed != 0 || stats.timed_out != 0 {
+            return Err(format!("counters wrong under total fault load: {stats:?}"));
+        }
+        if stats.retries != n as u64 * max_retries as u64 {
+            return Err(format!(
+                "retry counter wrong: {} (want {} = {n} x {max_retries})",
+                stats.retries,
+                n as u64 * max_retries as u64
+            ));
+        }
+        // the pool and caches are not poisoned: a healthy follow-up run
+        // through the same pool and context completes everything
+        let mut healthy = spec.clone();
+        healthy.faults = FaultSpec::off();
+        let (h_ref, c_ref) = (&healthy, &ctx);
+        let (_, hs) = pool.run_jobs(vec![move || h_ref.run_with(c_ref).unwrap()]).pop().unwrap();
+        if hs.done != n {
+            return Err(format!("pool poisoned after fault exhaustion: {hs:?}"));
         }
         Ok(())
     });

@@ -42,6 +42,7 @@ DEFAULT_CASES = [
     "kernel_backend_scan",
     "kernel_backend_gemm",
     "requant_relu_arena",
+    "serve_loop_saturation",
 ]
 
 
