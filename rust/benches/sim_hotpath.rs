@@ -40,6 +40,10 @@
 //!   loop driven far past saturation (Poisson arrivals at ~1M rps into
 //!   a bounded queue): measures the admission/shed/EDF-dispatch event
 //!   loop itself, and asserts load shedding stays a typed outcome
+//! * `shard_sweep` — resnet18 across 1/4/16-chip fleets under tensor
+//!   and pipeline parallelism (partition → per-chip fan-out →
+//!   deterministic merge + interconnect); asserts the chips=1
+//!   delegation stays bit-identical to the single-chip report
 //! * `pool_spawn_overhead` — scheduling cost of the persistent
 //!   work-stealing pool: 256 trivial jobs through `pool::run_jobs`
 //! * `pool_nested_sweep` — a miniature sweep × layer × segment nested
@@ -418,6 +422,7 @@ fn main() {
             timeout_ms: 50.0,
             max_batch: 4,
             chips: 2,
+            scheme: None,
             max_retries: 1,
             backoff_ms: 0.05,
             seed: 42,
@@ -472,6 +477,60 @@ fn main() {
                 })
                 .collect();
             pool::run_jobs(cells).iter().sum::<u64>()
+        }));
+    }
+
+    // --- sharded multi-chip fleet: resnet18 on 1/4/16 chips, TP vs PP ---
+    // The measured work is the full shard pipeline: capacity-aware
+    // partition → per-chip subset compile + simulate fan-out over the
+    // shared pool → order-fixed merge with the interconnect charge.
+    // chips=1 must stay bit-identical to the plain single-chip report
+    // (the DESIGN.md §12 delegation contract); the Arc<ArchConfig>
+    // threading (ISSUE 8 satellite 1) keeps the per-chip fan-out free
+    // of deep config clones.
+    {
+        use dbpim::coordinator::sharding::{self, ShardSpec};
+        let net = dbpim::models::resnet18();
+        let sp = SparsityConfig::hybrid(0.6);
+        let arch_s = ArchConfig::db_pim();
+        samples.push(bench("shard_sweep", 0, iters(3, 1), || {
+            let cc = dbpim::compiler::CompileCache::new();
+            let sc = dbpim::sim::SimCache::new();
+            let base = dbpim::sim::simulate_network_memo(
+                &net,
+                sp,
+                &arch_s,
+                42,
+                Engine::Parallel,
+                &cc,
+                &sc,
+            )
+            .total_cycles();
+            let mut acc = 0u64;
+            for scheme in ["tp", "pp"] {
+                for chips in [1usize, 4, 16] {
+                    let spec = ShardSpec::parse(chips, scheme).unwrap();
+                    let r = sharding::simulate_sharded(
+                        &net,
+                        sp,
+                        &arch_s,
+                        42,
+                        spec,
+                        Engine::Parallel,
+                        &cc,
+                        &sc,
+                    );
+                    if chips == 1 {
+                        assert_eq!(
+                            r.fleet_cycles(),
+                            base,
+                            "chips=1 {scheme} must be bit-identical to single-chip"
+                        );
+                    }
+                    acc = acc.wrapping_add(r.fleet_cycles());
+                }
+            }
+            acc
         }));
     }
 

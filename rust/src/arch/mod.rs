@@ -65,6 +65,14 @@ pub struct ArchConfig {
     pub input_buffer_kb: usize,
     pub output_buffer_kb: usize,
     pub inst_buffer_kb: usize,
+
+    // ---- inter-chip interconnect (multi-chip sharding; DESIGN.md §12) ----
+    /// Per-hop link latency charged to every chip-boundary crossing
+    /// (cycles at the core clock).
+    pub link_latency_cycles: u64,
+    /// Link bandwidth: activation bytes moved per cycle once a transfer
+    /// is streaming (serialization time = ceil(bytes / bw)).
+    pub link_bandwidth_bytes_per_cycle: u64,
 }
 
 impl ArchConfig {
@@ -91,6 +99,8 @@ impl ArchConfig {
             input_buffer_kb: 128,
             output_buffer_kb: 256,
             inst_buffer_kb: 16,
+            link_latency_cycles: 16,
+            link_bandwidth_bytes_per_cycle: 64,
         }
     }
 
@@ -187,6 +197,14 @@ impl ArchConfig {
     pub fn clock_ns(&self) -> f64 {
         1e3 / self.freq_mhz
     }
+
+    /// Deterministic interconnect transfer cost: per-hop latency plus
+    /// bandwidth-limited serialization time. Non-decreasing in both
+    /// `bytes` and `hops`; zero only for a zero-byte, zero-hop move.
+    pub fn link_transfer_cycles(&self, bytes: u64, hops: u64) -> u64 {
+        let bw = self.link_bandwidth_bytes_per_cycle.max(1);
+        hops * self.link_latency_cycles + bytes.div_ceil(bw)
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +255,40 @@ mod tests {
         // CLI alias spelling
         assert_eq!(ArchConfig::by_name("baseline").unwrap().name, "dense-baseline");
         assert!(ArchConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn link_transfer_cost_monotone_in_bytes_and_hops() {
+        let a = ArchConfig::db_pim();
+        // non-decreasing in bytes at fixed hops
+        for hops in [0u64, 1, 3, 15] {
+            let mut prev = 0;
+            for bytes in [0u64, 1, 63, 64, 65, 4096, 1 << 20] {
+                let c = a.link_transfer_cycles(bytes, hops);
+                assert!(c >= prev, "cost fell: {bytes} B / {hops} hops");
+                prev = c;
+            }
+        }
+        // non-decreasing in hops at fixed bytes
+        for bytes in [0u64, 100, 1 << 16] {
+            let mut prev = 0;
+            for hops in 0u64..8 {
+                let c = a.link_transfer_cycles(bytes, hops);
+                assert!(c >= prev, "cost fell: {bytes} B / {hops} hops");
+                prev = c;
+            }
+        }
+        // exact shape: hops × latency + ceil(bytes / bw)
+        assert_eq!(a.link_transfer_cycles(0, 0), 0);
+        assert_eq!(a.link_transfer_cycles(1, 0), 1);
+        assert_eq!(
+            a.link_transfer_cycles(129, 2),
+            2 * a.link_latency_cycles + 3,
+            "129 B over a 64 B/cycle link is 3 beats"
+        );
+        // a zero-bandwidth config must not divide by zero
+        let degenerate = ArchConfig { link_bandwidth_bytes_per_cycle: 0, ..a };
+        assert_eq!(degenerate.link_transfer_cycles(10, 1), degenerate.link_latency_cycles + 10);
     }
 
     #[test]

@@ -77,6 +77,13 @@ pub(crate) struct CompileKey {
     input_skipping: bool,
     merge_groups: bool,
     schedule: SchedulePolicy,
+    /// Shard scope (coordinator::sharding): `(1, 0)` for the ordinary
+    /// single-chip artifact; `(chips, chip)` for a chip-local
+    /// re-lowering of the layer under tensor parallelism. Per-chip
+    /// artifacts hold assignment *subsets*, so they must never alias
+    /// the full artifact or each other.
+    chips: usize,
+    chip: usize,
 }
 
 impl CompileKey {
@@ -118,7 +125,17 @@ impl CompileKey {
             input_skipping: arch.input_skipping,
             merge_groups: arch.merge_groups,
             schedule: arch.schedule,
+            chips: 1,
+            chip: 0,
         }
+    }
+
+    /// The same key re-scoped to one chip of a `chips`-wide
+    /// tensor-parallel fleet (coordinator::sharding).
+    pub(crate) fn sharded(mut self, chips: usize, chip: usize) -> Self {
+        self.chips = chips;
+        self.chip = chip;
+        self
     }
 }
 
@@ -179,17 +196,31 @@ impl CompileCache {
     ) -> Option<Arc<CompiledLayer>> {
         net.layers[idx].kind.matmul_dims()?;
         let key = CompileKey::new(net, idx, sparsity, arch, seed);
+        Some(self.get_or_insert_with(key, || {
+            compile_network_layer(net, idx, sparsity, arch, seed).expect("PIM layer")
+        }))
+    }
+
+    /// Fetch (or build via `build`) the artifact under an explicit key.
+    /// The sharding layer uses this to memoize chip-local re-lowered
+    /// artifacts under per-chip keys (`CompileKey::sharded`); the
+    /// accounting contract matches [`CompileCache::get_or_compile`].
+    /// `build` runs *outside* the shard lock: a racing duplicate build
+    /// of the same key is deterministic, so whichever insert lands
+    /// first is authoritative and the loser's artifact is dropped.
+    pub(crate) fn get_or_insert_with(
+        &self,
+        key: CompileKey,
+        build: impl FnOnce() -> CompiledLayer,
+    ) -> Arc<CompiledLayer> {
         let shard = self.shard(&key);
         if let Some(hit) = shard.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Some(Arc::clone(hit));
+            return Arc::clone(hit);
         }
-        // Compile outside the lock; a racing duplicate compile of the
-        // same key is deterministic, so whichever insert lands first is
-        // authoritative and the loser's artifact is dropped.
-        let compiled = Arc::new(compile_network_layer(net, idx, sparsity, arch, seed)?);
+        let compiled = Arc::new(build());
         let mut map = shard.lock().unwrap();
-        Some(match map.entry(key) {
+        match map.entry(key) {
             Entry::Occupied(e) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 self.dup_computes.fetch_add(1, Ordering::Relaxed);
@@ -199,7 +230,12 @@ impl CompileCache {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 Arc::clone(v.insert(compiled))
             }
-        })
+        }
+    }
+
+    /// Mutex shard count (fixed; surfaced by `dbpim info`).
+    pub fn shard_count() -> usize {
+        SHARDS
     }
 
     /// Snapshot of the hit/miss counters.
@@ -308,6 +344,24 @@ mod tests {
         assert_eq!(cache.stats(), CacheStats { hits: 0, misses: 2, dup_computes: 0 });
         assert_eq!(ca.prep.n, 8);
         assert_eq!(cb.prep.n, 24);
+    }
+
+    #[test]
+    fn sharded_keys_do_not_alias_the_full_artifact() {
+        let cache = CompileCache::new();
+        let net = tiny_net();
+        let arch = ArchConfig::db_pim();
+        let sp = SparsityConfig::hybrid(0.5);
+        let full = cache.get_or_compile(&net, 0, sp, &arch, 7).unwrap();
+        let key = CompileKey::new(&net, 0, sp, &arch, 7).sharded(2, 0);
+        let derived = cache.get_or_insert_with(key.clone(), || {
+            crate::compiler::compile_assignment_subset(&full, &[0], &arch)
+        });
+        assert!(!Arc::ptr_eq(&full, &derived), "per-chip key must not alias the full artifact");
+        assert_eq!(derived.assignments.len(), 1);
+        let again = cache.get_or_insert_with(key, || panic!("hit must not rebuild"));
+        assert!(Arc::ptr_eq(&derived, &again));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, dup_computes: 0 });
     }
 
     #[test]

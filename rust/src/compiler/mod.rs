@@ -204,6 +204,30 @@ pub fn compile_layer(prep: PreparedLayer, arch: &ArchConfig) -> CompiledLayer {
     CompiledLayer { prep, assignments, tiles, instrs, program }
 }
 
+/// Re-lower an already-compiled layer onto a subset of its assignments
+/// (tensor-parallel sharding, coordinator::sharding): clone the
+/// prepared layer, keep the selected assignments (ascending index, so
+/// the chip-local stream order is a subsequence of the original), then
+/// re-run the schedule → tile → codegen tail of the pipeline for the
+/// subset. Per-instruction event semantics depend only on
+/// (tile, assignment, arch, input), so the chips' physical event totals
+/// partition the single-chip run's exactly (DESIGN.md §12).
+pub fn compile_assignment_subset(
+    full: &CompiledLayer,
+    subset: &[usize],
+    arch: &ArchConfig,
+) -> CompiledLayer {
+    debug_assert!(subset.windows(2).all(|w| w[0] < w[1]), "subset must ascend");
+    let prep = full.prep.clone();
+    let mut assignments: Vec<Assignment> =
+        subset.iter().map(|&i| full.assignments[i].clone()).collect();
+    packing::schedule_cores(&mut assignments, arch);
+    let tiles = packing::tile_assignments(&assignments, arch.k_slots());
+    let program = program::codegen(&prep, &assignments, &tiles, arch);
+    let instrs = program.to_instrs();
+    CompiledLayer { prep, assignments, tiles, instrs, program }
+}
+
 /// Sparsify + compile the PIM layer at index `idx` of a zoo network
 /// (None for non-PIM layers). Deterministic per (seed, idx), so layer
 /// jobs can fan out across workers in any order.

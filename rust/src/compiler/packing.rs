@@ -159,14 +159,7 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
         merge_compatible(&mut assignments, arch.macro_columns);
     }
 
-    match arch.schedule {
-        crate::arch::SchedulePolicy::Lpt => schedule(&mut assignments, arch.n_cores),
-        crate::arch::SchedulePolicy::RoundRobin => {
-            for (i, a) in assignments.iter_mut().enumerate() {
-                a.core = i % arch.n_cores;
-            }
-        }
-    }
+    schedule_cores(&mut assignments, arch);
 
     // Gather each assignment's dense weight block now that merging and
     // scheduling have settled the filter sets (the simulator's
@@ -183,7 +176,30 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
     }
 
     // K tiling: Tk1 × Tk2 row slots per macro.
-    let slots = arch.k_slots();
+    let tiles = tile_assignments(&assignments, arch.k_slots());
+    (assignments, tiles)
+}
+
+/// Spread assignments over the cores under the arch's scheduling
+/// policy. Shared by [`pack_layer`] and the multi-chip sharding layer,
+/// which re-schedules a chip-local assignment subset with the same
+/// policy (coordinator::sharding).
+pub(crate) fn schedule_cores(assignments: &mut [Assignment], arch: &ArchConfig) {
+    match arch.schedule {
+        crate::arch::SchedulePolicy::Lpt => schedule(assignments, arch.n_cores),
+        crate::arch::SchedulePolicy::RoundRobin => {
+            for (i, a) in assignments.iter_mut().enumerate() {
+                a.core = i % arch.n_cores;
+            }
+        }
+    }
+}
+
+/// K tiling: split each assignment's kept rows into `slots`-row tiles
+/// (Tk1 × Tk2 row slots per macro), ids ascending in assignment order.
+/// Shared by [`pack_layer`] and the sharding layer's chip-local
+/// re-tiling.
+pub(crate) fn tile_assignments(assignments: &[Assignment], slots: usize) -> Vec<Tile> {
     let mut tiles = Vec::new();
     let mut id = 0u32;
     for (ai, a) in assignments.iter().enumerate() {
@@ -195,7 +211,7 @@ pub fn pack_layer(prep: &PreparedLayer, arch: &ArchConfig) -> (Vec<Assignment>, 
             id += 1;
         }
     }
-    (assignments, tiles)
+    tiles
 }
 
 /// Shape class of one compiled layer's kernel workload, summarized for

@@ -33,6 +33,7 @@ use crate::sim::{self, Engine, OpCategory, SimCache, SimReport};
 use crate::stats;
 
 use super::pool;
+use super::sharding::{self, ShardReport, ShardSpec};
 
 /// `DBPIM_ENGINE` override (spelling per `Engine::parse`); shared with
 /// the serving frontend (`coordinator::serve`).
@@ -61,6 +62,11 @@ pub struct SweepCtx {
     /// entirely.
     pub sim: SimCache,
     engine: Engine,
+    /// `DBPIM_CHIPS`/`DBPIM_SCHEME` fleet override: when set, every
+    /// cell simulation routes through the sharding layer (CI's
+    /// `chips=1` golden-equivalence leg relies on the `chips == 1`
+    /// delegation being bit-identical).
+    shard: Option<ShardSpec>,
 }
 
 impl SweepCtx {
@@ -69,6 +75,7 @@ impl SweepCtx {
             cache: CompileCache::new(),
             sim: SimCache::new(),
             engine: env_engine().unwrap_or(Engine::Parallel),
+            shard: sharding::env_shard(),
         }
     }
 
@@ -83,7 +90,25 @@ impl SweepCtx {
         arch: &ArchConfig,
         seed: u64,
     ) -> SimReport {
-        sim::simulate_network_memo(net, sp, arch, seed, self.engine, &self.cache, &self.sim)
+        match self.shard {
+            Some(spec) => self.simulate_fleet(net, sp, arch, seed, spec).report,
+            None => {
+                sim::simulate_network_memo(net, sp, arch, seed, self.engine, &self.cache, &self.sim)
+            }
+        }
+    }
+
+    /// Simulate one cell on an explicit chip fleet (the `shard-sweep`
+    /// driver's entry point); shares the sweep's caches and engine.
+    pub fn simulate_fleet(
+        &self,
+        net: &Network,
+        sp: SparsityConfig,
+        arch: &ArchConfig,
+        seed: u64,
+        spec: ShardSpec,
+    ) -> ShardReport {
+        sharding::simulate_sharded(net, sp, arch, seed, spec, self.engine, &self.cache, &self.sim)
     }
 
     fn stats(&self) -> SweepStats {
@@ -371,6 +396,63 @@ pub fn table3_with_stats(seed: u64) -> (Vec<Table3Row>, SweepStats) {
     .run()
 }
 
+/// `dbpim shard-sweep` row: one (network, scheme, chip count) cell.
+#[derive(Debug, Clone)]
+pub struct ShardSweepRow {
+    pub network: String,
+    pub scheme: &'static str,
+    pub chips: usize,
+    /// End-to-end fleet latency (cycles, interconnect included).
+    pub fleet_cycles: u64,
+    pub interconnect_cycles: u64,
+    /// Single-chip cycles / fleet throughput cycles (pipeline interval
+    /// when pipelining, fleet latency otherwise). 1.0 at `chips == 1`
+    /// by the delegation contract.
+    pub speedup: f64,
+}
+
+/// Speedup-vs-chips × scheme table: resnet18 + mobilenet_v2 on fleets
+/// of 1/4/16 chips under tensor and pipeline parallelism (hybrid is
+/// reachable via `dbpim simulate --chips N --scheme hybrid`).
+pub fn shard_sweep(seed: u64) -> Vec<ShardSweepRow> {
+    shard_sweep_with_stats(seed).0
+}
+
+/// [`shard_sweep`] plus the sweep's cache counters. Every cell's
+/// single-chip baseline is the same memoized `chips=1` run (the
+/// delegation shares identity cache keys with plain runs), so the
+/// sweep simulates each network once per distinct (scheme, chips)
+/// cell plus once for the baseline.
+pub fn shard_sweep_with_stats(seed: u64) -> (Vec<ShardSweepRow>, SweepStats) {
+    let arch = ArchConfig::db_pim();
+    let nets = ["resnet18", "mobilenet_v2"];
+    let schemes = ["tp", "pp"];
+    let chips = [1usize, 4, 16];
+    let axes: Vec<(&'static str, &'static str, usize)> = nets
+        .iter()
+        .flat_map(|&n| schemes.iter().flat_map(move |&s| chips.iter().map(move |&c| (n, s, c))))
+        .collect();
+    SweepSpec {
+        axes,
+        job: |(name, scheme, chips): (&'static str, &'static str, usize), ctx: &SweepCtx| {
+            let net = models::by_name(name).unwrap();
+            let sp = SparsityConfig::hybrid(0.6);
+            let spec = ShardSpec::parse(chips, scheme).expect("static scheme tags");
+            let base = ctx.simulate_fleet(&net, sp, &arch, seed, ShardSpec::single());
+            let r = ctx.simulate_fleet(&net, sp, &arch, seed, spec);
+            ShardSweepRow {
+                network: name.to_string(),
+                scheme,
+                chips,
+                fleet_cycles: r.fleet_cycles(),
+                interconnect_cycles: r.interconnect_cycles,
+                speedup: base.fleet_cycles() as f64 / r.throughput_cycles().max(1) as f64,
+            }
+        },
+    }
+    .run()
+}
+
 /// Fig. 3 data (both panels) for all five networks.
 pub fn fig3(seed: u64) -> (Vec<stats::ZeroBitStats>, Vec<stats::ZeroColumnStats>) {
     let (panels, _) = SweepSpec {
@@ -477,6 +559,22 @@ pub fn fig13_json(rows: &[Fig13Row]) -> Value {
                 ("dw_conv", num(r.dw_conv)),
                 ("mul", num(r.mul)),
                 ("etc", num(r.etc)),
+            ])
+        })
+        .collect())
+}
+
+pub fn shard_sweep_json(rows: &[ShardSweepRow]) -> Value {
+    arr(rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("network", str_(&r.network)),
+                ("scheme", str_(r.scheme)),
+                ("chips", num(r.chips as f64)),
+                ("fleet_cycles", num(r.fleet_cycles as f64)),
+                ("interconnect_cycles", num(r.interconnect_cycles as f64)),
+                ("speedup", num(r.speedup)),
             ])
         })
         .collect())

@@ -8,11 +8,16 @@
 //! arrivals — [`arrivals`] — with deterministic fault injection —
 //! [`faults`]; DESIGN.md §11).
 //!
+//! Multi-chip fleets live in [`sharding`]: tensor/pipeline-parallel
+//! partitioning of a network over several chips with a deterministic
+//! interconnect cost model, merged back into ordinary `SimReport`s
+//! (DESIGN.md §12).
+//!
 //! (The offline image has no tokio/rayon; [`pool`] is std threads with
 //! a global injector + per-worker deques. Nested `scope()`s execute or
-//! steal child jobs instead of spawning threads, so sweep × layer ×
-//! segment parallelism composes without oversubscription — DESIGN.md
-//! §5/§8.)
+//! steal child jobs instead of spawning threads, so sweep × chip ×
+//! layer × segment parallelism composes without oversubscription —
+//! DESIGN.md §5/§8.)
 
 pub mod arrivals;
 pub mod clock;
@@ -21,6 +26,7 @@ pub mod faults;
 pub mod pool;
 pub mod serve;
 pub mod serve_loop;
+pub mod sharding;
 
 /// Default worker count (leave headroom for the OS).
 pub fn default_workers() -> usize {

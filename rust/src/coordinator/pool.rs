@@ -74,6 +74,14 @@ struct Shared {
     /// `notify` skip the lock + broadcast entirely on the hot path when
     /// nobody is asleep — the common case while all workers are busy.
     sleepers: AtomicUsize,
+    /// Queued-job count: incremented *before* a job lands in any queue,
+    /// decremented after a successful pop. Lets `has_work` answer the
+    /// common idle case ("everything drained") with one atomic load
+    /// instead of locking the injector plus every worker deque. A stale
+    /// non-zero merely falls through to the locked scan; a zero is
+    /// authoritative for the sleep protocol because the increment is
+    /// SeqCst-ordered before the push (see `idle_wait`).
+    pending: AtomicUsize,
     shutdown: AtomicBool,
 }
 
@@ -102,6 +110,19 @@ impl Shared {
     }
 
     fn has_work(&self) -> bool {
+        // Fast path: nothing queued anywhere — one SeqCst load instead
+        // of locking the injector + every deque. This is the case every
+        // idle worker hits on every wait cycle. SeqCst pairs with the
+        // SeqCst increment in `push`: a sleeper registered in
+        // `idle_wait` that reads 0 here is ordered after any pusher
+        // that skipped its wakeup (both sides' SeqCst ops form one
+        // total order with the `sleepers` registration).
+        if self.pending.load(Ordering::SeqCst) == 0 {
+            return false;
+        }
+        // Slow confirmation under the locks: `pending` may be stale-high
+        // (a pop between our load and the scan), so verify before
+        // claiming there is work.
         if !self.injector.lock().unwrap().is_empty() {
             return true;
         }
@@ -131,6 +152,9 @@ impl Shared {
     /// Push one job: onto the spawning worker's own deque when called
     /// from a pool thread (LIFO locality), else onto the injector.
     fn push(&self, job: Job, worker: Option<usize>) {
+        // Increment before the job is visible in any queue so a sleeper
+        // observing pending == 0 can be certain no queued job exists.
+        self.pending.fetch_add(1, Ordering::SeqCst);
         match worker {
             Some(i) => self.deques[i].lock().unwrap().push_back(job),
             None => self.injector.lock().unwrap().push_back(job),
@@ -141,12 +165,16 @@ impl Shared {
     /// Pop the next runnable job: own deque (LIFO) → injector (FIFO) →
     /// steal from sibling deques (FIFO end).
     fn find_job(&self, worker: Option<usize>) -> Option<Job> {
+        // Decrements are Relaxed: a stale-high `pending` only sends
+        // `has_work` down the locked scan, never to a wrong answer.
         if let Some(i) = worker {
             if let Some(job) = self.deques[i].lock().unwrap().pop_back() {
+                self.pending.fetch_sub(1, Ordering::Relaxed);
                 return Some(job);
             }
         }
         if let Some(job) = self.injector.lock().unwrap().pop_front() {
+            self.pending.fetch_sub(1, Ordering::Relaxed);
             return Some(job);
         }
         let n = self.deques.len();
@@ -157,6 +185,7 @@ impl Shared {
                 continue;
             }
             if let Some(job) = self.deques[j].lock().unwrap().pop_front() {
+                self.pending.fetch_sub(1, Ordering::Relaxed);
                 return Some(job);
             }
         }
@@ -372,6 +401,7 @@ impl Pool {
             deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
             sleep: Sleep { gen: Mutex::new(0), cv: Condvar::new() },
             sleepers: AtomicUsize::new(0),
+            pending: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
         });
         let handles = (0..workers)

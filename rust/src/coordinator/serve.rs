@@ -47,6 +47,7 @@ use crate::util;
 
 use super::experiments::SweepStats;
 use super::pool;
+use super::sharding::{self, ShardSpec};
 
 /// One admitted request: which deployed model to run, under which arch
 /// preset and precision/sparsity configuration, on which activation
@@ -314,6 +315,38 @@ impl ServeSpec {
         ctx: &ServeCtx,
         max_batch: usize,
     ) -> Result<(Vec<SimReport>, ServeStats), String> {
+        self.run_with_opts(ctx, max_batch, None)
+    }
+
+    /// [`ServeSpec::run_with`] on a chip fleet: every request simulates
+    /// through `coordinator::sharding` under `spec`, and per-request
+    /// reports are fleet-level (interconnect included in `time_ms`).
+    /// A single-chip fleet is bit-identical to [`ServeSpec::run_with`].
+    pub fn run_with_fleet(
+        &self,
+        ctx: &ServeCtx,
+        max_batch: usize,
+        spec: ShardSpec,
+    ) -> Result<(Vec<SimReport>, ServeStats), String> {
+        self.run_with_opts(ctx, max_batch, Some(spec))
+    }
+
+    /// [`ServeSpec::run_with_fleet`] over a fresh context (CLI entry).
+    pub fn run_fleet(
+        &self,
+        max_batch: usize,
+        spec: ShardSpec,
+    ) -> Result<(Vec<SimReport>, ServeStats), String> {
+        let ctx = ServeCtx::new(Registry::from_names(&self.models)?);
+        self.run_with_fleet(&ctx, max_batch, spec)
+    }
+
+    fn run_with_opts(
+        &self,
+        ctx: &ServeCtx,
+        max_batch: usize,
+        shard: Option<ShardSpec>,
+    ) -> Result<(Vec<SimReport>, ServeStats), String> {
         // Admission control: resolve every request before running any
         // (also for programmatically built specs that skipped the JSON
         // validation — an out-of-domain sparsity would otherwise panic
@@ -350,8 +383,37 @@ impl ServeSpec {
         let jobs: Vec<_> = prepared
             .iter()
             .map(|(net, arch, sp, seeds)| {
-                move || {
-                    sim::simulate_batch(net, *sp, arch, seeds, ctx.engine, &ctx.compile, &ctx.sim)
+                move || match shard {
+                    // A real fleet: each request simulates through the
+                    // sharding layer (its own chip × layer fan-out
+                    // nests into the same pool). chips == 1 keeps the
+                    // flattened batch path — the delegation makes both
+                    // bit-identical.
+                    Some(spec) if spec.chips > 1 => seeds
+                        .iter()
+                        .map(|&seed| {
+                            sharding::simulate_sharded(
+                                net,
+                                *sp,
+                                arch,
+                                seed,
+                                spec,
+                                ctx.engine,
+                                &ctx.compile,
+                                &ctx.sim,
+                            )
+                            .report
+                        })
+                        .collect::<Vec<_>>(),
+                    _ => sim::simulate_batch(
+                        net,
+                        *sp,
+                        arch,
+                        seeds,
+                        ctx.engine,
+                        &ctx.compile,
+                        &ctx.sim,
+                    ),
                 }
             })
             .collect();

@@ -50,6 +50,7 @@ use super::clock::{ms_to_ns, ns_to_ms, EventQueue, VirtualClock, VirtualNs};
 use super::experiments::SweepStats;
 use super::faults::{FaultInjector, FaultSpec};
 use super::serve::{percentile, BatchKey, ServeCtx, ServeRequest};
+use super::sharding::{self, ShardScheme, ShardSpec};
 
 /// Terminal outcome of one open-loop request. Every request gets
 /// exactly one; nothing in the loop panics on overload or faults.
@@ -100,8 +101,17 @@ pub struct OpenLoopSpec {
     pub timeout_ms: f64,
     /// Lanes per chip — the continuous batcher's batch-size cap.
     pub max_batch: usize,
-    /// Number of `max_batch`-lane chips.
+    /// Number of `max_batch`-lane chips. With `scheme` unset these are
+    /// independent replicas; with `scheme` set they gang into ONE
+    /// logical `max_batch`-lane server of `chips` shards.
     pub chips: usize,
+    /// Multi-chip sharding scheme (DESIGN.md §12). `None` (default)
+    /// keeps the replica fleet semantics. `Some(scheme)` reinterprets
+    /// `chips` as the shard width of a single logical server whose
+    /// per-request service time comes from
+    /// [`sharding::simulate_sharded`] — interconnect included via the
+    /// merged report's pseudo-layer.
+    pub scheme: Option<ShardScheme>,
     /// Retry budget per request (total attempts = max_retries + 1).
     pub max_retries: u32,
     /// Base backoff (ms); attempt `n` backs off
@@ -273,6 +283,18 @@ impl OpenLoopSpec {
             }
         };
         let deadline_ms = f("deadline_ms", 50.0)?;
+        let chips = u("chips", 2)?;
+        let scheme = match v.get("scheme") {
+            None => None,
+            Some(s) => {
+                let name = s
+                    .as_str()
+                    .ok_or_else(|| "open-loop spec: \"scheme\" must be a string".to_string())?;
+                let parsed = ShardSpec::parse(chips.max(1), name)
+                    .ok_or_else(|| format!("open-loop spec: unknown scheme {name:?}"))?;
+                Some(parsed.scheme)
+            }
+        };
         let spec = OpenLoopSpec {
             models,
             workload,
@@ -282,7 +304,8 @@ impl OpenLoopSpec {
             deadline_ms,
             timeout_ms: f("timeout_ms", 4.0 * deadline_ms)?,
             max_batch: u("max_batch", 8)?,
-            chips: u("chips", 2)?,
+            chips,
+            scheme,
             max_retries: u32::try_from(u("max_retries", 3)?)
                 .map_err(|_| "open-loop spec: \"max_retries\" too large".to_string())?,
             backoff_ms: f("backoff_ms", 1.0)?,
@@ -295,7 +318,7 @@ impl OpenLoopSpec {
     }
 
     pub fn to_json(&self) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("models", arr(self.models.iter().map(|m| str_(m)).collect())),
             ("workload", arr(self.workload.iter().map(ServeRequest::to_json).collect())),
             ("arrivals", self.arrivals.to_json()),
@@ -309,7 +332,11 @@ impl OpenLoopSpec {
             ("backoff_ms", num(self.backoff_ms)),
             ("seed", num(self.seed as f64)),
             ("faults", self.faults.to_json()),
-        ])
+        ];
+        if let Some(scheme) = self.scheme {
+            fields.push(("scheme", str_(scheme.name())));
+        }
+        obj(fields)
     }
 
     /// Load a spec from a JSON file; every error names the file.
@@ -445,8 +472,11 @@ impl<'a> Runner<'a> {
             });
             events.push(t, Ev::Arrive(i));
         }
-        let mut inj = FaultInjector::new(spec.faults, spec.chips);
-        let chips = (0..spec.chips)
+        // A sharded fleet is ONE logical server: faults and outages hit
+        // the whole gang at once, not per-shard replicas.
+        let servers = if spec.scheme.is_some() { 1 } else { spec.chips };
+        let mut inj = FaultInjector::new(spec.faults, servers);
+        let chips = (0..servers)
             .map(|c| {
                 if let Some((down_at, up_at)) = inj.next_down_window(c, 0) {
                     events.push(down_at, Ev::ChipDown { chip: c, up_at });
@@ -675,27 +705,51 @@ impl<'a> Runner<'a> {
         let arch = ArchConfig::by_name(&key.arch).expect("validated at admission");
         let sp = SparsityConfig { value_sparsity: f64::from_bits(key.value_bits), fta: key.fta };
         // All members share the key, hence the seed (it is a compile
-        // input — DESIGN.md §9); simulate_batch returns one report per
-        // member.
-        let seeds: Vec<u64> = members.iter().map(|_| key.seed).collect();
-        let reports = sim::simulate_batch(
-            &net,
-            sp,
-            &arch,
-            &seeds,
-            self.ctx.engine,
-            &self.ctx.compile,
-            &self.ctx.sim,
-        );
+        // input — DESIGN.md §9). Replica fleets simulate one report per
+        // member; a sharded fleet runs the gang once and every member
+        // sees the same merged service time (interconnect included via
+        // the merged report's pseudo-layer).
+        let times_ns: Vec<u64> = match self.spec.scheme {
+            Some(scheme) => {
+                let shard = ShardSpec { chips: self.spec.chips, scheme };
+                let rep = sharding::simulate_sharded(
+                    &net,
+                    sp,
+                    &arch,
+                    key.seed,
+                    shard,
+                    self.ctx.engine,
+                    &self.ctx.compile,
+                    &self.ctx.sim,
+                )
+                .report;
+                vec![rep.time_ns(); members.len()]
+            }
+            None => {
+                let seeds: Vec<u64> = members.iter().map(|_| key.seed).collect();
+                sim::simulate_batch(
+                    &net,
+                    sp,
+                    &arch,
+                    &seeds,
+                    self.ctx.engine,
+                    &self.ctx.compile,
+                    &self.ctx.sim,
+                )
+                .iter()
+                .map(sim::SimReport::time_ns)
+                .collect()
+            }
+        };
         self.batches += 1;
         let now = self.clock.now();
         let epoch = self.chips[c].epoch;
-        for (&r, rep) in members.iter().zip(&reports) {
+        for (&r, &t_ns) in members.iter().zip(&times_ns) {
             self.reqs[r].attempts += 1;
             let attempt = self.reqs[r].attempts;
             let ok = !self.inj.attempt_fails(r as u64, attempt as u64);
             let factor = self.inj.latency_factor(r as u64, attempt as u64);
-            let svc = ((rep.time_ns() as f64) * factor).round().max(1.0) as VirtualNs;
+            let svc = ((t_ns as f64) * factor).round().max(1.0) as VirtualNs;
             self.reqs[r].state = RState::InFlight;
             self.chips[c].busy += 1;
             self.chips[c].inflight.push(r);
@@ -794,6 +848,7 @@ mod tests {
             timeout_ms: 4e6,
             max_batch: 4,
             chips: 2,
+            scheme: None,
             max_retries: 3,
             backoff_ms: 0.5,
             seed: 42,
@@ -909,6 +964,23 @@ mod tests {
     }
 
     #[test]
+    fn sharded_fleet_serves_as_one_logical_server() {
+        let mut spec = base_spec();
+        spec.workload = vec![tpl("small", 1)];
+        spec.models = vec!["small".into()];
+        spec.requests = 8;
+        spec.chips = 2;
+        spec.scheme = Some(ShardScheme::TensorParallel);
+        let (outcomes, stats) = spec.run_with(&fixture_ctx()).unwrap();
+        assert!(outcomes.iter().all(|o| matches!(o.outcome, Outcome::Done { .. })));
+        assert_eq!(stats.done, 8);
+        // the two chips are shards of one server, not two replicas —
+        // the run must replay bit-exactly like any other spec
+        let (o2, _) = spec.run_with(&fixture_ctx()).unwrap();
+        assert_eq!(outcomes, o2);
+    }
+
+    #[test]
     fn serve_loop_replays_bit_exactly() {
         let mut spec = base_spec();
         spec.requests = 16;
@@ -996,6 +1068,16 @@ mod tests {
             ArrivalProcess::Bursty { base_rps: 100.0, burst_rps: 5000.0, mean_phase_ms: 10.0 };
         let back = OpenLoopSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
+        // a sharded spec round-trips its scheme; unknown names error
+        spec.scheme = Some(ShardScheme::PipelineParallel);
+        let back = OpenLoopSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        let mut bad_scheme = spec.to_json();
+        if let Value::Obj(fields) = &mut bad_scheme {
+            fields.insert("scheme".to_string(), str_("warp"));
+        }
+        let err = OpenLoopSpec::from_json(&bad_scheme).unwrap_err();
+        assert!(err.contains("scheme"), "{err}");
         // defaults: a minimal spec parses with stock parameters
         let v = json::parse(
             r#"{"models": ["small"],

@@ -1,0 +1,664 @@
+//! Multi-chip sharding: tensor/pipeline parallelism over fleets of
+//! DB-PIM chips with a deterministic interconnect cost model
+//! (DESIGN.md §12).
+//!
+//! The sharding layer sits between the compiler and the simulator. A
+//! [`ShardSpec`] names a fleet — `chips` identical chips (each a full
+//! `ArchConfig` machine) — and a [`ShardScheme`]:
+//!
+//! * **Tensor parallel** (`tp`): every PIM layer's filter assignments
+//!   are partitioned across chips (LPT by assignment cost, respecting
+//!   each chip's weight-storage capacity `pim_capacity_kb`), each chip
+//!   re-lowers and simulates its subset, and the per-layer results
+//!   merge deterministically. Layer latency = max over chips; an
+//!   all-gather of the output activations is charged per layer.
+//! * **Pipeline parallel** (`pp`): whole layers map to pipeline stages
+//!   (contiguous, placement by a linear-partition DP balancing
+//!   per-stage cycle estimates); chip-boundary activations are charged
+//!   per stage crossing. Latency = sum over stages + transfers;
+//!   steady-state throughput is set by the slowest stage
+//!   ([`ShardReport::pipeline_interval_cycles`]).
+//! * **Hybrid** (`tp × pp`): tensor-parallel groups inside pipeline
+//!   stages; both charge kinds apply.
+//!
+//! **Determinism contract** (extends DESIGN.md §8): `chips == 1` under
+//! any scheme delegates to the single-chip path and is bit-identical
+//! to it — same `SimReport`, same goldens. For `chips > 1` the merge
+//! is order-fixed (chip-major, layer order), per-chip simulations are
+//! pure functions of the chip-local compiled subset, and interconnect
+//! charges are closed-form in (bytes, hops) — so results are
+//! bit-identical for any worker count or steal order. Physical event
+//! totals are *conserved*: the merged totals equal the single-chip
+//! totals exactly, once the per-chip barrier bookkeeping (2 extra
+//! `instrs` per extra chip per layer) is corrected and the
+//! fleet-dependent timing projections (`elapsed_cycles`,
+//! `core_cycles`) are set aside — pinned by `prop_sharding`.
+//!
+//! Communication appears in the merged report as one synthetic
+//! `interconnect` pseudo-layer (category `Etc`, pure latency, zero
+//! physical events) so every downstream consumer of
+//! `SimReport::total_cycles`/`time_ns` — the serve frontends, traces,
+//! sweep tables — naturally sees fleet latency including transfers.
+//!
+//! Cache contract: chip-local artifacts and simulations are memoized
+//! in the same `CompileCache`/`SimCache` as single-chip runs, under
+//! keys extended with the shard scope (`CompileKey::sharded`), so
+//! sharded and unsharded cells of one sweep never alias and the
+//! pipeline scheme (which simulates plain single-chip layers) shares
+//! entries with plain runs.
+
+use std::sync::Arc;
+
+use crate::arch::ArchConfig;
+use crate::compiler::cache::{CompileCache, CompileKey};
+use crate::compiler::{compile_assignment_subset, Assignment, SparsityConfig};
+use crate::energy::EventCounts;
+use crate::models::{LayerKind, Network};
+use crate::sim::{self, Engine, LayerStats, Machine, OpCategory, SimCache, SimReport};
+use crate::tensor::MatI8;
+
+use super::pool;
+
+/// How a fleet of chips divides the network.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardScheme {
+    /// Split every PIM layer's assignments across all chips.
+    TensorParallel,
+    /// Map contiguous layer ranges to pipeline stages, one per chip.
+    PipelineParallel,
+    /// `tp`-way tensor groups inside `pp` pipeline stages
+    /// (`chips == tp * pp`).
+    Hybrid { tp: usize, pp: usize },
+}
+
+impl ShardScheme {
+    /// CLI/JSON tag (`--scheme tp|pp|hybrid`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardScheme::TensorParallel => "tp",
+            ShardScheme::PipelineParallel => "pp",
+            ShardScheme::Hybrid { .. } => "hybrid",
+        }
+    }
+}
+
+/// A fleet: `chips` identical chips under one scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub chips: usize,
+    pub scheme: ShardScheme,
+}
+
+impl ShardSpec {
+    /// The degenerate single-chip fleet (delegates to the plain path).
+    pub fn single() -> Self {
+        ShardSpec { chips: 1, scheme: ShardScheme::TensorParallel }
+    }
+
+    /// Build a spec from the CLI surface: a chip count and a scheme
+    /// tag. `hybrid` factors `chips` into `tp × pp` with `pp` the
+    /// largest divisor ≤ √chips (4 → 2×2, 16 → 4×4, 6 → 3×2), so the
+    /// pipeline depth never exceeds the tensor width. Returns `None`
+    /// for an unknown tag or `chips == 0`.
+    pub fn parse(chips: usize, scheme: &str) -> Option<Self> {
+        if chips == 0 {
+            return None;
+        }
+        let scheme = match scheme {
+            "tp" | "tensor" => ShardScheme::TensorParallel,
+            "pp" | "pipeline" => ShardScheme::PipelineParallel,
+            "hybrid" => {
+                let mut pp = (chips as f64).sqrt().floor() as usize;
+                while pp > 1 && chips % pp != 0 {
+                    pp -= 1;
+                }
+                let pp = pp.max(1);
+                ShardScheme::Hybrid { tp: chips / pp, pp }
+            }
+            _ => return None,
+        };
+        Some(ShardSpec { chips, scheme })
+    }
+
+    /// `(tensor width, pipeline depth)`; `tp * pp == chips`.
+    pub fn factors(&self) -> (usize, usize) {
+        match self.scheme {
+            ShardScheme::TensorParallel => (self.chips, 1),
+            ShardScheme::PipelineParallel => (1, self.chips),
+            ShardScheme::Hybrid { tp, pp } => (tp, pp),
+        }
+    }
+}
+
+/// Read a fleet spec from the environment (`DBPIM_CHIPS`,
+/// `DBPIM_SCHEME`; scheme defaults to `tp`). Lets CI route the whole
+/// experiment surface through the sharded path — the `chips=1`
+/// golden-equivalence leg — without touching every driver's signature.
+pub fn env_shard() -> Option<ShardSpec> {
+    let chips = std::env::var("DBPIM_CHIPS").ok()?.trim().parse::<usize>().ok()?;
+    let scheme = std::env::var("DBPIM_SCHEME").unwrap_or_else(|_| "tp".into());
+    ShardSpec::parse(chips, scheme.trim())
+}
+
+/// A sharded run: the merged fleet-level report plus the fleet
+/// decomposition.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub spec: ShardSpec,
+    /// Merged report. Layer stats are fleet-level (TP layers carry the
+    /// max-over-chips latency and the summed physical events); when
+    /// communication was charged, one trailing `interconnect`
+    /// pseudo-layer holds it, so `total_cycles`/`time_ns` are fleet
+    /// latency including transfers.
+    pub report: SimReport,
+    /// Busy cycles per chip (chip index = stage * tp + rank).
+    pub chip_cycles: Vec<u64>,
+    /// Total interconnect cycles charged (all-gathers + stage
+    /// boundaries).
+    pub interconnect_cycles: u64,
+    /// Total bytes moved across chip boundaries.
+    pub interconnect_bytes: u64,
+    /// Steady-state initiation interval: the slowest pipeline stage
+    /// including its outgoing transfer. Equals fleet latency when
+    /// `pp == 1` (no pipelining).
+    pub pipeline_interval_cycles: u64,
+}
+
+impl ShardReport {
+    /// End-to-end fleet latency for one inference (cycles), including
+    /// interconnect charges.
+    pub fn fleet_cycles(&self) -> u64 {
+        self.report.total_cycles()
+    }
+
+    /// Cycles per inference at steady state: the pipeline interval
+    /// when pipelining, else the fleet latency.
+    pub fn throughput_cycles(&self) -> u64 {
+        let (_, pp) = self.spec.factors();
+        if pp > 1 {
+            self.pipeline_interval_cycles
+        } else {
+            self.fleet_cycles()
+        }
+    }
+}
+
+/// Fleet-independent projection of an event total: zero the two
+/// timing fields (`elapsed_cycles`, `core_cycles`) that by design
+/// depend on how work spreads over chips. Everything else — the
+/// physical work: MACs, cycles of macro activity, buffer traffic,
+/// (corrected) instruction count — must be conserved exactly by any
+/// sharding; `prop_sharding` pins that.
+pub fn physical_projection(e: &EventCounts) -> EventCounts {
+    let mut p = e.clone();
+    p.elapsed_cycles = 0;
+    p.core_cycles = 0;
+    p
+}
+
+/// Weight-storage footprint of one assignment on a chip, in bytes:
+/// `kept_rows × active bit-columns` cells, one bit each.
+pub fn assignment_footprint_bytes(a: &Assignment) -> u64 {
+    ((a.kept_rows.len() * a.active_cols()) as u64).div_ceil(8)
+}
+
+/// Partition a layer's assignments across `chips` chips: LPT order by
+/// simulation cost (`kept_rows × active_cols`, index as tiebreak),
+/// each assignment to the least-loaded chip whose weight capacity
+/// (`pim_capacity_kb`) still fits it — falling back to the
+/// least-loaded chip outright when none fits (capacity is a placement
+/// preference, not a hard wall; the guaranteed-fit condition is pinned
+/// by `prop_sharding::tp_placement_respects_capacity`). Returned
+/// per-chip index lists are ascending; concatenated they are a
+/// permutation of `0..assignments.len()`.
+pub fn partition_assignments(
+    assignments: &[Assignment],
+    arch: &ArchConfig,
+    chips: usize,
+) -> Vec<Vec<usize>> {
+    let chips = chips.max(1);
+    let cap = (arch.pim_capacity_kb() as u64) * 1024;
+    let mut order: Vec<(u64, usize)> = assignments
+        .iter()
+        .enumerate()
+        .map(|(i, a)| ((a.kept_rows.len() * a.active_cols()) as u64, i))
+        .collect();
+    order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); chips];
+    let mut load = vec![0u64; chips];
+    let mut foot = vec![0u64; chips];
+    for (cost, idx) in order {
+        let fp = assignment_footprint_bytes(&assignments[idx]);
+        let fits = (0..chips).filter(|&c| foot[c] + fp <= cap).min_by_key(|&c| (load[c], c));
+        let c = fits.unwrap_or_else(|| {
+            (0..chips).min_by_key(|&c| (load[c], c)).expect("chips >= 1")
+        });
+        parts[c].push(idx);
+        load[c] += cost.max(1);
+        foot[c] += fp;
+    }
+    for p in &mut parts {
+        p.sort_unstable();
+    }
+    parts
+}
+
+/// Output-activation volume of a layer in bytes (i8 activations) —
+/// what an all-gather (TP) or a stage boundary (PP) moves.
+fn layer_output_bytes(kind: &LayerKind) -> u64 {
+    match *kind {
+        LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
+            let (m, _, n) = kind.matmul_dims().expect("PIM layer");
+            (m * n) as u64
+        }
+        LayerKind::DwConv { ch, kernel, stride, pad, in_hw } => {
+            let out_hw = (in_hw + 2 * pad - kernel) / stride + 1;
+            (ch * out_hw * out_hw) as u64
+        }
+        LayerKind::Pool { elems }
+        | LayerKind::Act { elems }
+        | LayerKind::ResAdd { elems }
+        | LayerKind::Mul { elems } => elems as u64,
+    }
+}
+
+/// Ring all-gather charge for one TP layer: `c` participating chips
+/// each hold `bytes / c` of the output and receive the rest over
+/// `c - 1` hops. Zero when one chip holds everything.
+fn all_gather_cycles(arch: &ArchConfig, bytes: u64, c: usize) -> u64 {
+    if c <= 1 {
+        return 0;
+    }
+    arch.link_transfer_cycles(bytes - bytes / c as u64, c as u64 - 1)
+}
+
+/// Contiguous linear partition of `weights` into at most `stages`
+/// ranges minimizing the maximum range sum (classic DP; earliest cut
+/// wins ties, so placement is deterministic). Every range is
+/// non-empty; returns `min(stages, len)` ranges covering `0..len`.
+fn partition_stages(weights: &[u64], stages: usize) -> Vec<(usize, usize)> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let s = stages.clamp(1, n);
+    let mut pre = vec![0u64; n + 1];
+    for (i, &w) in weights.iter().enumerate() {
+        pre[i + 1] = pre[i] + w;
+    }
+    let sum = |a: usize, b: usize| pre[b] - pre[a];
+    let mut dp = vec![vec![u64::MAX; n + 1]; s + 1];
+    let mut cut = vec![vec![0usize; n + 1]; s + 1];
+    dp[0][0] = 0;
+    for k in 1..=s {
+        for i in k..=n {
+            for j in (k - 1)..i {
+                if dp[k - 1][j] == u64::MAX {
+                    continue;
+                }
+                let cand = dp[k - 1][j].max(sum(j, i));
+                if cand < dp[k][i] {
+                    dp[k][i] = cand;
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+    let mut bounds = Vec::with_capacity(s);
+    let mut i = n;
+    for k in (1..=s).rev() {
+        let j = cut[k][i];
+        bounds.push((j, i));
+        i = j;
+    }
+    bounds.reverse();
+    bounds
+}
+
+/// One fleet-level layer after the TP merge, plus what the scheduler
+/// needs to place and charge it.
+struct MergedLayer {
+    stats: LayerStats,
+    /// Per-tensor-rank busy cycles (len == tp; SIMD layers run on rank
+    /// 0 only).
+    rank_elapsed: Vec<u64>,
+    /// All-gather charge for this layer (TP layers with ≥ 2
+    /// participating chips; else 0).
+    comm_cycles: u64,
+    comm_bytes: u64,
+    /// Net layer this came from (for stage-boundary volumes).
+    net_idx: usize,
+}
+
+/// Simulate `net` on a fleet. `chips == 1` (any scheme) delegates to
+/// [`sim::simulate_network_memo`] and is bit-identical to it; sharded
+/// runs fan per-chip × per-layer jobs into the worker pool and merge
+/// in fixed chip-major order. Both caches memoize chip-local work
+/// under shard-scoped keys (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_sharded(
+    net: &Network,
+    sparsity: SparsityConfig,
+    arch: &ArchConfig,
+    seed: u64,
+    spec: ShardSpec,
+    engine: Engine,
+    cache: &CompileCache,
+    sim_cache: &SimCache,
+) -> ShardReport {
+    let (tp, pp) = spec.factors();
+    if spec.chips <= 1 {
+        let report = sim::simulate_network_memo(net, sparsity, arch, seed, engine, cache, sim_cache);
+        let total = report.total_cycles();
+        return ShardReport {
+            spec,
+            report,
+            chip_cycles: vec![total],
+            interconnect_cycles: 0,
+            interconnect_bytes: 0,
+            pipeline_interval_cycles: total,
+        };
+    }
+    debug_assert_eq!(tp * pp, spec.chips, "scheme factors must cover the fleet");
+
+    let machine = Machine::with_engine(arch.clone(), engine);
+    let merged = if tp > 1 {
+        merge_tensor_parallel(net, sparsity, &machine, seed, tp, cache, sim_cache)
+    } else {
+        // Pure pipeline: per-layer results are plain single-chip runs,
+        // memoized under the identity keys (shared with unsharded
+        // sweeps of the same cell).
+        let report = sim::simulate_network_memo(net, sparsity, arch, seed, engine, cache, sim_cache);
+        let kinds = present_layer_indices(net, arch);
+        debug_assert_eq!(kinds.len(), report.layers.len());
+        report
+            .layers
+            .into_iter()
+            .zip(kinds)
+            .map(|(stats, net_idx)| MergedLayer {
+                rank_elapsed: vec![stats.elapsed],
+                comm_cycles: 0,
+                comm_bytes: 0,
+                net_idx,
+                stats,
+            })
+            .collect()
+    };
+
+    // --- pipeline placement + interconnect charges ------------------
+    let weights: Vec<u64> = merged.iter().map(|l| l.stats.elapsed + l.comm_cycles).collect();
+    let stages = partition_stages(&weights, pp);
+    let mut comm_cycles: u64 = merged.iter().map(|l| l.comm_cycles).sum();
+    let mut comm_bytes: u64 = merged.iter().map(|l| l.comm_bytes).sum();
+    let mut interval: u64 = 0;
+    let mut chip_cycles = vec![0u64; spec.chips];
+    for (s, &(a, b)) in stages.iter().enumerate() {
+        let stage_sum: u64 = weights[a..b].iter().sum();
+        let boundary = if s + 1 < stages.len() {
+            let out = layer_output_bytes(&net.layers[merged[b - 1].net_idx].kind);
+            comm_bytes += out;
+            arch.link_transfer_cycles(out, 1)
+        } else {
+            0
+        };
+        comm_cycles += boundary;
+        interval = interval.max(stage_sum + boundary);
+        for l in &merged[a..b] {
+            for (r, &e) in l.rank_elapsed.iter().enumerate() {
+                chip_cycles[s * tp + r] += e;
+            }
+        }
+    }
+
+    // --- assemble the merged report ---------------------------------
+    let mut layers: Vec<LayerStats> = Vec::with_capacity(merged.len() + 1);
+    let mut totals = EventCounts::default();
+    for l in merged {
+        totals.add(&l.stats.events);
+        layers.push(l.stats);
+    }
+    if comm_cycles > 0 {
+        let stats = interconnect_layer(arch, comm_cycles);
+        totals.add(&stats.events);
+        layers.push(stats);
+    }
+    let report = SimReport {
+        arch: Arc::clone(&machine.arch),
+        network: net.name.clone(),
+        sparsity,
+        layers,
+        totals,
+    };
+    let interval = if pp > 1 { interval } else { report.total_cycles() };
+    ShardReport {
+        spec,
+        report,
+        chip_cycles,
+        interconnect_cycles: comm_cycles,
+        interconnect_bytes: comm_bytes,
+        pipeline_interval_cycles: interval,
+    }
+}
+
+/// The synthetic communication pseudo-layer: pure latency, category
+/// `Etc`, zero physical events — `physical_projection` of its events
+/// is all-zero by construction.
+fn interconnect_layer(arch: &ArchConfig, cycles: u64) -> LayerStats {
+    LayerStats {
+        name: "interconnect".into(),
+        category: OpCategory::Etc,
+        events: EventCounts { elapsed_cycles: cycles, ..EventCounts::default() },
+        core_cycles: vec![0; arch.n_cores],
+        elapsed: cycles,
+    }
+}
+
+/// Indices of the net layers that appear in a report under `arch`
+/// (PIM always; SIMD layers only when the chip has the SIMD core).
+fn present_layer_indices(net: &Network, arch: &ArchConfig) -> Vec<usize> {
+    net.layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.kind.matmul_dims().is_some() || arch.has_simd)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Tensor-parallel body: fan (PIM layer × chip) jobs into the pool,
+/// then merge per layer in fixed chip order. SIMD layers are costed
+/// exactly once (they are not split), identical to the single-chip
+/// report.
+fn merge_tensor_parallel(
+    net: &Network,
+    sparsity: SparsityConfig,
+    machine: &Machine,
+    seed: u64,
+    tp: usize,
+    cache: &CompileCache,
+    sim_cache: &SimCache,
+) -> Vec<MergedLayer> {
+    let arch = &machine.arch;
+    let pim_idx = sim::pim_indices(net);
+    let cells: Vec<(usize, usize)> =
+        pim_idx.iter().flat_map(|&idx| (0..tp).map(move |chip| (idx, chip))).collect();
+    let chip_stats: Vec<Option<LayerStats>> = {
+        let run = |&(idx, chip): &(usize, usize)| {
+            simulate_chip_layer(net, idx, sparsity, machine, seed, tp, chip, cache, sim_cache)
+        };
+        match machine.engine {
+            Engine::Parallel => {
+                let jobs: Vec<_> = cells.iter().map(|cell| move || run(cell)).collect();
+                pool::run_jobs(jobs)
+            }
+            Engine::Sequential => cells.iter().map(run).collect(),
+        }
+    };
+
+    let mut per_layer = chip_stats.chunks(tp);
+    let mut pim_merged = pim_idx
+        .iter()
+        .map(|&idx| {
+            let chips = per_layer.next().expect("one chunk per PIM layer");
+            merge_pim_layer(net, idx, arch, chips, tp)
+        })
+        .collect::<Vec<_>>()
+        .into_iter();
+    // Interleave with the once-costed SIMD layers, in net order.
+    let mut merged = Vec::new();
+    for (net_idx, layer) in net.layers.iter().enumerate() {
+        if layer.kind.matmul_dims().is_some() {
+            merged.push(pim_merged.next().expect("merged PIM layer"));
+        } else if let Some(stats) = sim::simd_layer_stats(machine, layer) {
+            let mut rank_elapsed = vec![0u64; tp];
+            rank_elapsed[0] = stats.elapsed;
+            merged.push(MergedLayer { rank_elapsed, comm_cycles: 0, comm_bytes: 0, net_idx, stats });
+        }
+    }
+    merged
+}
+
+/// Merge one PIM layer's per-chip stats: physical events sum, the
+/// per-chip barrier bookkeeping (Sync + End = 2 `instrs` per program)
+/// is corrected so the merged count equals the single-chip count
+/// exactly, latency is the slowest chip, and per-core busy cycles
+/// concatenate in chip order. The all-gather is charged over the
+/// chips that actually hold filters.
+fn merge_pim_layer(
+    net: &Network,
+    idx: usize,
+    arch: &ArchConfig,
+    chips: &[Option<LayerStats>],
+    tp: usize,
+) -> MergedLayer {
+    let present: Vec<&LayerStats> = chips.iter().flatten().collect();
+    debug_assert!(!present.is_empty(), "chip 0 always simulates");
+    let mut events = EventCounts::default();
+    let mut core_cycles = Vec::with_capacity(present.len() * arch.n_cores);
+    let mut elapsed = 0u64;
+    let mut rank_elapsed = vec![0u64; tp];
+    let mut busy = 0usize; // chips with actual filter work
+    for (chip, slot) in chips.iter().enumerate() {
+        if let Some(s) = slot {
+            events.add(&s.events);
+            core_cycles.extend_from_slice(&s.core_cycles);
+            elapsed = elapsed.max(s.elapsed);
+            rank_elapsed[chip] = s.elapsed;
+            if s.elapsed > 0 || s.events.weight_writes > 0 {
+                busy += 1;
+            }
+        }
+    }
+    // Each extra chip-local program re-runs the Sync + End barriers.
+    events.instrs -= 2 * (present.len() as u64 - 1);
+    events.elapsed_cycles = elapsed;
+    let (comm_cycles, comm_bytes) = if busy >= 2 {
+        let bytes = layer_output_bytes(&net.layers[idx].kind);
+        (all_gather_cycles(arch, bytes, busy), bytes - bytes / busy as u64)
+    } else {
+        (0, 0)
+    };
+    MergedLayer {
+        stats: LayerStats {
+            name: net.layers[idx].name.clone(),
+            category: OpCategory::PimConvFc,
+            events,
+            core_cycles,
+            elapsed,
+        },
+        rank_elapsed,
+        comm_cycles,
+        comm_bytes,
+        net_idx: idx,
+    }
+}
+
+/// One (layer, chip) job: partition the full layer's assignments,
+/// re-lower this chip's subset (memoized under the shard-scoped
+/// compile key), and simulate it (memoized under the matching sim
+/// key). Chips that received no assignments return `None` — except
+/// chip 0, which always simulates (possibly an empty program) so a
+/// layer with no assignments still contributes its barrier
+/// bookkeeping exactly like the single-chip run.
+#[allow(clippy::too_many_arguments)]
+fn simulate_chip_layer(
+    net: &Network,
+    idx: usize,
+    sparsity: SparsityConfig,
+    machine: &Machine,
+    seed: u64,
+    tp: usize,
+    chip: usize,
+    cache: &CompileCache,
+    sim_cache: &SimCache,
+) -> Option<LayerStats> {
+    let arch = &machine.arch;
+    let full = cache.get_or_compile(net, idx, sparsity, arch, seed).expect("PIM layer");
+    let mine = partition_assignments(&full.assignments, arch, tp).swap_remove(chip);
+    if mine.is_empty() && chip != 0 {
+        return None;
+    }
+    let key = CompileKey::new(net, idx, sparsity, arch, seed).sharded(tp, chip);
+    let (stats, _) = sim_cache.get_or_run_keyed(key.clone(), false, || {
+        let sub = cache.get_or_insert_with(key, || compile_assignment_subset(&full, &mine, arch));
+        let x = arch.input_skipping.then(|| {
+            let m = sub.prep.m.max(1);
+            MatI8::from_vec(
+                m,
+                sub.prep.k,
+                crate::models::synthesize_activations(
+                    seed ^ ((idx as u64) << 20),
+                    m * sub.prep.k,
+                ),
+            )
+        });
+        let (stats, _) = machine.run_pim_layer(&sub, x.as_ref(), false);
+        (stats, None)
+    });
+    Some(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_scheme_and_factors_hybrid() {
+        assert_eq!(ShardSpec::parse(4, "tp").unwrap().scheme, ShardScheme::TensorParallel);
+        assert_eq!(ShardSpec::parse(4, "pp").unwrap().scheme, ShardScheme::PipelineParallel);
+        let hybrid = |chips| ShardSpec::parse(chips, "hybrid").unwrap().scheme;
+        assert_eq!(hybrid(4), ShardScheme::Hybrid { tp: 2, pp: 2 });
+        assert_eq!(hybrid(16), ShardScheme::Hybrid { tp: 4, pp: 4 });
+        assert_eq!(hybrid(6), ShardScheme::Hybrid { tp: 3, pp: 2 });
+        assert_eq!(hybrid(1), ShardScheme::Hybrid { tp: 1, pp: 1 });
+        assert!(ShardSpec::parse(0, "tp").is_none());
+        assert!(ShardSpec::parse(4, "??").is_none());
+    }
+
+    #[test]
+    fn stage_partition_balances_and_covers() {
+        let w = [10u64, 1, 1, 1, 10, 1, 1, 1];
+        let st = partition_stages(&w, 3);
+        assert_eq!(st.len(), 3);
+        assert_eq!(st.first().unwrap().0, 0);
+        assert_eq!(st.last().unwrap().1, w.len());
+        for win in st.windows(2) {
+            assert_eq!(win[0].1, win[1].0, "stages must be contiguous");
+            assert!(win[0].0 < win[0].1, "stages must be non-empty");
+        }
+        let worst = st.iter().map(|&(a, b)| w[a..b].iter().sum::<u64>()).max().unwrap();
+        assert!(worst <= 13, "DP should balance the two heavy layers, got {worst}");
+        // more stages than layers: one layer each
+        assert_eq!(partition_stages(&[5, 5], 8).len(), 2);
+        assert!(partition_stages(&[], 4).is_empty());
+    }
+
+    #[test]
+    fn all_gather_is_zero_for_one_chip_and_grows_with_chips() {
+        let arch = ArchConfig::db_pim();
+        assert_eq!(all_gather_cycles(&arch, 1 << 20, 1), 0);
+        let c2 = all_gather_cycles(&arch, 1 << 20, 2);
+        let c4 = all_gather_cycles(&arch, 1 << 20, 4);
+        assert!(c2 > 0);
+        assert!(c4 > c2, "more hops + larger remote share: {c4} vs {c2}");
+    }
+}

@@ -16,8 +16,8 @@
 //!                          results, p50/p99 latency, req/s)
 //! dbpim serve --open-loop [--spec <openloop.json>] [--rate R]
 //!             [--requests N] [--arrival poisson|bursty] [--deadline-ms D]
-//!             [--queue-cap Q] [--chips C] [--batch B] [--seed S]
-//!             [--rate-sweep]
+//!             [--queue-cap Q] [--chips C] [--scheme tp|pp|hybrid]
+//!             [--batch B] [--seed S] [--rate-sweep]
 //!                          run the open-loop continuous-batching serve
 //!                          loop on a virtual clock: seeded arrivals,
 //!                          bounded admission queue with shedding, EDF
@@ -26,12 +26,24 @@
 //!                          injection: `DBPIM_FAULT_SEED=N` (or a
 //!                          "faults" object in the spec file) — see
 //!                          DESIGN.md §11
-//! dbpim info               architecture summary + effective pool size
+//! dbpim shard-sweep        speedup-vs-chips table (1/4/16 chips, tensor
+//!                          vs pipeline parallel) per zoo model, with the
+//!                          interconnect charge broken out
+//! dbpim info               architecture summary + effective topology
+//!                          (pool, fleet, kernel backend, cache shards)
 //! ```
 //!
 //! `--workers N` (any subcommand) sizes the shared worker pool; the
 //! `DBPIM_WORKERS` env var is consulted when the flag is absent, and
 //! `default_workers()` otherwise. Results never depend on the count.
+//!
+//! `--chips N --scheme tp|pp|hybrid` (on `simulate` and `serve`) runs
+//! the workload on a sharded multi-chip fleet through
+//! `coordinator::sharding` (DESIGN.md §12): tensor parallelism splits
+//! each layer's filters across chips, pipeline parallelism maps layer
+//! ranges to stages, and a deterministic interconnect cost model
+//! charges the communication. `--chips 1` is bit-identical to the
+//! single-chip path under every scheme.
 //!
 //! `--kernel auto|scalar|swar|wide` (any subcommand) forces the kernel
 //! backend policy; the `DBPIM_KERNEL` env var is consulted when the
@@ -41,12 +53,13 @@
 
 use dbpim::arch::ArchConfig;
 use dbpim::benchlib::{f2, pct, print_table};
-use dbpim::compiler::SparsityConfig;
+use dbpim::compiler::{CompileCache, SparsityConfig};
 use dbpim::coordinator::arrivals::ArrivalProcess;
 use dbpim::coordinator::experiments as exp;
 use dbpim::coordinator::faults::FaultSpec;
 use dbpim::coordinator::serve;
 use dbpim::coordinator::serve_loop::OpenLoopSpec;
+use dbpim::coordinator::sharding::{self, ShardSpec};
 use dbpim::json;
 use dbpim::models;
 use dbpim::sim;
@@ -95,10 +108,11 @@ fn main() {
         "energy" => cmd_energy(&args[1..]),
         "trace" => cmd_trace(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
+        "shard-sweep" => cmd_shard_sweep(),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dbpim <verify|simulate|energy|trace|serve|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
+                "usage: dbpim <verify|simulate|energy|trace|serve|shard-sweep|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
             );
             2
         }
@@ -122,6 +136,25 @@ fn usize_flag(args: &[String], name: &str, min: usize) -> Result<Option<usize>, 
                 Err(2)
             }
         },
+    }
+}
+
+/// Parse the shared `--chips N --scheme tp|pp|hybrid` fleet flags.
+/// `Ok(None)` when both are absent (plain single-chip run); `--scheme`
+/// alone implies `--chips 1`, `--chips` alone implies tensor parallel.
+fn shard_flags(args: &[String]) -> Result<Option<ShardSpec>, i32> {
+    let chips = usize_flag(args, "--chips", 1)?;
+    let scheme = flag_value(args, "--scheme");
+    if chips.is_none() && scheme.is_none() {
+        return Ok(None);
+    }
+    let name = scheme.unwrap_or_else(|| "tp".to_string());
+    match ShardSpec::parse(chips.unwrap_or(1), &name) {
+        Some(spec) => Ok(Some(spec)),
+        None => {
+            eprintln!("--scheme expects tp|pp|hybrid");
+            Err(2)
+        }
     }
 }
 
@@ -226,7 +259,33 @@ fn cmd_simulate(args: &[String]) -> i32 {
             }
         },
     };
+    let shard = match shard_flags(args) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
     let t0 = std::time::Instant::now();
+    if let Some(fleet) = shard {
+        let (compile, simc) = (CompileCache::new(), sim::SimCache::new());
+        let r = sharding::simulate_sharded(&net, sp, &arch, 42, fleet, engine, &compile, &simc);
+        println!(
+            "{name} on {} x{} chips ({}, {engine:?} engine): {} cycles ({:.3} ms), interconnect {} cycles / {} bytes",
+            arch.name,
+            fleet.chips,
+            fleet.scheme.name(),
+            r.fleet_cycles(),
+            r.report.time_ms(),
+            r.interconnect_cycles,
+            r.interconnect_bytes,
+        );
+        if r.pipeline_interval_cycles != r.fleet_cycles() {
+            println!("  steady-state interval: {} cycles/inference", r.pipeline_interval_cycles);
+        }
+        for (c, cyc) in r.chip_cycles.iter().enumerate() {
+            println!("  chip {c}: {cyc} busy cycles");
+        }
+        println!("simulated in {:?} host time", t0.elapsed());
+        return 0;
+    }
     let r = sim::simulate_network_with_engine(&net, sp, &arch, 42, engine);
     println!(
         "{name} on {} ({engine:?} engine): {} cycles ({:.3} ms @ {:.0} MHz), PIM-only {:.3} ms, {:.1} µJ, U_act {}",
@@ -438,7 +497,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     let Some(path) = flag_value(args, "--replay") else {
         eprintln!(
-            "usage: dbpim serve --replay <trace.json> [--batch N] [--workers N]\n       dbpim serve --open-loop [--spec <openloop.json>] [--rate R] [--requests N] [--rate-sweep]"
+            "usage: dbpim serve --replay <trace.json> [--batch N] [--workers N] [--chips N --scheme tp|pp|hybrid]\n       dbpim serve --open-loop [--spec <openloop.json>] [--rate R] [--requests N] [--rate-sweep]"
         );
         return 2;
     };
@@ -452,6 +511,10 @@ fn cmd_serve(args: &[String]) -> i32 {
             }
         },
     };
+    let fleet = match shard_flags(args) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
     let spec = match serve::ServeSpec::load(&path) {
         Ok(s) => s,
         Err(e) => {
@@ -459,13 +522,21 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     };
-    let (results, stats) = match spec.run(batch) {
+    let run = match fleet {
+        Some(f) => spec.run_fleet(batch, f),
+        None => spec.run(batch),
+    };
+    let (results, stats) = match run {
         Ok(r) => r,
         Err(e) => {
             eprintln!("serve error: {e}");
             return 1;
         }
     };
+    if let Some(f) = fleet {
+        let scheme = f.scheme.name();
+        println!("fleet: {} chip(s), scheme {scheme} (latencies include interconnect)", f.chips);
+    }
     // per-model latency aggregation (admission order preserved per row)
     let mut agg: Vec<(String, usize, f64)> = Vec::new();
     for (r, lat) in results.iter().zip(&stats.latencies_ms) {
@@ -529,6 +600,7 @@ fn cmd_serve_open_loop(args: &[String]) -> i32 {
                 timeout_ms: 200.0,
                 max_batch: 8,
                 chips: 2,
+                scheme: None,
                 max_retries: 3,
                 backoff_ms: 1.0,
                 seed: 42,
@@ -584,6 +656,17 @@ fn cmd_serve_open_loop(args: &[String]) -> i32 {
             Err(code) => return code,
             Ok(Some(n)) => *slot = n,
             Ok(None) => {}
+        }
+    }
+    // `--scheme` gangs the chips into one sharded logical server
+    // (DESIGN.md §12) instead of independent replicas.
+    if let Some(name) = flag_value(args, "--scheme") {
+        match ShardSpec::parse(spec.chips.max(1), &name) {
+            Some(s) => spec.scheme = Some(s.scheme),
+            None => {
+                eprintln!("--scheme expects tp|pp|hybrid");
+                return 2;
+            }
         }
     }
     if let Some(s) = flag_value(args, "--deadline-ms") {
@@ -665,6 +748,10 @@ fn cmd_serve_open_loop(args: &[String]) -> i32 {
         spec.queue_cap,
         f2(spec.deadline_ms),
     );
+    if let Some(scheme) = spec.scheme {
+        let name = scheme.name();
+        println!("sharded fleet: 1 logical server of {} {name} shards", spec.chips);
+    }
     if spec.faults.enabled() {
         println!(
             "faults on (seed {}): transient {} / spike {} at {}x / outages ~{} ms every ~{} ms",
@@ -701,6 +788,34 @@ fn cmd_serve_open_loop(args: &[String]) -> i32 {
     0
 }
 
+/// Speedup-vs-chips × scheme table over the zoo (DESIGN.md §12):
+/// merged fleet cycles, the interconnect charge, and throughput speedup
+/// against the memoized single-chip baseline.
+fn cmd_shard_sweep() -> i32 {
+    let (rows, stats) = exp::shard_sweep_with_stats(42);
+    print_table(
+        "Shard sweep — fleet cycles & speedup vs single chip",
+        &["network", "scheme", "chips", "fleet cycles", "interconnect", "speedup"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    r.scheme.to_string(),
+                    r.chips.to_string(),
+                    r.fleet_cycles.to_string(),
+                    r.interconnect_cycles.to_string(),
+                    format!("{}x", f2(r.speedup)),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
+    write_report("shard_sweep", &exp::shard_sweep_json(&rows));
+    0
+}
+
 fn cmd_info() -> i32 {
     for arch in [
         ArchConfig::db_pim(),
@@ -727,10 +842,22 @@ fn cmd_info() -> i32 {
         "worker pool: {} threads (set with --workers N or DBPIM_WORKERS)",
         dbpim::coordinator::pool::effective_workers()
     );
+    let fleet = sharding::env_shard().unwrap_or_else(ShardSpec::single);
+    let (tp, pp) = fleet.factors();
+    println!(
+        "fleet: {} chip(s), scheme {} (tp {tp} x pp {pp}; set with --chips/--scheme or DBPIM_CHIPS/DBPIM_SCHEME)",
+        fleet.chips,
+        fleet.scheme.name()
+    );
     println!(
         "kernel policy: {} (set with --kernel or DBPIM_KERNEL; avx2 {})",
         dbpim::sim::backend::effective_policy().describe(),
         if dbpim::sim::backend::avx2_available() { "available" } else { "unavailable" }
+    );
+    println!(
+        "caches: compile {} shards, sim {} shards",
+        CompileCache::shard_count(),
+        sim::SimCache::shard_count()
     );
     0
 }

@@ -23,6 +23,8 @@
 //! `Machine::run_pim_layer` dispatches on the machine's configured
 //! [`Engine`] so every existing call site keeps working unchanged.
 
+use std::sync::Arc;
+
 use crate::arch::ArchConfig;
 use crate::compiler::CompiledLayer;
 use crate::energy::{EnergyTable, EventCounts};
@@ -61,7 +63,12 @@ pub enum OpCategory {
 /// The machine: an architecture + energy table + execution engine.
 #[derive(Debug, Clone)]
 pub struct Machine {
-    pub arch: ArchConfig,
+    /// Shared architecture description. `Arc` so the per-batch machine
+    /// and every report it assembles alias one config instead of
+    /// deep-cloning it per layer/report on the sweep hot path (deref
+    /// coercion keeps `&machine.arch` usable wherever `&ArchConfig` is
+    /// expected).
+    pub arch: Arc<ArchConfig>,
     pub energy: EnergyTable,
     /// How segmented programs are driven (default: parallel; results
     /// are bit-identical either way).
@@ -69,12 +76,12 @@ pub struct Machine {
 }
 
 impl Machine {
-    pub fn new(arch: ArchConfig) -> Self {
+    pub fn new(arch: impl Into<Arc<ArchConfig>>) -> Self {
         Self::with_engine(arch, Engine::Parallel)
     }
 
-    pub fn with_engine(arch: ArchConfig, engine: Engine) -> Self {
-        Self { arch, energy: EnergyTable::default28nm(), engine }
+    pub fn with_engine(arch: impl Into<Arc<ArchConfig>>, engine: Engine) -> Self {
+        Self { arch: arch.into(), energy: EnergyTable::default28nm(), engine }
     }
 
     /// Execute one compiled PIM layer.

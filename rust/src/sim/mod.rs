@@ -53,6 +53,8 @@ pub use engine::Engine;
 pub use machine::{LayerStats, Machine, OpCategory};
 pub use simcache::SimCache;
 
+use std::sync::Arc;
+
 use crate::arch::ArchConfig;
 use crate::compiler::cache::CompileCache;
 use crate::compiler::{self, SparsityConfig};
@@ -64,7 +66,11 @@ use crate::tensor::MatI8;
 /// Whole-network simulation result.
 #[derive(Debug, Clone)]
 pub struct SimReport {
-    pub arch: ArchConfig,
+    /// Architecture the run used. Shared with the machine that produced
+    /// the report (`Arc`): cloning a report, or assembling many reports
+    /// from one batch, bumps a refcount instead of deep-copying the
+    /// config.
+    pub arch: Arc<ArchConfig>,
     pub network: String,
     pub sparsity: SparsityConfig,
     pub layers: Vec<LayerStats>,
@@ -309,7 +315,7 @@ pub fn simulate_batch(
 }
 
 /// Indices of the PIM (std/pw-conv + FC) layers of `net`.
-fn pim_indices(net: &Network) -> Vec<usize> {
+pub(crate) fn pim_indices(net: &Network) -> Vec<usize> {
     (0..net.layers.len()).filter(|&i| net.layers[i].kind.matmul_dims().is_some()).collect()
 }
 
@@ -376,7 +382,6 @@ fn assemble_report(
     machine: &Machine,
     mut pim_stats: Vec<Option<LayerStats>>,
 ) -> SimReport {
-    let arch = &machine.arch;
     let mut layers = Vec::new();
     let mut totals = EventCounts::default();
     for (idx, layer) in net.layers.iter().enumerate() {
@@ -386,37 +391,8 @@ fn assemble_report(
                 totals.add(&stats.events);
                 layers.push(stats);
             }
-            LayerKind::DwConv { .. } => {
-                if arch.has_simd {
-                    let s = machine.run_simd_layer(&layer.name, SimdOp::DwConv, layer.kind.macs());
-                    totals.add(&s.events);
-                    layers.push(s);
-                }
-            }
-            LayerKind::Pool { elems } => {
-                if arch.has_simd {
-                    let s = machine.run_simd_layer(&layer.name, SimdOp::MaxPool, elems as u64);
-                    totals.add(&s.events);
-                    layers.push(s);
-                }
-            }
-            LayerKind::Act { elems } => {
-                if arch.has_simd {
-                    let s = machine.run_simd_layer(&layer.name, SimdOp::Relu, elems as u64);
-                    totals.add(&s.events);
-                    layers.push(s);
-                }
-            }
-            LayerKind::ResAdd { elems } => {
-                if arch.has_simd {
-                    let s = machine.run_simd_layer(&layer.name, SimdOp::ResAdd, elems as u64);
-                    totals.add(&s.events);
-                    layers.push(s);
-                }
-            }
-            LayerKind::Mul { elems } => {
-                if arch.has_simd {
-                    let s = machine.run_simd_layer(&layer.name, SimdOp::Mul, elems as u64);
+            _ => {
+                if let Some(s) = simd_layer_stats(machine, layer) {
                     totals.add(&s.events);
                     layers.push(s);
                 }
@@ -424,7 +400,42 @@ fn assemble_report(
         }
     }
 
-    SimReport { arch: arch.clone(), network: net.name.clone(), sparsity, layers, totals }
+    SimReport {
+        arch: Arc::clone(&machine.arch),
+        network: net.name.clone(),
+        sparsity,
+        layers,
+        totals,
+    }
+}
+
+/// Cost one standalone SIMD layer on `machine`'s SIMD core. Returns
+/// `None` for PIM layers (they go through the compiler) and for archs
+/// without the SIMD core (`dac24`). Deterministic and data-independent;
+/// shared by report assembly and the multi-chip sharding layer
+/// (`coordinator::sharding`), which must cost SIMD layers exactly once
+/// per fleet to stay bit-identical to the single-chip report.
+pub(crate) fn simd_layer_stats(
+    machine: &Machine,
+    layer: &crate::models::Layer,
+) -> Option<LayerStats> {
+    if !machine.arch.has_simd {
+        return None;
+    }
+    Some(match layer.kind {
+        LayerKind::Conv { .. } | LayerKind::Fc { .. } => return None,
+        LayerKind::DwConv { .. } => {
+            machine.run_simd_layer(&layer.name, SimdOp::DwConv, layer.kind.macs())
+        }
+        LayerKind::Pool { elems } => {
+            machine.run_simd_layer(&layer.name, SimdOp::MaxPool, elems as u64)
+        }
+        LayerKind::Act { elems } => machine.run_simd_layer(&layer.name, SimdOp::Relu, elems as u64),
+        LayerKind::ResAdd { elems } => {
+            machine.run_simd_layer(&layer.name, SimdOp::ResAdd, elems as u64)
+        }
+        LayerKind::Mul { elems } => machine.run_simd_layer(&layer.name, SimdOp::Mul, elems as u64),
+    })
 }
 
 #[cfg(test)]

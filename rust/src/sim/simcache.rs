@@ -117,11 +117,26 @@ impl SimCache {
         run: impl FnOnce() -> (LayerStats, Option<MatI32>),
     ) -> Option<(LayerStats, Option<MatI32>)> {
         net.layers[idx].kind.matmul_dims()?;
-        let key = SimKey { compile: CompileKey::new(net, idx, sparsity, arch, seed), functional };
+        let key = CompileKey::new(net, idx, sparsity, arch, seed);
+        Some(self.get_or_run_keyed(key, functional, run))
+    }
+
+    /// Fetch (or compute via `run`) a layer result under an explicit
+    /// compile key. The sharding layer uses this with per-chip keys
+    /// (`CompileKey::sharded`) to memoize chip-local simulations;
+    /// accounting and locking behave exactly as in
+    /// [`SimCache::get_or_run`].
+    pub(crate) fn get_or_run_keyed(
+        &self,
+        compile: CompileKey,
+        functional: bool,
+        run: impl FnOnce() -> (LayerStats, Option<MatI32>),
+    ) -> (LayerStats, Option<MatI32>) {
+        let key = SimKey { compile, functional };
         let shard = self.shard(&key);
         if let Some(hit) = shard.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Some((hit.stats.clone(), hit.acc.clone()));
+            return (hit.stats.clone(), hit.acc.clone());
         }
         let (stats, acc) = run();
         let fresh = Arc::new(SimEntry { stats, acc });
@@ -137,7 +152,12 @@ impl SimCache {
                 Arc::clone(v.insert(fresh))
             }
         };
-        Some((entry.stats.clone(), entry.acc.clone()))
+        (entry.stats.clone(), entry.acc.clone())
+    }
+
+    /// Mutex shard count (fixed; surfaced by `dbpim info`).
+    pub fn shard_count() -> usize {
+        SHARDS
     }
 
     /// Snapshot of the hit/miss counters (a miss = the one simulation

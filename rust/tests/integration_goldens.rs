@@ -103,3 +103,11 @@ fn golden_table2() {
 fn golden_table3() {
     check_golden("table3", &exp::table3_json(&exp::table3(SEED)));
 }
+
+#[test]
+fn golden_shard_sweep() {
+    // The multi-chip driver builds its fleet specs explicitly, so these
+    // rows are identical with or without the DBPIM_CHIPS/DBPIM_SCHEME
+    // env overrides the equivalence CI leg sets.
+    check_golden("shard_sweep", &exp::shard_sweep_json(&exp::shard_sweep(SEED)));
+}

@@ -1078,6 +1078,7 @@ fn prop_open_loop_deterministic_across_worker_counts() {
             timeout_ms: 8.0,
             max_batch: 1 + rng.below(4) as usize,
             chips: 1 + rng.below(3) as usize,
+            scheme: None,
             max_retries: 1 + rng.below(3) as u32,
             backoff_ms: 0.25,
             seed: rng.next_u64(),
@@ -1163,6 +1164,7 @@ fn prop_open_loop_fault_exhaustion_typed_outcomes() {
             timeout_ms: 4e6,
             max_batch: 1 + rng.below(4) as usize,
             chips: 1 + rng.below(2) as usize,
+            scheme: None,
             max_retries,
             backoff_ms: 0.5,
             seed: rng.next_u64(),

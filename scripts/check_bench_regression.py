@@ -43,6 +43,7 @@ DEFAULT_CASES = [
     "kernel_backend_gemm",
     "requant_relu_arena",
     "serve_loop_saturation",
+    "shard_sweep",
 ]
 
 
