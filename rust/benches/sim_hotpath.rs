@@ -44,6 +44,10 @@
 //!   and pipeline parallelism (partition → per-chip fan-out →
 //!   deterministic merge + interconnect); asserts the chips=1
 //!   delegation stays bit-identical to the single-chip report
+//! * `fault_campaign` — one mininet cell of the hardware-fault campaign
+//!   (BER 1e-4, repair off vs spares): repair planning, fault-aware
+//!   lowering, ABFT verification and the clean-vs-faulty functional
+//!   comparison; asserts zero undetected corrupted layers
 //! * `pool_spawn_overhead` — scheduling cost of the persistent
 //!   work-stealing pool: 256 trivial jobs through `pool::run_jobs`
 //! * `pool_nested_sweep` — a miniature sweep × layer × segment nested
@@ -531,6 +535,27 @@ fn main() {
                 }
             }
             acc
+        }));
+    }
+
+    // --- hardware-fault campaign: repair + ABFT detection pipeline ---
+    // One mininet cell at BER 1e-4 under both repair strategies. The
+    // measured work is the full campaign unit: repair planning,
+    // fault-aware lowering, perf overhead sims and the per-layer
+    // clean-vs-faulty functional comparison. ABFT must leave no
+    // corrupted layer undetected (the ISSUE 9 acceptance gate).
+    {
+        use dbpim::coordinator::experiments as exp;
+        let nets = vec!["mininet".to_string()];
+        samples.push(bench("fault_campaign", 0, iters(5, 2), || {
+            let (rows, _) =
+                exp::fault_campaign_with_stats(&nets, &[1e-4], &["none", "spares"], 42, 42);
+            assert_eq!(rows.len(), 2);
+            assert!(
+                rows.iter().all(|r| r.undetected_layers == 0),
+                "campaign left corrupted layers undetected"
+            );
+            rows.iter().map(|r| r.detections).sum::<u64>()
         }));
     }
 

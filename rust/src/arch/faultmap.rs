@@ -1,0 +1,528 @@
+//! Deterministic SRAM bit-cell fault model (DESIGN.md §13).
+//!
+//! Real SRAM-PIM macros suffer stuck-at cells (manufacturing defects,
+//! aging) and transient upsets; a digital PIM array stores weight bits
+//! *in* the faulty cells, so one bad cell silently corrupts every MAC
+//! that reads it. This module gives the simulator a fault model with
+//! the same determinism contract as `coordinator::faults` (serving
+//! faults, DESIGN.md §11): every per-cell verdict is a **pure hash** of
+//! `(seed, core, macro, compartment, row, col)` — no sequence, no
+//! shared state — so fault placement is bit-identical for any engine,
+//! worker count, steal order or visit order.
+//!
+//! Three axes, each its own Bernoulli rate over physical cells:
+//!
+//! * **stuck-at-0** — the cell always reads an empty payload; the
+//!   stored Comp.-pattern block (or dense weight bit) is lost;
+//! * **stuck-at-1** — the cell always reads the all-ones payload
+//!   (sign = 1, odd = 1 in the CSD mapping; the bit set in the dense
+//!   mapping);
+//! * **transient** — the cell's sign/bit flips for the duration of the
+//!   run (a seeded soft-error pattern; unknown at compile time, so the
+//!   repair pass cannot steer around it — only ABFT detection sees it).
+//!
+//! Stuck faults are *known* at compile time (post-manufacturing test),
+//! so `compiler::packing::plan_repair` steers weight columns away from
+//! them using the spare column/macro budget. Detection is ABFT-style:
+//! position-weighted column checksums over the dyadic-block
+//! coefficients of the clean weight block ([`dyadic_checksums`]) are
+//! recorded in `Program` metadata and re-verified at tile-load time
+//! against the (possibly corrupted) resident block.
+
+use crate::csd;
+use crate::json::{num, obj, Value};
+use crate::util::Rng;
+
+/// One cell's fault class. Precedence when several rates fire on the
+/// same cell: stuck-0 > stuck-1 > transient (a manufacturing defect
+/// masks a soft error).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellFault {
+    Stuck0,
+    Stuck1,
+    Transient,
+}
+
+/// What the runtime does once an ABFT checksum flags a corrupted
+/// column (DESIGN.md §13): surface the corruption (`Fail`), zero the
+/// flagged columns' contributions (`Mask`), or restore the exact clean
+/// values from the scalar oracle at a deterministic cycle cost
+/// (`Recompute`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DegradePolicy {
+    /// Keep the corrupted values; detections are recorded and the
+    /// orchestrating layer (serve loop, campaign) treats them as a
+    /// failed unit of work.
+    Fail,
+    /// Zero the flagged dyadic-block contributions: bounded output
+    /// error, no recompute cost.
+    Mask,
+    /// Recompute the flagged filters on the scalar oracle — bit-exact
+    /// outputs at a per-detection latency charge.
+    #[default]
+    Recompute,
+}
+
+impl DegradePolicy {
+    /// CLI/JSON tag (`--degrade fail|mask|recompute`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DegradePolicy::Fail => "fail",
+            DegradePolicy::Mask => "mask",
+            DegradePolicy::Recompute => "recompute",
+        }
+    }
+
+    pub fn parse(tag: &str) -> Option<Self> {
+        Some(match tag {
+            "fail" => DegradePolicy::Fail,
+            "mask" => DegradePolicy::Mask,
+            "recompute" | "recompute-on-scalar-oracle" => DegradePolicy::Recompute,
+            _ => return None,
+        })
+    }
+}
+
+/// Bit-cell fault rates + the root seed of every cell verdict.
+/// `off()` (all-zero rates) models a perfect array and is the default
+/// on every `ArchConfig` preset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellFaultSpec {
+    /// Per-cell stuck-at-0 probability, in [0, 1].
+    pub ber_stuck0: f64,
+    /// Per-cell stuck-at-1 probability, in [0, 1].
+    pub ber_stuck1: f64,
+    /// Per-cell transient-upset probability, in [0, 1].
+    pub ber_transient: f64,
+    /// Root seed for every cell verdict in the run.
+    pub seed: u64,
+}
+
+impl CellFaultSpec {
+    /// Perfect array — the spec under which the whole fault subsystem
+    /// is compiled out of the pipeline (bit-identical to a build that
+    /// never heard of faults).
+    pub fn off() -> CellFaultSpec {
+        CellFaultSpec { ber_stuck0: 0.0, ber_stuck1: 0.0, ber_transient: 0.0, seed: 0 }
+    }
+
+    /// All three axes at the same bit-error rate.
+    pub fn uniform(ber: f64, seed: u64) -> CellFaultSpec {
+        CellFaultSpec { ber_stuck0: ber, ber_stuck1: ber, ber_transient: ber, seed }
+    }
+
+    /// The stock mix used by `DBPIM_CELL_FAULT_SEED` and the CI fault
+    /// leg: a uniform 1e-4 BER on every axis.
+    pub fn default_with_seed(seed: u64) -> CellFaultSpec {
+        CellFaultSpec::uniform(1e-4, seed)
+    }
+
+    /// Whether any fault axis is active.
+    pub fn enabled(&self) -> bool {
+        self.ber_stuck0 > 0.0 || self.ber_stuck1 > 0.0 || self.ber_transient > 0.0
+    }
+
+    /// `DBPIM_CELL_FAULT_SEED=N` turns on the stock cell-fault mix
+    /// seeded with `N`; unset or unparsable → `None`.
+    pub fn from_env() -> Option<CellFaultSpec> {
+        let raw = std::env::var("DBPIM_CELL_FAULT_SEED").ok()?;
+        let seed = raw.trim().parse::<u64>().ok()?;
+        Some(CellFaultSpec::default_with_seed(seed))
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let unit = |v: f64| (0.0..=1.0).contains(&v); // NaN fails both bounds
+        for (name, v) in [
+            ("ber_stuck0", self.ber_stuck0),
+            ("ber_stuck1", self.ber_stuck1),
+            ("ber_transient", self.ber_transient),
+        ] {
+            if !unit(v) {
+                return Err(format!("cell faults: {name} must be in [0, 1], got {v}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Derive the fault map of fleet chip `chip`: same rates, chip-mixed
+    /// seed, so every chip of a sharded fleet has an independent (but
+    /// replayable) defect pattern. Callers use this only for real
+    /// fleets (`chips > 1`); the single-chip path keeps the root seed.
+    pub fn for_chip(&self, chip: usize) -> CellFaultSpec {
+        CellFaultSpec {
+            seed: self.seed ^ 0xFA17_C811 ^ (chip as u64).wrapping_mul(0xFF51_AFD7_ED55_8CCD),
+            ..*self
+        }
+    }
+
+    /// The spec as cache-key bits: rate bit patterns + seed, normalized
+    /// to all-zeros when the spec is off — so a disabled fault model
+    /// never perturbs `CompileKey`/`SimKey` (goldens and cache counts
+    /// stay bit-identical to a build without the subsystem), while any
+    /// enabled spec keys every cached artifact on its exact rates+seed.
+    pub fn key_bits(&self) -> [u64; 4] {
+        if !self.enabled() {
+            return [0; 4];
+        }
+        [
+            self.ber_stuck0.to_bits(),
+            self.ber_stuck1.to_bits(),
+            self.ber_transient.to_bits(),
+            self.seed,
+        ]
+    }
+
+    /// Parse an optional `"cell_faults"` spec object; every rate
+    /// defaults to 0 (off), so partial objects enable only the named
+    /// axes.
+    pub fn from_json(v: &Value) -> Result<CellFaultSpec, String> {
+        let f = |key: &str| -> Result<f64, String> {
+            match v.get(key) {
+                None => Ok(0.0),
+                Some(x) => {
+                    x.as_f64().ok_or_else(|| format!("cell faults: \"{key}\" must be a number"))
+                }
+            }
+        };
+        let seed = match v.get("seed") {
+            None => 0,
+            Some(x) => x.as_usize().ok_or_else(|| {
+                "cell faults: \"seed\" must be a non-negative integer".to_string()
+            })? as u64,
+        };
+        let spec = CellFaultSpec {
+            ber_stuck0: f("ber_stuck0")?,
+            ber_stuck1: f("ber_stuck1")?,
+            ber_transient: f("ber_transient")?,
+            seed,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("seed", num(self.seed as f64)),
+            ("ber_stuck0", num(self.ber_stuck0)),
+            ("ber_stuck1", num(self.ber_stuck1)),
+            ("ber_transient", num(self.ber_transient)),
+        ])
+    }
+}
+
+/// Decision tags keep the three per-cell hash streams independent of
+/// each other (same pattern as `coordinator::faults`).
+const TAG_STUCK0: u64 = 0xCE11_5EED_0000_0001;
+const TAG_STUCK1: u64 = 0xCE11_5EED_0000_0002;
+const TAG_TRANSIENT: u64 = 0xCE11_5EED_0000_0003;
+
+/// One cell verdict hash: a fresh SplitMix64 stream keyed by the seed,
+/// the axis tag and the full physical cell coordinate. One draw, then
+/// discarded — there is no sequence to keep in sync across replays.
+fn decide(seed: u64, tag: u64, core: usize, mac: usize, comp: usize, row: usize, col: usize) -> u64 {
+    Rng::new(
+        seed ^ tag
+            ^ (core as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (mac as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            ^ (comp as u64).wrapping_mul(0xFF51_AFD7_ED55_8CCD)
+            ^ (row as u64).wrapping_mul(0xC4CE_B9FE_1A85_EC53)
+            ^ (col as u64).wrapping_mul(0x2545_F491_4F6C_DD1D),
+    )
+    .next_u64()
+}
+
+/// Map a hash to a uniform f64 in [0, 1).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// The fault map of one chip: a stateless view over the pure per-cell
+/// verdicts of a [`CellFaultSpec`]. Cheap to construct (`Copy` spec, no
+/// allocation); query order never matters.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultMap {
+    spec: CellFaultSpec,
+}
+
+impl FaultMap {
+    pub fn new(spec: CellFaultSpec) -> FaultMap {
+        FaultMap { spec }
+    }
+
+    pub fn spec(&self) -> CellFaultSpec {
+        self.spec
+    }
+
+    /// Verdict for one physical cell `(core, macro, compartment, row,
+    /// col)`. Pure in the spec and the coordinate.
+    pub fn cell(&self, core: usize, mac: usize, comp: usize, row: usize, col: usize) -> Option<CellFault> {
+        if !self.spec.enabled() {
+            return None;
+        }
+        let s = self.spec;
+        if s.ber_stuck0 > 0.0
+            && unit(decide(s.seed, TAG_STUCK0, core, mac, comp, row, col)) < s.ber_stuck0
+        {
+            return Some(CellFault::Stuck0);
+        }
+        if s.ber_stuck1 > 0.0
+            && unit(decide(s.seed, TAG_STUCK1, core, mac, comp, row, col)) < s.ber_stuck1
+        {
+            return Some(CellFault::Stuck1);
+        }
+        if s.ber_transient > 0.0
+            && unit(decide(s.seed, TAG_TRANSIENT, core, mac, comp, row, col)) < s.ber_transient
+        {
+            return Some(CellFault::Transient);
+        }
+        None
+    }
+
+    /// Is any cell of physical column `col` of `(core, mac)` *stuck*
+    /// (compile-time-known defect)? Transients don't count — the
+    /// repair pass cannot see them.
+    pub fn column_stuck(&self, core: usize, mac: usize, col: usize, comps: usize, rows: usize) -> bool {
+        if !self.spec.enabled() {
+            return false;
+        }
+        for comp in 0..comps {
+            for row in 0..rows {
+                if matches!(
+                    self.cell(core, mac, comp, row, col),
+                    Some(CellFault::Stuck0 | CellFault::Stuck1)
+                ) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// All faulty cells of physical column `col` of `(core, mac)`, as
+    /// `(compartment, row, fault)` triples in fixed scan order.
+    pub fn column_faults(
+        &self,
+        core: usize,
+        mac: usize,
+        col: usize,
+        comps: usize,
+        rows: usize,
+    ) -> Vec<(usize, usize, CellFault)> {
+        let mut out = Vec::new();
+        if !self.spec.enabled() {
+            return out;
+        }
+        for comp in 0..comps {
+            for row in 0..rows {
+                if let Some(f) = self.cell(core, mac, comp, row, col) {
+                    out.push((comp, row, f));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Corrupt one resident weight according to the fault class of the
+/// cell holding its `col_in_filter`-th column. Pure value-level model
+/// of what the macro would read back:
+///
+/// * CSD mapping (`bit_sparsity`): column `j` holds the `j`-th
+///   Comp.-pattern block of the weight. An *empty* slot (`j ≥ φ(w)`) is
+///   never addressed by the allocation network, so faults there are
+///   inert. On an occupied slot: stuck-0 loses the block's
+///   contribution, stuck-1 reads the all-ones payload
+///   (`-2^(2·index+1)` in place of the true contribution), a transient
+///   flips the sign.
+/// * Dense mapping: column `j` holds two's-complement bit `j`;
+///   stuck-0/stuck-1/transient clear/set/flip it.
+///
+/// The result saturates to i8 (the adder tree's resident operand
+/// width).
+pub fn corrupt_weight(w: i8, col_in_filter: usize, bit_sparsity: bool, kind: CellFault) -> i8 {
+    if bit_sparsity {
+        let blocks = csd::comp_blocks(w);
+        let Some(b) = blocks.get(col_in_filter) else {
+            return w; // empty slot: not addressed
+        };
+        let c = b.contribution();
+        let v = match kind {
+            CellFault::Stuck0 => w as i32 - c,
+            CellFault::Stuck1 => w as i32 - c - (1 << (2 * b.index as i32 + 1)),
+            CellFault::Transient => w as i32 - 2 * c,
+        };
+        v.clamp(i8::MIN as i32, i8::MAX as i32) as i8
+    } else {
+        if col_in_filter >= csd::NUM_DIGITS {
+            return w;
+        }
+        let bit = 1u8 << col_in_filter;
+        let b = w as u8;
+        (match kind {
+            CellFault::Stuck0 => b & !bit,
+            CellFault::Stuck1 => b | bit,
+            CellFault::Transient => b ^ bit,
+        }) as i8
+    }
+}
+
+/// ABFT column checksums over dyadic blocks: for every filter slot `f`
+/// of a `[rows × nf]` weight block and every dyadic block index
+/// `k ∈ 0..4`, the position-weighted sum
+/// `Σ_r mix(r) · coeff_k(w[r, f])` (wrapping u64 arithmetic, odd
+/// per-row multipliers). A single changed coefficient in any row
+/// changes its `(f, k)` sum (odd multipliers are invertible mod 2^64),
+/// and distinct rows carry decorrelated 64-bit weights, so any
+/// corruption of the resident block is detected except under a 2^-64
+/// class hash collision. Layout: `sums[f * NUM_BLOCKS + k]`.
+pub fn dyadic_checksums(wblock: &[i8], nf: usize) -> Vec<u64> {
+    if nf == 0 {
+        return Vec::new();
+    }
+    let rows = wblock.len() / nf;
+    let mut sums = vec![0u64; nf * csd::NUM_BLOCKS];
+    for r in 0..rows {
+        let mix = row_mix(r);
+        for f in 0..nf {
+            let coeffs = csd::dyadic_blocks(wblock[r * nf + f]);
+            for (k, &c) in coeffs.iter().enumerate() {
+                sums[f * csd::NUM_BLOCKS + k] =
+                    sums[f * csd::NUM_BLOCKS + k].wrapping_add((c as i64 as u64).wrapping_mul(mix));
+            }
+        }
+    }
+    sums
+}
+
+/// Per-row checksum multiplier: a SplitMix64 draw forced odd, so a
+/// single-row coefficient change can never sum to zero.
+fn row_mix(r: usize) -> u64 {
+    Rng::new(0xABF7_C0DE ^ (r as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64() | 1
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdicts_are_pure_and_order_independent() {
+        let a = FaultMap::new(CellFaultSpec::uniform(0.01, 7));
+        let b = FaultMap::new(CellFaultSpec::uniform(0.01, 7));
+        // forward vs reverse visit order: identical verdicts
+        let coords: Vec<(usize, usize, usize, usize, usize)> = (0..4)
+            .flat_map(|c| (0..2).map(move |m| (c, m)))
+            .flat_map(|(c, m)| (0..8).map(move |col| (c, m, col % 4, col / 2, col)))
+            .collect();
+        let fwd: Vec<_> = coords.iter().map(|&(c, m, k, r, l)| a.cell(c, m, k, r, l)).collect();
+        let rev: Vec<_> =
+            coords.iter().rev().map(|&(c, m, k, r, l)| b.cell(c, m, k, r, l)).collect();
+        let rev: Vec<_> = rev.into_iter().rev().collect();
+        assert_eq!(fwd, rev);
+        // a different seed flips at least some verdicts at a high rate
+        let c = FaultMap::new(CellFaultSpec::uniform(0.5, 8));
+        let flips = coords
+            .iter()
+            .filter(|&&(co, m, k, r, l)| a.cell(co, m, k, r, l) != c.cell(co, m, k, r, l))
+            .count();
+        assert!(flips > 0, "seed must matter");
+    }
+
+    #[test]
+    fn off_spec_is_inert() {
+        let m = FaultMap::new(CellFaultSpec::off());
+        for col in 0..64 {
+            assert_eq!(m.cell(0, 0, col % 16, col / 4, col), None);
+        }
+        assert!(!m.column_stuck(0, 0, 3, 16, 16));
+        assert!(m.column_faults(0, 0, 3, 16, 16).is_empty());
+        assert_eq!(CellFaultSpec::off().key_bits(), [0; 4]);
+        assert!(!CellFaultSpec::off().enabled());
+        assert!(CellFaultSpec::default_with_seed(1).enabled());
+    }
+
+    #[test]
+    fn rates_roughly_respected() {
+        let m = FaultMap::new(CellFaultSpec { ber_stuck0: 0.2, ..CellFaultSpec::uniform(0.0, 3) });
+        let n = 20_000usize;
+        let hits = (0..n).filter(|&i| m.cell(0, 0, 0, 0, i).is_some()).count() as f64 / n as f64;
+        assert!((hits - 0.2).abs() < 0.02, "observed stuck0 rate {hits}");
+    }
+
+    #[test]
+    fn for_chip_streams_differ_and_key_bits_scope() {
+        let s = CellFaultSpec::default_with_seed(11);
+        assert_ne!(s.for_chip(0).seed, s.for_chip(1).seed);
+        assert_eq!(s.for_chip(2).ber_stuck0, s.ber_stuck0);
+        assert_ne!(s.key_bits(), [0; 4]);
+        // two enabled specs with different seeds key differently
+        assert_ne!(s.key_bits(), CellFaultSpec::default_with_seed(12).key_bits());
+    }
+
+    #[test]
+    fn corrupt_weight_models_each_axis() {
+        for v in i8::MIN..=i8::MAX {
+            let phi = csd::phi(v) as usize;
+            for j in 0..csd::NUM_DIGITS {
+                // CSD mapping: empty slots are inert, occupied slots change
+                let s0 = corrupt_weight(v, j, true, CellFault::Stuck0);
+                let tr = corrupt_weight(v, j, true, CellFault::Transient);
+                if j >= phi {
+                    assert_eq!(s0, v);
+                    assert_eq!(tr, v);
+                } else {
+                    let c = csd::comp_blocks(v)[j].contribution();
+                    assert_eq!(s0 as i32, v as i32 - c, "value {v} col {j}");
+                    // transient flips the sign of the block
+                    assert_eq!(tr as i32, (v as i32 - 2 * c).clamp(-128, 127));
+                }
+                // dense mapping: exact bit semantics
+                let d0 = corrupt_weight(v, j, false, CellFault::Stuck0);
+                let d1 = corrupt_weight(v, j, false, CellFault::Stuck1);
+                let dt = corrupt_weight(v, j, false, CellFault::Transient);
+                let bit = 1u8 << j;
+                assert_eq!(d0 as u8, v as u8 & !bit);
+                assert_eq!(d1 as u8, v as u8 | bit);
+                assert_eq!(dt as u8, v as u8 ^ bit);
+            }
+        }
+    }
+
+    #[test]
+    fn checksums_detect_any_single_value_change() {
+        let nf = 3;
+        let wblock: Vec<i8> = (0..60).map(|i| (i * 7 % 255) as u8 as i8).collect();
+        let clean = dyadic_checksums(&wblock, nf);
+        for pos in [0usize, 1, 17, 59] {
+            for delta in [1i8, -3, 100] {
+                let mut bad = wblock.clone();
+                let nv = bad[pos].wrapping_add(delta);
+                if nv == bad[pos] {
+                    continue;
+                }
+                bad[pos] = nv;
+                assert_ne!(dyadic_checksums(&bad, nf), clean, "pos {pos} delta {delta}");
+            }
+        }
+        // identical block: identical sums
+        assert_eq!(dyadic_checksums(&wblock, nf), clean);
+    }
+
+    #[test]
+    fn spec_json_roundtrip_and_validation() {
+        let spec = CellFaultSpec::default_with_seed(9);
+        let back = CellFaultSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        let v = crate::json::parse(r#"{"seed": 3, "ber_stuck0": 0.001}"#).unwrap();
+        let p = CellFaultSpec::from_json(&v).unwrap();
+        assert_eq!(p.seed, 3);
+        assert_eq!(p.ber_stuck0, 0.001);
+        assert_eq!(p.ber_stuck1, 0.0);
+        let bad = crate::json::parse(r#"{"ber_transient": 2.0}"#).unwrap();
+        assert!(CellFaultSpec::from_json(&bad).is_err());
+        assert!(CellFaultSpec { ber_stuck0: f64::NAN, ..CellFaultSpec::off() }.validate().is_err());
+        assert!(DegradePolicy::parse("mask") == Some(DegradePolicy::Mask));
+        assert!(DegradePolicy::parse("nope").is_none());
+        assert_eq!(DegradePolicy::parse(DegradePolicy::Fail.name()), Some(DegradePolicy::Fail));
+    }
+}

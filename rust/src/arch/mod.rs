@@ -7,6 +7,10 @@
 //! ablation points (Fig. 12's bit-only / value-only / hybrid) and the
 //! DAC'24 predecessor configuration (Tab. III).
 
+pub mod faultmap;
+
+pub use faultmap::{CellFault, CellFaultSpec, DegradePolicy, FaultMap};
+
 /// How assignments are spread over the PIM cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SchedulePolicy {
@@ -73,6 +77,19 @@ pub struct ArchConfig {
     /// Link bandwidth: activation bytes moved per cycle once a transfer
     /// is streaming (serialization time = ceil(bytes / bw)).
     pub link_bandwidth_bytes_per_cycle: u64,
+
+    // ---- SRAM bit-cell fault model (DESIGN.md §13) ----
+    /// Bit-cell fault rates + seed; `CellFaultSpec::off()` (every
+    /// preset's default) models a perfect array and compiles the whole
+    /// fault subsystem out of the pipeline.
+    pub cell_faults: CellFaultSpec,
+    /// Spare DBMU columns per macro available to the compile-time
+    /// repair pass (`compiler::packing::plan_repair`).
+    pub spare_columns_per_macro: usize,
+    /// Spare whole macros per core for macro-level sparing.
+    pub spare_macros_per_core: usize,
+    /// Runtime policy once an ABFT checksum flags a corrupted column.
+    pub fault_degrade: DegradePolicy,
 }
 
 impl ArchConfig {
@@ -101,6 +118,10 @@ impl ArchConfig {
             inst_buffer_kb: 16,
             link_latency_cycles: 16,
             link_bandwidth_bytes_per_cycle: 64,
+            cell_faults: CellFaultSpec::off(),
+            spare_columns_per_macro: 2,
+            spare_macros_per_core: 1,
+            fault_degrade: DegradePolicy::Recompute,
         }
     }
 
@@ -289,6 +310,22 @@ mod tests {
         // a zero-bandwidth config must not divide by zero
         let degenerate = ArchConfig { link_bandwidth_bytes_per_cycle: 0, ..a };
         assert_eq!(degenerate.link_transfer_cycles(10, 1), degenerate.link_latency_cycles + 10);
+    }
+
+    #[test]
+    fn every_preset_ships_a_perfect_array() {
+        for arch in [
+            ArchConfig::db_pim(),
+            ArchConfig::dense_baseline(),
+            ArchConfig::bit_only(),
+            ArchConfig::value_only(),
+            ArchConfig::weights_only(),
+            ArchConfig::dac24(),
+        ] {
+            assert!(!arch.cell_faults.enabled(), "{}: faults must default off", arch.name);
+            assert_eq!(arch.fault_degrade, DegradePolicy::Recompute);
+            assert!(arch.spare_columns_per_macro > 0, "{}: spare budget", arch.name);
+        }
     }
 
     #[test]

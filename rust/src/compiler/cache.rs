@@ -25,7 +25,7 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::arch::{ArchConfig, SchedulePolicy};
+use crate::arch::{ArchConfig, DegradePolicy, SchedulePolicy};
 use crate::models::Network;
 
 use super::{compile_network_layer, CompiledLayer, SparsityConfig};
@@ -84,6 +84,17 @@ pub(crate) struct CompileKey {
     /// the full artifact or each other.
     chips: usize,
     chip: usize,
+    /// Cell-fault model bits (`CellFaultSpec::key_bits`): all zeros
+    /// when the spec is off — a disabled fault subsystem never
+    /// perturbs keys, so goldens and pinned cache counts stay
+    /// bit-identical to a build without it — and the exact rates+seed
+    /// otherwise, so faulty artifacts key on their spec.
+    cell_faults: [u64; 4],
+    /// Spare budget + degrade policy; compile-inert without faults, so
+    /// normalized to zero/default when the spec is off.
+    spare_columns: usize,
+    spare_macros: usize,
+    degrade: DegradePolicy,
 }
 
 impl CompileKey {
@@ -127,6 +138,14 @@ impl CompileKey {
             schedule: arch.schedule,
             chips: 1,
             chip: 0,
+            cell_faults: arch.cell_faults.key_bits(),
+            spare_columns: if arch.cell_faults.enabled() { arch.spare_columns_per_macro } else { 0 },
+            spare_macros: if arch.cell_faults.enabled() { arch.spare_macros_per_core } else { 0 },
+            degrade: if arch.cell_faults.enabled() {
+                arch.fault_degrade
+            } else {
+                DegradePolicy::default()
+            },
         }
     }
 
@@ -362,6 +381,33 @@ mod tests {
         let again = cache.get_or_insert_with(key, || panic!("hit must not rebuild"));
         assert!(Arc::ptr_eq(&derived, &again));
         assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, dup_computes: 0 });
+    }
+
+    #[test]
+    fn fault_spec_scopes_keys_only_when_enabled() {
+        let cache = CompileCache::new();
+        let net = tiny_net();
+        let sp = SparsityConfig::hybrid(0.5);
+        let base = ArchConfig::db_pim();
+        // off spec: spare/degrade knobs are compile-inert and must not
+        // perturb the key (the second lookup is a hit)
+        let mut respared = base.clone();
+        respared.spare_columns_per_macro += 3;
+        respared.fault_degrade = DegradePolicy::Mask;
+        cache.get_or_compile(&net, 0, sp, &base, 7).unwrap();
+        cache.get_or_compile(&net, 0, sp, &respared, 7).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, dup_computes: 0 });
+        // enabled specs key on rates + seed + spare budget
+        let mut faulty = base.clone();
+        faulty.cell_faults = crate::arch::CellFaultSpec::default_with_seed(3);
+        cache.get_or_compile(&net, 0, sp, &faulty, 7).unwrap();
+        let mut reseeded = faulty.clone();
+        reseeded.cell_faults.seed = 4;
+        cache.get_or_compile(&net, 0, sp, &reseeded, 7).unwrap();
+        let mut unspared = faulty.clone();
+        unspared.spare_columns_per_macro = 0;
+        cache.get_or_compile(&net, 0, sp, &unspared, 7).unwrap();
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 4, dup_computes: 0 });
     }
 
     #[test]

@@ -38,7 +38,10 @@ use crate::tensor::{ConvGeom, MatI8};
 use crate::util::round_up;
 
 pub use cache::{CacheStats, CompileCache};
-pub use packing::{Assignment, KernelShape, Tile};
+pub use packing::{
+    Assignment, AssignmentFaults, KernelShape, LayerFaults, MacroRepair, RepairPlan, RepairReport,
+    ReplicaFault, Tile,
+};
 pub use program::{Barrier, Phase, Program};
 
 /// Execution attributes of a conv layer (geometry + fused post-ops).
@@ -84,6 +87,30 @@ pub struct CompiledLayer {
     pub instrs: Vec<Instr>,
     /// Segmented per-core program executed by the engines.
     pub program: Program,
+    /// Compile-side cell-fault state (repair report, per-replica
+    /// corrupted/degraded resident blocks, ABFT detections). `None`
+    /// when the arch's fault model is off — the zero-BER pipeline is
+    /// bit-identical to a build without the subsystem (DESIGN.md §13).
+    pub faults: Option<LayerFaults>,
+}
+
+impl CompiledLayer {
+    /// The resident weight block replica `slot` of assignment `ai`
+    /// actually reads at run time: the clean compile-time gather
+    /// unless the fault pass recorded a corrupted (or policy-degraded)
+    /// copy for that replica macro.
+    pub fn effective_wblock(&self, ai: usize, slot: usize) -> &[i8] {
+        if let Some(lf) = &self.faults {
+            if let Some(af) = &lf.by_assignment[ai] {
+                if let Some(r) = af.replicas.iter().find(|r| r.slot == slot) {
+                    if let Some(w) = &r.wblock {
+                        return w;
+                    }
+                }
+            }
+        }
+        &self.assignments[ai].wblock
+    }
 }
 
 /// Sparsification settings for the offline pipeline.
@@ -201,7 +228,8 @@ pub fn compile_layer(prep: PreparedLayer, arch: &ArchConfig) -> CompiledLayer {
     let (assignments, tiles) = packing::pack_layer(&prep, arch);
     let program = program::codegen(&prep, &assignments, &tiles, arch);
     let instrs = program.to_instrs();
-    CompiledLayer { prep, assignments, tiles, instrs, program }
+    let faults = packing::apply_cell_faults(&assignments, &program.abft, arch);
+    CompiledLayer { prep, assignments, tiles, instrs, program, faults }
 }
 
 /// Re-lower an already-compiled layer onto a subset of its assignments
@@ -225,7 +253,11 @@ pub fn compile_assignment_subset(
     let tiles = packing::tile_assignments(&assignments, arch.k_slots());
     let program = program::codegen(&prep, &assignments, &tiles, arch);
     let instrs = program.to_instrs();
-    CompiledLayer { prep, assignments, tiles, instrs, program }
+    // per-chip fault state: `arch` here is the chip-local config, so a
+    // sharded fleet's defect patterns are chip-independent
+    // (CellFaultSpec::for_chip)
+    let faults = packing::apply_cell_faults(&assignments, &program.abft, arch);
+    CompiledLayer { prep, assignments, tiles, instrs, program, faults }
 }
 
 /// Sparsify + compile the PIM layer at index `idx` of a zoo network

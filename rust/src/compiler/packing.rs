@@ -14,7 +14,8 @@
 //! must share the same coarse-pruning mask — i.e. belong to the same
 //! α-group (the allocation-network switch is per core, per group).
 
-use crate::arch::ArchConfig;
+use crate::arch::{faultmap, ArchConfig, CellFault, CellFaultSpec, DegradePolicy, FaultMap};
+use crate::csd;
 use crate::util::ceil_div;
 
 use super::PreparedLayer;
@@ -325,6 +326,280 @@ pub fn tiles_by_core(
     by_core
 }
 
+// ---------------------------------------------------------------------
+// Compile-time repair + fault application (DESIGN.md §13)
+// ---------------------------------------------------------------------
+
+/// Column repair of one physical macro chosen for a replica slot:
+/// where each logical column actually lives after the repair pass
+/// steered it away from stuck cells.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MacroRepair {
+    /// Physical macro backing this replica slot (may be a spare).
+    pub phys_macro: usize,
+    /// Logical column → physical column (len `macro_columns`).
+    pub col_map: Vec<u16>,
+    /// Logical columns left on stuck physical columns because the
+    /// spare budget ran out; ascending.
+    pub stuck_logical: Vec<u16>,
+}
+
+/// Repaired physical placement of the whole macro grid: one
+/// [`MacroRepair`] per (core, replica slot).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepairPlan {
+    /// `slots[core][slot]`, `n_cores × macros_per_core`.
+    pub slots: Vec<Vec<MacroRepair>>,
+    pub report: RepairReport,
+}
+
+/// Aggregate outcome of the repair pass over the whole grid.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Stuck physical columns among the primary (non-spare) columns of
+    /// the macros actually used.
+    pub stuck_columns: u64,
+    /// Logical columns steered off a stuck physical column onto a
+    /// clean one (spare-column repair).
+    pub repaired_columns: u64,
+    /// Logical columns that still sit on a stuck physical column
+    /// (spares exhausted; runtime corruption + ABFT must catch them).
+    pub unrepairable_columns: u64,
+    /// Replica slots served by a spare macro instead of a primary.
+    pub spared_macros: u64,
+}
+
+/// Compile-time repair: for every (core, replica slot), pick the
+/// physical macro (primary or spare) with the fewest unmappable
+/// columns, then map the `macro_columns` logical columns onto its
+/// clean physical columns in ascending order, spilling into the spare
+/// columns as needed. Stuck cells are *known* at compile time
+/// (post-manufacturing test); transient upsets are not, so they stay
+/// invisible here and only ABFT detection sees them. Pure in
+/// `(arch.cell_faults, arch geometry)` — schedule/layer independent —
+/// and `None` when the fault model is off.
+pub fn plan_repair(arch: &ArchConfig) -> Option<RepairPlan> {
+    if !arch.cell_faults.enabled() {
+        return None;
+    }
+    let fm = FaultMap::new(arch.cell_faults);
+    let comps = arch.compartments;
+    let rows = arch.rows_per_compartment;
+    let phys_cols = arch.macro_columns + arch.spare_columns_per_macro;
+    let phys_macros = arch.macros_per_core + arch.spare_macros_per_core;
+    let mut report = RepairReport::default();
+    let mut slots = Vec::with_capacity(arch.n_cores);
+    for core in 0..arch.n_cores {
+        // stuck-column scan of every candidate macro of the core
+        let stuck: Vec<Vec<bool>> = (0..phys_macros)
+            .map(|pm| (0..phys_cols).map(|pc| fm.column_stuck(core, pm, pc, comps, rows)).collect())
+            .collect();
+        // deficit: logical columns a macro cannot host on clean cells
+        let deficit = |pm: usize| {
+            let clean = stuck[pm].iter().filter(|&&s| !s).count();
+            arch.macro_columns.saturating_sub(clean)
+        };
+        let mut order: Vec<usize> = (0..phys_macros).collect();
+        order.sort_by_key(|&pm| (deficit(pm), stuck[pm].iter().filter(|&&s| s).count(), pm));
+        let mut chosen: Vec<usize> = order[..arch.macros_per_core].to_vec();
+        chosen.sort_unstable(); // replica slots keep ascending physical order
+        let mut core_slots = Vec::with_capacity(arch.macros_per_core);
+        for &pm in &chosen {
+            if pm >= arch.macros_per_core {
+                report.spared_macros += 1;
+            }
+            let primary_stuck =
+                stuck[pm][..arch.macro_columns].iter().filter(|&&s| s).count() as u64;
+            report.stuck_columns += primary_stuck;
+            let mut col_map = Vec::with_capacity(arch.macro_columns);
+            let mut stuck_logical = Vec::new();
+            let mut clean_iter = (0..phys_cols).filter(|&pc| !stuck[pm][pc]);
+            let mut stuck_iter = (0..phys_cols).filter(|&pc| stuck[pm][pc]);
+            for lc in 0..arch.macro_columns {
+                match clean_iter.next() {
+                    Some(pc) => col_map.push(pc as u16),
+                    None => {
+                        // spares exhausted: park the remaining logical
+                        // columns on stuck cells, lowest index first
+                        let pc = stuck_iter.next().expect("phys_cols >= macro_columns");
+                        col_map.push(pc as u16);
+                        stuck_logical.push(lc as u16);
+                    }
+                }
+            }
+            report.repaired_columns += primary_stuck.saturating_sub(stuck_logical.len() as u64);
+            report.unrepairable_columns += stuck_logical.len() as u64;
+            core_slots.push(MacroRepair { phys_macro: pm, col_map, stuck_logical });
+        }
+        slots.push(core_slots);
+    }
+    Some(RepairPlan { slots, report })
+}
+
+/// Residual fault state of one resident replica macro of one
+/// assignment after repair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaFault {
+    /// Replica slot (serves input rows `m ≡ slot (mod Tm)` — codegen's
+    /// Compute chunks are Tm-aligned).
+    pub slot: usize,
+    /// Faulty cells that landed on occupied resident weight slots and
+    /// changed the stored value.
+    pub injected: u64,
+    /// Mismatched `(filter, dyadic block)` ABFT checksum pairs.
+    pub detections: u64,
+    /// Distinct filters among the mismatches (Recompute charge unit).
+    pub detected_filters: u64,
+    /// Effective resident block under the layer's degrade policy;
+    /// `None` ⇒ the clean block (Recompute restores it bit-exactly).
+    pub wblock: Option<Vec<i8>>,
+}
+
+/// Residual fault state of one assignment (only replicas whose
+/// resident block was actually corrupted are listed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignmentFaults {
+    pub replicas: Vec<ReplicaFault>,
+}
+
+/// Compile-side outcome of the whole fault pass for one layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerFaults {
+    pub spec: CellFaultSpec,
+    pub policy: DegradePolicy,
+    pub report: RepairReport,
+    /// Total corrupted resident cells over assignments × replicas.
+    pub injected: u64,
+    /// Total ABFT `(filter, block)` mismatches; the runtime raises this
+    /// many detection events per full verification of the layer.
+    pub detections: u64,
+    /// Indexed by assignment; `None` ⇒ clean in every replica.
+    pub by_assignment: Vec<Option<AssignmentFaults>>,
+}
+
+/// Apply the arch's cell-fault model to a packed layer: plan the
+/// repair, map every assignment's resident cells to physical cells
+/// through it, corrupt the weights that landed on residual faulty
+/// cells ([`faultmap::corrupt_weight`]), verify the recorded ABFT
+/// checksums (`abft`, from `Program::abft`) against each corrupted
+/// block, and materialize the effective per-replica blocks under the
+/// degrade policy. `None` when the fault model is off — the zero-BER
+/// pipeline never allocates a byte here.
+pub fn apply_cell_faults(
+    assignments: &[Assignment],
+    abft: &[Vec<u64>],
+    arch: &ArchConfig,
+) -> Option<LayerFaults> {
+    let plan = plan_repair(arch)?;
+    let fm = FaultMap::new(arch.cell_faults);
+    let comps = arch.compartments;
+    let slots_k = arch.k_slots();
+    let phys_cols = arch.macro_columns + arch.spare_columns_per_macro;
+    let phys_macros = arch.macros_per_core + arch.spare_macros_per_core;
+    // Per-(core, phys macro) cell-verdict grid, indexed pc·k_slots + rt
+    // where rt = kept-row index mod k_slots ⇔ (compartment, SRAM row):
+    // one hash pass here makes the per-assignment walk hash-free.
+    let grid: Vec<Vec<Option<CellFault>>> = (0..arch.n_cores * phys_macros)
+        .map(|cm| {
+            let (core, pm) = (cm / phys_macros, cm % phys_macros);
+            (0..phys_cols * slots_k)
+                .map(|i| {
+                    let (pc, rt) = (i / slots_k, i % slots_k);
+                    fm.cell(core, pm, rt % comps, rt / comps, pc)
+                })
+                .collect()
+        })
+        .collect();
+    let policy = arch.fault_degrade;
+    let mut injected_total = 0u64;
+    let mut detections_total = 0u64;
+    let mut by_assignment = Vec::with_capacity(assignments.len());
+    for (ai, a) in assignments.iter().enumerate() {
+        let nf = a.filters.len();
+        let clean_sums = &abft[ai];
+        // logical column start of each filter slot
+        let mut col_starts = Vec::with_capacity(nf);
+        let mut start = 0usize;
+        for &c in &a.cols_per_filter {
+            col_starts.push(start);
+            start += c as usize;
+        }
+        let mut replicas = Vec::new();
+        for slot in 0..arch.macros_per_core {
+            let mr = &plan.slots[a.core][slot];
+            let cells = &grid[a.core * phys_macros + mr.phys_macro];
+            let mut wblock = a.wblock.clone();
+            let mut injected = 0u64;
+            for (fi, &cs) in col_starts.iter().enumerate() {
+                for jj in 0..a.cols_per_filter[fi] as usize {
+                    let pc = mr.col_map[cs + jj] as usize;
+                    let col_cells = &cells[pc * slots_k..(pc + 1) * slots_k];
+                    for r in 0..a.kept_rows.len() {
+                        if let Some(kind) = col_cells[r % slots_k] {
+                            let w = wblock[r * nf + fi];
+                            let c = faultmap::corrupt_weight(w, jj, arch.weight_bit_sparsity, kind);
+                            if c != w {
+                                wblock[r * nf + fi] = c;
+                                injected += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            if wblock == a.wblock {
+                continue; // clean replica
+            }
+            // honest ABFT verification: re-derive the corrupted block's
+            // checksums and compare against the recorded clean sums
+            let bad_sums = faultmap::dyadic_checksums(&wblock, nf);
+            let mut flagged = vec![false; nf * csd::NUM_BLOCKS];
+            let mut detections = 0u64;
+            for (i, (b, c)) in bad_sums.iter().zip(clean_sums.iter()).enumerate() {
+                if b != c {
+                    flagged[i] = true;
+                    detections += 1;
+                }
+            }
+            let filter_hit = |f: usize| (0..csd::NUM_BLOCKS).any(|k| flagged[f * csd::NUM_BLOCKS + k]);
+            let detected_filters = (0..nf).filter(|&f| filter_hit(f)).count() as u64;
+            injected_total += injected;
+            detections_total += detections;
+            let eff = match policy {
+                DegradePolicy::Fail => Some(wblock),
+                DegradePolicy::Recompute => None,
+                DegradePolicy::Mask => {
+                    // zero the flagged dyadic-block contributions of
+                    // every flagged filter, row by row
+                    let mut m = wblock;
+                    for r in 0..a.kept_rows.len() {
+                        for f in (0..nf).filter(|&f| filter_hit(f)) {
+                            let coeffs = csd::dyadic_blocks(m[r * nf + f]);
+                            let mut v = 0i32;
+                            for (k, &c) in coeffs.iter().enumerate() {
+                                if !flagged[f * csd::NUM_BLOCKS + k] {
+                                    v += (c as i32) << (2 * k);
+                                }
+                            }
+                            m[r * nf + f] = v.clamp(-128, 127) as i8;
+                        }
+                    }
+                    Some(m)
+                }
+            };
+            replicas.push(ReplicaFault { slot, injected, detections, detected_filters, wblock: eff });
+        }
+        by_assignment.push((!replicas.is_empty()).then_some(AssignmentFaults { replicas }));
+    }
+    Some(LayerFaults {
+        spec: arch.cell_faults,
+        policy,
+        report: plan.report,
+        injected: injected_total,
+        detections: detections_total,
+        by_assignment,
+    })
+}
+
 /// U_act upper bound from the packing alone (column occupancy).
 pub fn packing_utilization(assignments: &[Assignment], arch: &ArchConfig) -> f64 {
     if assignments.is_empty() {
@@ -511,5 +786,118 @@ mod tests {
         let (asg, _) = pack_layer(&p, &arch);
         let u = packing_utilization(&asg, &arch);
         assert!(u > 0.5, "packing utilization {u}");
+    }
+
+    fn faulty_arch(ber: f64, seed: u64) -> ArchConfig {
+        ArchConfig { cell_faults: CellFaultSpec::uniform(ber, seed), ..ArchConfig::db_pim() }
+    }
+
+    #[test]
+    fn plan_repair_off_spec_is_none() {
+        assert!(plan_repair(&ArchConfig::db_pim()).is_none());
+        let asg: Vec<Assignment> = Vec::new();
+        assert!(apply_cell_faults(&asg, &[], &ArchConfig::db_pim()).is_none());
+    }
+
+    #[test]
+    fn plan_repair_avoids_stuck_columns_within_budget() {
+        // a BER high enough to guarantee stuck columns, low enough
+        // that the spare budget usually covers them
+        let arch = faulty_arch(2e-4, 21);
+        let fm = FaultMap::new(arch.cell_faults);
+        let plan = plan_repair(&arch).unwrap();
+        assert_eq!(plan.slots.len(), arch.n_cores);
+        let phys_cols = arch.macro_columns + arch.spare_columns_per_macro;
+        let phys_macros = arch.macros_per_core + arch.spare_macros_per_core;
+        for (core, slots) in plan.slots.iter().enumerate() {
+            assert_eq!(slots.len(), arch.macros_per_core);
+            for mr in slots {
+                assert!(mr.phys_macro < phys_macros, "macro beyond spare budget");
+                assert_eq!(mr.col_map.len(), arch.macro_columns);
+                // col_map is injective and within the physical budget
+                let mut seen = vec![false; phys_cols];
+                for (lc, &pc) in mr.col_map.iter().enumerate() {
+                    let pc = pc as usize;
+                    assert!(pc < phys_cols, "column beyond spare budget");
+                    assert!(!seen[pc], "physical column mapped twice");
+                    seen[pc] = true;
+                    let stuck = fm.column_stuck(
+                        core,
+                        mr.phys_macro,
+                        pc,
+                        arch.compartments,
+                        arch.rows_per_compartment,
+                    );
+                    // a mapped column is stuck only if the plan says so
+                    assert_eq!(stuck, mr.stuck_logical.contains(&(lc as u16)));
+                }
+            }
+        }
+        assert!(plan.report.repaired_columns > 0, "BER 2e-4 must repair something");
+        assert_eq!(plan.report.unrepairable_columns, 0, "spares must cover BER 2e-4");
+        // the plan is pure: replanning yields the identical placement
+        assert_eq!(plan, plan_repair(&arch).unwrap());
+    }
+
+    #[test]
+    fn zero_spares_keep_identity_mapping_when_clean() {
+        // with no spare budget a fault-free macro maps identically
+        let mut arch = faulty_arch(0.0, 3);
+        arch.cell_faults.ber_transient = 1e-4; // enabled, but no stuck cells
+        arch.spare_columns_per_macro = 0;
+        arch.spare_macros_per_core = 0;
+        let plan = plan_repair(&arch).unwrap();
+        for (slot, mr) in plan.slots[0].iter().enumerate() {
+            assert_eq!(mr.phys_macro, slot);
+            let identity: Vec<u16> = (0..arch.macro_columns as u16).collect();
+            assert_eq!(mr.col_map, identity);
+            assert!(mr.stuck_logical.is_empty());
+        }
+        assert_eq!(plan.report, RepairReport::default());
+    }
+
+    #[test]
+    fn apply_cell_faults_detects_every_corruption() {
+        // transient-heavy spec: repair can't help, ABFT must see all
+        let mut arch = faulty_arch(0.0, 17);
+        arch.cell_faults.ber_transient = 5e-3;
+        arch.fault_degrade = DegradePolicy::Fail;
+        let p = prep(512, 32, SparsityConfig::hybrid(0.4), &arch);
+        let (asg, _) = pack_layer(&p, &arch);
+        let abft: Vec<Vec<u64>> = asg
+            .iter()
+            .map(|a| faultmap::dyadic_checksums(&a.wblock, a.filters.len()))
+            .collect();
+        let lf = apply_cell_faults(&asg, &abft, &arch).unwrap();
+        assert!(lf.injected > 0, "5e-3 transient BER must corrupt something");
+        assert!(lf.detections > 0);
+        for af in lf.by_assignment.iter().flatten() {
+            for r in &af.replicas {
+                assert!(r.slot < arch.macros_per_core);
+                assert!(r.injected > 0);
+                assert!(r.detections > 0, "corrupted replica escaped ABFT");
+                assert!(r.detected_filters > 0);
+                // policy Fail keeps the corrupted block
+                assert!(r.wblock.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn recompute_policy_restores_clean_blocks() {
+        let mut arch = faulty_arch(1e-3, 29);
+        arch.fault_degrade = DegradePolicy::Recompute;
+        let p = prep(512, 32, SparsityConfig::hybrid(0.4), &arch);
+        let (asg, _) = pack_layer(&p, &arch);
+        let abft: Vec<Vec<u64>> = asg
+            .iter()
+            .map(|a| faultmap::dyadic_checksums(&a.wblock, a.filters.len()))
+            .collect();
+        let lf = apply_cell_faults(&asg, &abft, &arch).unwrap();
+        for af in lf.by_assignment.iter().flatten() {
+            for r in &af.replicas {
+                assert!(r.wblock.is_none(), "Recompute must restore the clean block");
+            }
+        }
     }
 }

@@ -78,6 +78,15 @@ pub struct Program {
     /// the flat/byte encodings (`from_instrs`/`decode` restore the
     /// default).
     pub kernel: crate::sim::backend::BackendKind,
+    /// ABFT column checksums of every assignment's *clean* resident
+    /// weight block (`arch::faultmap::dyadic_checksums` layout,
+    /// `abft[assignment][filter · NUM_BLOCKS + block]`), recorded only
+    /// when the arch's cell-fault model is on (DESIGN.md §13). Empty
+    /// otherwise — and, like the kernel tag, not carried by the
+    /// flat/byte encodings (`from_instrs`/`decode` restore empty), so
+    /// the zero-BER roundtrips are bit-identical to a build without
+    /// the fault subsystem.
+    pub abft: Vec<Vec<u64>>,
 }
 
 impl Program {
@@ -105,7 +114,7 @@ impl Program {
         if pending.iter().any(|v| !v.is_empty()) {
             close_phase(&mut pending, Barrier::Open, &mut phases);
         }
-        Program { n_cores, phases, kernel: Default::default() }
+        Program { n_cores, phases, kernel: Default::default(), abft: Vec::new() }
     }
 
     /// Flatten back to an instruction stream (segments in ascending
@@ -213,6 +222,14 @@ pub fn codegen(
             assignments,
             tiles,
         )),
+        abft: if arch.cell_faults.enabled() {
+            assignments
+                .iter()
+                .map(|a| crate::arch::faultmap::dyadic_checksums(&a.wblock, a.filters.len()))
+                .collect()
+        } else {
+            Vec::new()
+        },
     }
 }
 

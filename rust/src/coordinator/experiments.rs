@@ -25,12 +25,13 @@
 //! `*_with_stats` variants surface both hit/miss counters for the
 //! driver summaries.
 
-use crate::arch::ArchConfig;
-use crate::compiler::{CacheStats, CompileCache, SparsityConfig};
+use crate::arch::{ArchConfig, CellFaultSpec, DegradePolicy};
+use crate::compiler::{packing, CacheStats, CompileCache, SparsityConfig};
 use crate::json::{arr, num, obj, str_, Value};
 use crate::models::{self, Network};
-use crate::sim::{self, Engine, OpCategory, SimCache, SimReport};
+use crate::sim::{self, Engine, Machine, OpCategory, SimCache, SimReport};
 use crate::stats;
+use crate::tensor::MatI8;
 
 use super::pool;
 use super::sharding::{self, ShardReport, ShardSpec};
@@ -453,6 +454,164 @@ pub fn shard_sweep_with_stats(seed: u64) -> (Vec<ShardSweepRow>, SweepStats) {
     .run()
 }
 
+/// `dbpim fault-campaign` row: one (network, BER, repair strategy)
+/// cell of the macro-level cell-fault campaign (DESIGN.md §13).
+#[derive(Debug, Clone)]
+pub struct FaultCampaignRow {
+    pub network: String,
+    /// Uniform bit-error rate on all three fault axes
+    /// (stuck-0 / stuck-1 / transient).
+    pub ber: f64,
+    /// Repair strategy: `"none"` (spare budget zeroed) or `"spares"`
+    /// (the preset spare-column + spare-macro budget).
+    pub repair: &'static str,
+    /// Stuck primary columns in the fault map (whole grid; the repair
+    /// plan is a pure function of the arch, shared by every layer).
+    pub stuck_columns: u64,
+    /// Stuck columns steered onto clean spares at compile time.
+    pub repaired_columns: u64,
+    /// Stuck columns left in service (spares exhausted).
+    pub unrepairable_columns: u64,
+    /// Replica slots served by a spare macro instead of a primary.
+    pub spared_macros: u64,
+    /// Corrupted resident weight cells over all PIM layers
+    /// (post-repair; replicas included).
+    pub injected_cells: u64,
+    /// ABFT `(filter, dyadic block)` checksum mismatches over all PIM
+    /// layers.
+    pub detections: u64,
+    pub pim_layers: usize,
+    /// PIM layers whose functional output differs from the fault-free
+    /// reference.
+    pub corrupted_layers: usize,
+    /// Corrupted layers flagged by at least one ABFT detection.
+    pub detected_layers: usize,
+    /// Corrupted layers with zero detections — silent data corruption.
+    /// The acceptance gate: 0 under `repair = spares` at BER ≤ 1e-4.
+    pub undetected_layers: usize,
+    /// Fleet latency overhead vs the fault-free run (fraction ≥ 0:
+    /// ABFT verification cycles + any degrade-policy recompute).
+    pub cycle_overhead: f64,
+    /// Energy overhead vs the fault-free run (fraction; ABFT checks).
+    pub energy_overhead: f64,
+}
+
+impl FaultCampaignRow {
+    /// `repaired / stuck` (1.0 when nothing is stuck).
+    pub fn repair_coverage(&self) -> f64 {
+        if self.stuck_columns == 0 {
+            1.0
+        } else {
+            self.repaired_columns as f64 / self.stuck_columns as f64
+        }
+    }
+}
+
+/// The default campaign grid (the EXPERIMENTS.md artifact): resnet18
+/// across three BER decades, with and without spare repair.
+pub fn fault_campaign(seed: u64) -> Vec<FaultCampaignRow> {
+    let nets = vec!["resnet18".to_string()];
+    fault_campaign_with_stats(&nets, &[1e-5, 1e-4, 1e-3], &["none", "spares"], seed, seed).0
+}
+
+/// The fault-injection campaign: for every (network, BER, repair
+/// strategy) cell, build a faulty arch (uniform BER, degrade policy
+/// `fail` so corruption reaches the outputs and the ABFT verdicts are
+/// observable), then report the compile-time repair outcome, the
+/// detected/undetected output-error split vs the fault-free functional
+/// reference, and the latency/energy overhead of verification.
+///
+/// `seed` drives weights/activations; `fault_seed` drives the defect
+/// pattern (the CLI's `--fault-seed` / `DBPIM_CELL_FAULT_SEED`). Rows
+/// are bit-identical for any worker count or engine: fault decisions
+/// are pure hashes and both simulations flow through the shared
+/// deterministic caches.
+pub fn fault_campaign_with_stats(
+    nets: &[String],
+    bers: &[f64],
+    repairs: &[&'static str],
+    seed: u64,
+    fault_seed: u64,
+) -> (Vec<FaultCampaignRow>, SweepStats) {
+    let axes: Vec<(String, f64, &'static str)> = nets
+        .iter()
+        .flat_map(|n| {
+            bers.iter().flat_map(move |&b| repairs.iter().map(move |&r| (n.clone(), b, r)))
+        })
+        .collect();
+    SweepSpec {
+        axes,
+        job: move |(name, ber, repair): (String, f64, &'static str), ctx: &SweepCtx| {
+            let net = models::by_name(&name).expect("campaign model");
+            let sp = SparsityConfig::hybrid(0.6);
+            let clean_arch = ArchConfig::db_pim();
+            let mut arch = ArchConfig::db_pim();
+            arch.cell_faults = CellFaultSpec::uniform(ber, fault_seed);
+            arch.fault_degrade = DegradePolicy::Fail;
+            if repair == "none" {
+                arch.spare_columns_per_macro = 0;
+                arch.spare_macros_per_core = 0;
+            }
+            let rep = packing::plan_repair(&arch).map(|p| p.report).unwrap_or_default();
+            let clean = ctx.simulate(&net, sp, &clean_arch, seed);
+            let faulty = ctx.simulate(&net, sp, &arch, seed);
+            let clean_m = Machine::new(clean_arch.clone());
+            let fault_m = Machine::new(arch.clone());
+            let (mut injected, mut detections) = (0u64, 0u64);
+            let (mut corrupted, mut detected, mut undetected) = (0usize, 0usize, 0usize);
+            let pim = sim::pim_indices(&net);
+            for &idx in &pim {
+                let cl =
+                    ctx.cache.get_or_compile(&net, idx, sp, &clean_arch, seed).expect("PIM layer");
+                let fl = ctx.cache.get_or_compile(&net, idx, sp, &arch, seed).expect("PIM layer");
+                let m = cl.prep.m.max(1);
+                let x = MatI8::from_vec(
+                    m,
+                    cl.prep.k,
+                    models::synthesize_activations(seed ^ ((idx as u64) << 20), m * cl.prep.k),
+                );
+                let (_, reference) = clean_m.run_pim_layer(&cl, Some(&x), true);
+                let (_, out) = fault_m.run_pim_layer(&fl, Some(&x), true);
+                let (li, ld) =
+                    fl.faults.as_ref().map(|f| (f.injected, f.detections)).unwrap_or((0, 0));
+                injected += li;
+                detections += ld;
+                if out != reference {
+                    corrupted += 1;
+                    if ld > 0 {
+                        detected += 1;
+                    } else {
+                        undetected += 1;
+                    }
+                }
+            }
+            let table = crate::energy::EnergyTable::default28nm();
+            FaultCampaignRow {
+                network: name,
+                ber,
+                repair,
+                stuck_columns: rep.stuck_columns,
+                repaired_columns: rep.repaired_columns,
+                unrepairable_columns: rep.unrepairable_columns,
+                spared_macros: rep.spared_macros,
+                injected_cells: injected,
+                detections,
+                pim_layers: pim.len(),
+                corrupted_layers: corrupted,
+                detected_layers: detected,
+                undetected_layers: undetected,
+                cycle_overhead: faulty.total_cycles() as f64
+                    / clean.total_cycles().max(1) as f64
+                    - 1.0,
+                energy_overhead: faulty.totals.energy_pj(&table)
+                    / clean.totals.energy_pj(&table).max(1e-12)
+                    - 1.0,
+            }
+        },
+    }
+    .run()
+}
+
 /// Fig. 3 data (both panels) for all five networks.
 pub fn fig3(seed: u64) -> (Vec<stats::ZeroBitStats>, Vec<stats::ZeroColumnStats>) {
     let (panels, _) = SweepSpec {
@@ -580,6 +739,32 @@ pub fn shard_sweep_json(rows: &[ShardSweepRow]) -> Value {
         .collect())
 }
 
+pub fn fault_campaign_json(rows: &[FaultCampaignRow]) -> Value {
+    arr(rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("network", str_(&r.network)),
+                ("ber", num(r.ber)),
+                ("repair", str_(r.repair)),
+                ("stuck_columns", num(r.stuck_columns as f64)),
+                ("repaired_columns", num(r.repaired_columns as f64)),
+                ("unrepairable_columns", num(r.unrepairable_columns as f64)),
+                ("spared_macros", num(r.spared_macros as f64)),
+                ("repair_coverage", num(r.repair_coverage())),
+                ("injected_cells", num(r.injected_cells as f64)),
+                ("detections", num(r.detections as f64)),
+                ("pim_layers", num(r.pim_layers as f64)),
+                ("corrupted_layers", num(r.corrupted_layers as f64)),
+                ("detected_layers", num(r.detected_layers as f64)),
+                ("undetected_layers", num(r.undetected_layers as f64)),
+                ("cycle_overhead", num(r.cycle_overhead)),
+                ("energy_overhead", num(r.energy_overhead)),
+            ])
+        })
+        .collect())
+}
+
 pub fn table3_json(rows: &[Table3Row]) -> Value {
     arr(rows
         .iter()
@@ -622,6 +807,31 @@ mod tests {
         for (name, u) in &t.u_act {
             assert!(*u > 0.4, "{name} U_act {u}");
         }
+    }
+
+    #[test]
+    fn fault_campaign_on_tiny_net_detects_everything() {
+        // one cheap cell on the tiny fixture: coverage of the whole
+        // campaign path (repair plan, dual compile, functional diff,
+        // overhead math) without touching the zoo.
+        let nets = vec!["tiny".to_string()];
+        let (rows, _) = fault_campaign_with_stats(&nets, &[2e-3], &["none", "spares"], 5, 5);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.pim_layers, 2);
+            assert!(r.injected_cells > 0, "BER 2e-3 must corrupt something: {r:?}");
+            assert_eq!(r.undetected_layers, 0, "silent corruption: {r:?}");
+            assert_eq!(r.corrupted_layers, r.detected_layers, "{r:?}");
+            assert!(r.cycle_overhead > 0.0, "ABFT verification is not free: {r:?}");
+            assert!(r.energy_overhead > 0.0, "{r:?}");
+            assert!(r.repair_coverage() >= 0.0 && r.repair_coverage() <= 1.0);
+        }
+        // without spares nothing can be repaired; with them repair may
+        // only improve (at this BER most columns carry a stuck cell, so
+        // coverage is partial — the low-BER regime is pinned in the
+        // integration goldens)
+        assert_eq!(rows[0].repaired_columns, 0, "{rows:?}");
+        assert!(rows[1].repaired_columns >= rows[0].repaired_columns, "{rows:?}");
     }
 
     #[test]

@@ -162,6 +162,11 @@ pub struct ShardReport {
     /// including its outgoing transfer. Equals fleet latency when
     /// `pp == 1` (no pipelining).
     pub pipeline_interval_cycles: u64,
+    /// ABFT corruption detections per chip (chip index = stage * tp +
+    /// rank; all zeros when the cell-fault model is off). Each fleet
+    /// member draws its own defect pattern (`CellFaultSpec::for_chip`),
+    /// so a degraded chip shows up here in fleet summaries.
+    pub chip_fault_detections: Vec<u64>,
 }
 
 impl ShardReport {
@@ -322,6 +327,9 @@ struct MergedLayer {
     /// Per-tensor-rank busy cycles (len == tp; SIMD layers run on rank
     /// 0 only).
     rank_elapsed: Vec<u64>,
+    /// Per-tensor-rank ABFT detections (len == tp; zero for SIMD
+    /// layers and when the cell-fault model is off).
+    rank_detections: Vec<u64>,
     /// All-gather charge for this layer (TP layers with ≥ 2
     /// participating chips; else 0).
     comm_cycles: u64,
@@ -350,6 +358,7 @@ pub fn simulate_sharded(
     if spec.chips <= 1 {
         let report = sim::simulate_network_memo(net, sparsity, arch, seed, engine, cache, sim_cache);
         let total = report.total_cycles();
+        let detections = report.totals.fault_detections;
         return ShardReport {
             spec,
             report,
@@ -357,6 +366,7 @@ pub fn simulate_sharded(
             interconnect_cycles: 0,
             interconnect_bytes: 0,
             pipeline_interval_cycles: total,
+            chip_fault_detections: vec![detections],
         };
     }
     debug_assert_eq!(tp * pp, spec.chips, "scheme factors must cover the fleet");
@@ -377,6 +387,7 @@ pub fn simulate_sharded(
             .zip(kinds)
             .map(|(stats, net_idx)| MergedLayer {
                 rank_elapsed: vec![stats.elapsed],
+                rank_detections: vec![stats.events.fault_detections],
                 comm_cycles: 0,
                 comm_bytes: 0,
                 net_idx,
@@ -392,6 +403,7 @@ pub fn simulate_sharded(
     let mut comm_bytes: u64 = merged.iter().map(|l| l.comm_bytes).sum();
     let mut interval: u64 = 0;
     let mut chip_cycles = vec![0u64; spec.chips];
+    let mut chip_fault_detections = vec![0u64; spec.chips];
     for (s, &(a, b)) in stages.iter().enumerate() {
         let stage_sum: u64 = weights[a..b].iter().sum();
         let boundary = if s + 1 < stages.len() {
@@ -406,6 +418,9 @@ pub fn simulate_sharded(
         for l in &merged[a..b] {
             for (r, &e) in l.rank_elapsed.iter().enumerate() {
                 chip_cycles[s * tp + r] += e;
+            }
+            for (r, &d) in l.rank_detections.iter().enumerate() {
+                chip_fault_detections[s * tp + r] += d;
             }
         }
     }
@@ -437,6 +452,7 @@ pub fn simulate_sharded(
         interconnect_cycles: comm_cycles,
         interconnect_bytes: comm_bytes,
         pipeline_interval_cycles: interval,
+        chip_fault_detections,
     }
 }
 
@@ -511,7 +527,14 @@ fn merge_tensor_parallel(
         } else if let Some(stats) = sim::simd_layer_stats(machine, layer) {
             let mut rank_elapsed = vec![0u64; tp];
             rank_elapsed[0] = stats.elapsed;
-            merged.push(MergedLayer { rank_elapsed, comm_cycles: 0, comm_bytes: 0, net_idx, stats });
+            merged.push(MergedLayer {
+                rank_elapsed,
+                rank_detections: vec![0u64; tp],
+                comm_cycles: 0,
+                comm_bytes: 0,
+                net_idx,
+                stats,
+            });
         }
     }
     merged
@@ -536,6 +559,7 @@ fn merge_pim_layer(
     let mut core_cycles = Vec::with_capacity(present.len() * arch.n_cores);
     let mut elapsed = 0u64;
     let mut rank_elapsed = vec![0u64; tp];
+    let mut rank_detections = vec![0u64; tp];
     let mut busy = 0usize; // chips with actual filter work
     for (chip, slot) in chips.iter().enumerate() {
         if let Some(s) = slot {
@@ -543,6 +567,7 @@ fn merge_pim_layer(
             core_cycles.extend_from_slice(&s.core_cycles);
             elapsed = elapsed.max(s.elapsed);
             rank_elapsed[chip] = s.elapsed;
+            rank_detections[chip] = s.events.fault_detections;
             if s.elapsed > 0 || s.events.weight_writes > 0 {
                 busy += 1;
             }
@@ -566,6 +591,7 @@ fn merge_pim_layer(
             elapsed,
         },
         rank_elapsed,
+        rank_detections,
         comm_cycles,
         comm_bytes,
         net_idx: idx,
@@ -597,9 +623,23 @@ fn simulate_chip_layer(
     if mine.is_empty() && chip != 0 {
         return None;
     }
-    let key = CompileKey::new(net, idx, sparsity, arch, seed).sharded(tp, chip);
+    // Per-chip defect patterns: each fleet member re-lowers its subset
+    // under its own fault spec (`CellFaultSpec::for_chip`), whose key
+    // bits land in the chip-scoped compile key. The full-layer artifact
+    // stays under the root spec — packing ignores fault state, so every
+    // chip partitions the identical assignment list.
+    let chip_arch: ArchConfig;
+    let sub_arch: &ArchConfig = if arch.cell_faults.enabled() && tp > 1 {
+        chip_arch =
+            ArchConfig { cell_faults: arch.cell_faults.for_chip(chip), ..(**arch).clone() };
+        &chip_arch
+    } else {
+        &**arch
+    };
+    let key = CompileKey::new(net, idx, sparsity, sub_arch, seed).sharded(tp, chip);
     let (stats, _) = sim_cache.get_or_run_keyed(key.clone(), false, || {
-        let sub = cache.get_or_insert_with(key, || compile_assignment_subset(&full, &mine, arch));
+        let sub =
+            cache.get_or_insert_with(key, || compile_assignment_subset(&full, &mine, sub_arch));
         let x = arch.input_skipping.then(|| {
             let m = sub.prep.m.max(1);
             MatI8::from_vec(

@@ -36,6 +36,9 @@ pub struct EnergyTable {
     pub simd_lane_op_pj: f64,
     /// Writing one weight bit (cell) during tile load.
     pub weight_write_pj: f64,
+    /// Re-deriving + comparing one ABFT checksum word at tile load
+    /// (cell-fault model on, DESIGN.md §13).
+    pub abft_check_pj: f64,
     /// Instruction fetch + decode.
     pub instr_pj: f64,
     /// Static leakage per core per cycle.
@@ -57,6 +60,7 @@ impl EnergyTable {
             ipu_detect_pj: 0.6,
             simd_lane_op_pj: 1.1,
             weight_write_pj: 0.05,
+            abft_check_pj: 0.7,
             instr_pj: 0.4,
             leakage_core_cycle_pj: 0.9,
         }
@@ -88,11 +92,17 @@ pub struct EventCounts {
     pub simd_lane_ops: u64,
     /// Weight cell writes.
     pub weight_writes: u64,
+    /// ABFT checksum words verified at tile load (cell-fault model).
+    pub abft_checks: u64,
     /// Instructions executed.
     pub instrs: u64,
     /// Total elapsed cycles × active cores (for leakage).
     pub core_cycles: u64,
     // ---- non-energy bookkeeping ----
+    /// ABFT checksum mismatches raised (typed corruption detections;
+    /// counted per verification, so every tile load of a corrupted
+    /// assignment raises its mismatches again).
+    pub fault_detections: u64,
     /// Total elapsed cycles (makespan).
     pub elapsed_cycles: u64,
     /// Σ active columns over compute cycles (U_act numerator; the
@@ -130,8 +140,10 @@ impl EventCounts {
         self.ipu_detects += other.ipu_detects;
         self.simd_lane_ops += other.simd_lane_ops;
         self.weight_writes += other.weight_writes;
+        self.abft_checks += other.abft_checks;
         self.instrs += other.instrs;
         self.core_cycles += other.core_cycles;
+        self.fault_detections += other.fault_detections;
         self.elapsed_cycles += other.elapsed_cycles;
         self.active_col_cycles += other.active_col_cycles;
         self.macs += other.macs;
@@ -150,6 +162,7 @@ impl EventCounts {
             + self.ipu_detects as f64 * table.ipu_detect_pj
             + self.simd_lane_ops as f64 * table.simd_lane_op_pj
             + self.weight_writes as f64 * table.weight_write_pj
+            + self.abft_checks as f64 * table.abft_check_pj
             + self.instrs as f64 * table.instr_pj
             + self.core_cycles as f64 * table.leakage_core_cycle_pj
     }
@@ -168,6 +181,7 @@ impl EventCounts {
             ("ipu", self.ipu_detects as f64 * t.ipu_detect_pj),
             ("simd_core", self.simd_lane_ops as f64 * t.simd_lane_op_pj),
             ("weight_load", self.weight_writes as f64 * t.weight_write_pj),
+            ("abft", self.abft_checks as f64 * t.abft_check_pj),
             ("control", self.instrs as f64 * t.instr_pj),
             ("leakage", self.core_cycles as f64 * t.leakage_core_cycle_pj),
         ]
@@ -213,6 +227,7 @@ mod tests {
         e.ipu_detects = 29;
         e.simd_lane_ops = 31;
         e.weight_writes = 37;
+        e.abft_checks = 47;
         e.instrs = 41;
         e.core_cycles = 43;
         let total: f64 = e.energy_breakdown(&t).iter().map(|(_, v)| v).sum();

@@ -1,6 +1,11 @@
 //! Minimal JSON parser + writer (the vendored registry has no serde).
 //! Supports the full JSON grammar minus exotic escapes; used for the
 //! artifact manifest and experiment reports.
+//!
+//! This module sits on user-input paths (spec files, traces), so
+//! `unwrap`/`expect` are linted out — fallible lookups go through
+//! [`Value::try_req`] and friends.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -61,10 +66,17 @@ impl Value {
     }
 
     /// Convenience: `obj["a"]["b"]` style access, panicking with a clear
-    /// message (manifests are trusted build outputs).
+    /// message. Only for trusted build outputs and tests — anything
+    /// reachable from user input must use [`Self::try_req`].
     pub fn req(&self, key: &str) -> &Value {
         self.get(key)
             .unwrap_or_else(|| panic!("missing JSON key {key:?}"))
+    }
+
+    /// Non-panicking required lookup for untrusted documents: a missing
+    /// key (or a non-object receiver) is a descriptive `Err`.
+    pub fn try_req(&self, key: &str) -> Result<&Value, String> {
+        self.get(key).ok_or_else(|| format!("missing JSON key {key:?}"))
     }
 }
 
@@ -229,7 +241,8 @@ impl<'a> Parser<'a> {
         ) {
             self.pos += 1;
         }
-        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("bad number bytes at {start}"))?;
         s.parse::<f64>()
             .map(Value::Num)
             .map_err(|_| format!("bad number {s:?} at byte {start}"))
@@ -314,6 +327,7 @@ pub fn arr(items: Vec<Value>) -> Value {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)]
 mod tests {
     use super::*;
 

@@ -29,6 +29,19 @@
 //! dbpim shard-sweep        speedup-vs-chips table (1/4/16 chips, tensor
 //!                          vs pipeline parallel) per zoo model, with the
 //!                          interconnect charge broken out
+//! dbpim fault-campaign [--models a,b] [--ber 1e-5,1e-4] [--repair
+//!                      none|spares|both] [--seed S] [--fault-seed S]
+//!                      [--check]
+//!                          sweep the macro-level cell-fault model
+//!                          (DESIGN.md §13): per (model, BER, repair)
+//!                          cell report spare-repair coverage, the
+//!                          detected/undetected output-error split vs
+//!                          the fault-free reference, and the ABFT
+//!                          latency/energy overhead. `--check` exits
+//!                          nonzero unless repair is effective and no
+//!                          corruption goes undetected (the CI smoke
+//!                          gate); `--fault-seed` defaults to
+//!                          `DBPIM_CELL_FAULT_SEED`, then `--seed`
 //! dbpim info               architecture summary + effective topology
 //!                          (pool, fleet, kernel backend, cache shards)
 //! ```
@@ -50,6 +63,10 @@
 //! flag is absent, and per-shape auto selection otherwise
 //! (sim::backend). Results never depend on the choice — every backend
 //! is bit-identical to the scalar oracle.
+//!
+//! The CLI is all user input: `unwrap`/`expect` are linted out — parse
+//! failures print usage and exit with a code, they never panic.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 use dbpim::arch::ArchConfig;
 use dbpim::benchlib::{f2, pct, print_table};
@@ -109,10 +126,11 @@ fn main() {
         "trace" => cmd_trace(&args[1..]),
         "serve" => cmd_serve(&args[1..]),
         "shard-sweep" => cmd_shard_sweep(),
+        "fault-campaign" => cmd_fault_campaign(&args[1..]),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dbpim <verify|simulate|energy|trace|serve|shard-sweep|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
+                "usage: dbpim <verify|simulate|energy|trace|serve|shard-sweep|fault-campaign|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
             );
             2
         }
@@ -184,8 +202,16 @@ fn cmd_verify() -> i32 {
     );
 
     // 1. simulator (DB-PIM + baseline)
-    let run_d = sim::pipeline::run_mininet(&net, &ArchConfig::db_pim()).unwrap();
-    let run_b = sim::pipeline::run_mininet(&net, &ArchConfig::dense_baseline()).unwrap();
+    let (run_d, run_b) = match (
+        sim::pipeline::run_mininet(&net, &ArchConfig::db_pim()),
+        sim::pipeline::run_mininet(&net, &ArchConfig::dense_baseline()),
+    ) {
+        (Ok(d), Ok(b)) => (d, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("simulation failed: {e:#}");
+            return 1;
+        }
+    };
     let sim_ok = run_d.matches_golden(&net) && run_b.matches_golden(&net);
     println!("simulator vs exported golden: {}", if sim_ok { "BIT-EXACT" } else { "MISMATCH" });
 
@@ -231,7 +257,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
         );
         return 2;
     };
-    let arch = match flag_value(args, "--arch") {
+    let mut arch = match flag_value(args, "--arch") {
         None => ArchConfig::db_pim(),
         Some(name) => match ArchConfig::by_name(&name) {
             Some(a) => a,
@@ -243,6 +269,12 @@ fn cmd_simulate(args: &[String]) -> i32 {
             }
         },
     };
+    // DBPIM_CELL_FAULT_SEED turns on the stock cell-fault mix
+    // (DESIGN.md §13) for plain simulations; sharded fleets derive
+    // per-chip defect patterns from it.
+    if let Some(f) = dbpim::arch::CellFaultSpec::from_env() {
+        arch.cell_faults = f;
+    }
     let v = flag_value(args, "--value-sparsity").and_then(|s| s.parse().ok()).unwrap_or(0.6);
     let sp = if args.iter().any(|a| a == "--no-fta") {
         SparsityConfig { value_sparsity: v, fta: false }
@@ -816,6 +848,131 @@ fn cmd_shard_sweep() -> i32 {
     0
 }
 
+/// Macro-level cell-fault campaign (DESIGN.md §13): BER × model ×
+/// repair-strategy sweep reporting repair coverage, the
+/// detected/undetected output-error split vs the fault-free reference,
+/// and the ABFT verification overhead.
+fn cmd_fault_campaign(args: &[String]) -> i32 {
+    let models_arg = flag_value(args, "--models").unwrap_or_else(|| "resnet18".into());
+    let nets: Vec<String> =
+        models_arg.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if nets.is_empty() {
+        eprintln!("--models expects a comma-separated list of network names");
+        return 2;
+    }
+    for n in &nets {
+        if models::by_name(n).is_none() {
+            eprintln!(
+                "unknown network {n} (try: alexnet vgg19 resnet18 mobilenet_v2 efficientnet_b0 mininet tiny small)"
+            );
+            return 2;
+        }
+    }
+    let bers: Vec<f64> = match flag_value(args, "--ber") {
+        None => vec![1e-5, 1e-4, 1e-3],
+        Some(s) => {
+            let mut v = Vec::new();
+            for tok in s.split(',') {
+                match tok.trim().parse::<f64>() {
+                    Ok(b) if b.is_finite() && (0.0..=1.0).contains(&b) => v.push(b),
+                    _ => {
+                        eprintln!("--ber expects comma-separated rates in [0, 1]");
+                        return 2;
+                    }
+                }
+            }
+            v
+        }
+    };
+    let repairs: Vec<&'static str> = match flag_value(args, "--repair").as_deref() {
+        None | Some("both") => vec!["none", "spares"],
+        Some("none") => vec!["none"],
+        Some("spares") => vec!["spares"],
+        Some(other) => {
+            eprintln!("--repair expects none|spares|both, got {other}");
+            return 2;
+        }
+    };
+    let seed = match flag_value(args, "--seed") {
+        None => 42,
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("--seed expects a non-negative integer");
+                return 2;
+            }
+        },
+    };
+    let fault_seed = match flag_value(args, "--fault-seed") {
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("--fault-seed expects a non-negative integer");
+                return 2;
+            }
+        },
+        None => dbpim::arch::CellFaultSpec::from_env().map(|f| f.seed).unwrap_or(seed),
+    };
+    let (rows, stats) = exp::fault_campaign_with_stats(&nets, &bers, &repairs, seed, fault_seed);
+    print_table(
+        "Fault campaign — spare repair & ABFT detection per (model, BER, repair)",
+        &[
+            "network", "BER", "repair", "stuck", "repaired", "coverage", "injected", "detections",
+            "bad layers", "undetected", "cycle ovh", "energy ovh",
+        ],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.network.clone(),
+                    format!("{:.0e}", r.ber),
+                    r.repair.to_string(),
+                    r.stuck_columns.to_string(),
+                    r.repaired_columns.to_string(),
+                    pct(r.repair_coverage()),
+                    r.injected_cells.to_string(),
+                    r.detections.to_string(),
+                    format!("{}/{}", r.corrupted_layers, r.pim_layers),
+                    r.undetected_layers.to_string(),
+                    pct(r.cycle_overhead),
+                    pct(r.energy_overhead),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
+    write_report("fault_campaign", &exp::fault_campaign_json(&rows));
+    if args.iter().any(|a| a == "--check") {
+        let mut ok = true;
+        for r in rows.iter().filter(|r| r.repair == "spares") {
+            if r.stuck_columns > 0 && r.repaired_columns == 0 {
+                eprintln!(
+                    "check failed: {} @ BER {:.0e}: {} stuck columns, none repaired",
+                    r.network, r.ber, r.stuck_columns
+                );
+                ok = false;
+            }
+            if r.undetected_layers > 0 {
+                eprintln!(
+                    "check failed: {} @ BER {:.0e}: {} corrupted layer(s) escaped ABFT detection",
+                    r.network, r.ber, r.undetected_layers
+                );
+                ok = false;
+            }
+        }
+        if !rows.iter().any(|r| r.repair == "spares") {
+            eprintln!("check failed: no `spares` rows in the sweep (pass --repair spares|both)");
+            ok = false;
+        }
+        if !ok {
+            return 1;
+        }
+        println!("fault-campaign check: repair active, no silent corruption");
+    }
+    0
+}
+
 fn cmd_info() -> i32 {
     for arch in [
         ArchConfig::db_pim(),
@@ -858,6 +1015,22 @@ fn cmd_info() -> i32 {
         "caches: compile {} shards, sim {} shards",
         CompileCache::shard_count(),
         sim::SimCache::shard_count()
+    );
+    let a = ArchConfig::db_pim();
+    match dbpim::arch::CellFaultSpec::from_env() {
+        Some(f) => println!(
+            "cell faults: ON via DBPIM_CELL_FAULT_SEED (seed {}, BER {:.0e} stuck0 / {:.0e} stuck1 / {:.0e} transient)",
+            f.seed, f.ber_stuck0, f.ber_stuck1, f.ber_transient
+        ),
+        None => println!(
+            "cell faults: off (enable with DBPIM_CELL_FAULT_SEED=N or `dbpim fault-campaign`)"
+        ),
+    }
+    println!(
+        "  repair budget: {} spare columns/macro, {} spare macro(s)/core; degrade policy {}",
+        a.spare_columns_per_macro,
+        a.spare_macros_per_core,
+        a.fault_degrade.name()
     );
     0
 }

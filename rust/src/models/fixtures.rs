@@ -63,6 +63,49 @@ pub fn tiny_net() -> Network {
     }
 }
 
+/// Synthetic stand-in with MiniNet-class geometry (two 3×3 convs on an
+/// 8×8 input plus a small FC head). CI's fault-campaign smoke leg and
+/// other named-model entry points use it where the python-exported
+/// MiniNet artifact bundle is not available; weights are synthesized
+/// like every other zoo network.
+pub fn mininet_proxy() -> Network {
+    Network {
+        name: "mininet".into(),
+        input_hw: 8,
+        input_ch: 8,
+        layers: vec![
+            Layer {
+                name: "c1".into(),
+                kind: LayerKind::Conv {
+                    in_ch: 8,
+                    out_ch: 16,
+                    kernel: 3,
+                    stride: 1,
+                    pad: 1,
+                    in_hw: 8,
+                },
+            },
+            Layer { name: "r1".into(), kind: LayerKind::Act { elems: 16 * 64 } },
+            Layer {
+                name: "c2".into(),
+                kind: LayerKind::Conv {
+                    in_ch: 16,
+                    out_ch: 32,
+                    kernel: 3,
+                    stride: 1,
+                    pad: 1,
+                    in_hw: 8,
+                },
+            },
+            Layer { name: "r2".into(), kind: LayerKind::Act { elems: 32 * 64 } },
+            Layer {
+                name: "fc".into(),
+                kind: LayerKind::Fc { in_features: 32 * 64, out_features: 16 },
+            },
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

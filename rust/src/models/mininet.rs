@@ -4,6 +4,8 @@
 //! baked into the golden HLO graph, so the rust compiler/simulator can
 //! run the same network and compare logits bit-for-bit against PJRT.
 
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context};
@@ -58,6 +60,12 @@ pub struct MiniNet {
     pub tile_hlo_path: PathBuf,
 }
 
+/// Fallible manifest lookup: the manifest comes off disk, so a missing
+/// key is a typed load error, never a panic.
+fn req<'a>(v: &'a json::Value, key: &str) -> crate::Result<&'a json::Value> {
+    v.try_req(key).map_err(anyhow::Error::msg)
+}
+
 /// Load MiniNet from an artifacts directory (`make artifacts` output).
 pub fn load_mininet(artifacts_dir: &Path) -> crate::Result<MiniNet> {
     let manifest_path = artifacts_dir.join("mininet_manifest.json");
@@ -65,16 +73,16 @@ pub fn load_mininet(artifacts_dir: &Path) -> crate::Result<MiniNet> {
         .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
     let m = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
 
-    let alpha = m.req("alpha").as_usize().context("alpha")?;
-    let input_obj = m.req("input");
-    let batch = input_obj.req("batch").as_usize().context("batch")?;
-    let input_ch = input_obj.req("ch").as_usize().context("ch")?;
-    let input_hw = input_obj.req("hw").as_usize().context("hw")?;
-    let num_classes = m.req("num_classes").as_usize().context("classes")?;
+    let alpha = req(&m, "alpha")?.as_usize().context("alpha")?;
+    let input_obj = req(&m, "input")?;
+    let batch = req(input_obj, "batch")?.as_usize().context("batch")?;
+    let input_ch = req(input_obj, "ch")?.as_usize().context("ch")?;
+    let input_hw = req(input_obj, "hw")?.as_usize().context("hw")?;
+    let num_classes = req(&m, "num_classes")?.as_usize().context("classes")?;
 
-    let files = m.req("files");
+    let files = req(&m, "files")?;
     let read_bin = |key: &str| -> crate::Result<Vec<u8>> {
-        let name = files.req(key).as_str().context("file name")?;
+        let name = req(files, key)?.as_str().context("file name")?;
         std::fs::read(artifacts_dir.join(name)).with_context(|| format!("reading {name}"))
     };
     let weights_bin = read_bin("weights")?;
@@ -83,21 +91,26 @@ pub fn load_mininet(artifacts_dir: &Path) -> crate::Result<MiniNet> {
     let golden_bin = read_bin("golden")?;
 
     let mut layers = Vec::new();
-    for layer in m.req("layers").as_arr().context("layers")? {
-        let name = layer.req("name").as_str().context("name")?.to_string();
-        let k = layer.req("k").as_usize().context("k")?;
-        let n = layer.req("n").as_usize().context("n")?;
-        let woff = layer.req("weight_offset").as_usize().context("woff")?;
-        let moff = layer.req("mask_offset").as_usize().context("moff")?;
+    for layer in req(&m, "layers")?.as_arr().context("layers")? {
+        let name = req(layer, "name")?.as_str().context("name")?.to_string();
+        let k = req(layer, "k")?.as_usize().context("k")?;
+        let n = req(layer, "n")?.as_usize().context("n")?;
+        let woff = req(layer, "weight_offset")?.as_usize().context("woff")?;
+        let moff = req(layer, "mask_offset")?.as_usize().context("moff")?;
         if woff + k * n > weights_bin.len() {
             bail!("weight pack too short for layer {name}");
         }
         let weights: Vec<i8> =
             weights_bin[woff..woff + k * n].iter().map(|&b| b as i8).collect();
+        if alpha == 0 || n % alpha != 0 {
+            bail!("layer {name}: n={n} not a multiple of alpha={alpha}");
+        }
         let groups = n / alpha;
+        if moff + k * groups > masks_bin.len() {
+            bail!("mask pack too short for layer {name}");
+        }
         let mask = BlockMask::from_bytes(k, groups, alpha, &masks_bin[moff..moff + k * groups]);
-        let thresholds: Vec<u8> = layer
-            .req("thresholds")
+        let thresholds: Vec<u8> = req(layer, "thresholds")?
             .as_arr()
             .context("thresholds")?
             .iter()
@@ -106,18 +119,18 @@ pub fn load_mininet(artifacts_dir: &Path) -> crate::Result<MiniNet> {
         if thresholds.len() != n {
             bail!("layer {name}: {} thresholds for n={n}", thresholds.len());
         }
-        let requant_mul = layer.req("requant_mul").as_i64().context("mul")? as i32;
+        let requant_mul = req(layer, "requant_mul")?.as_i64().context("mul")? as i32;
         let conv = match layer.get("conv") {
             Some(c) if *c != json::Value::Null => Some(ConvInfo {
-                out_ch: c.req("out_ch").as_usize().context("out_ch")?,
-                in_ch: c.req("in_ch").as_usize().context("in_ch")?,
+                out_ch: req(c, "out_ch")?.as_usize().context("out_ch")?,
+                in_ch: req(c, "in_ch")?.as_usize().context("in_ch")?,
                 geom: ConvGeom {
-                    kh: c.req("kernel").as_usize().context("kernel")?,
-                    kw: c.req("kernel").as_usize().context("kernel")?,
-                    stride: c.req("stride").as_usize().context("stride")?,
-                    pad: c.req("pad").as_usize().context("pad")?,
+                    kh: req(c, "kernel")?.as_usize().context("kernel")?,
+                    kw: req(c, "kernel")?.as_usize().context("kernel")?,
+                    stride: req(c, "stride")?.as_usize().context("stride")?,
+                    pad: req(c, "pad")?.as_usize().context("pad")?,
                 },
-                pool: c.req("pool").as_bool().context("pool")?,
+                pool: req(c, "pool")?.as_bool().context("pool")?,
             }),
             _ => None,
         };
@@ -136,9 +149,9 @@ pub fn load_mininet(artifacts_dir: &Path) -> crate::Result<MiniNet> {
         bail!("golden pack size mismatch");
     }
 
-    let hlo_path = artifacts_dir.join(files.req("hlo").as_str().context("hlo")?);
+    let hlo_path = artifacts_dir.join(req(files, "hlo")?.as_str().context("hlo")?);
     let tile_hlo_path =
-        artifacts_dir.join(files.req("tile_hlo").as_str().context("tile_hlo")?);
+        artifacts_dir.join(req(files, "tile_hlo")?.as_str().context("tile_hlo")?);
     Ok(MiniNet {
         alpha,
         batch,

@@ -249,7 +249,9 @@ pub fn zoo() -> Vec<Network> {
     vec![alexnet(), vgg19(), resnet18(), mobilenet_v2(), efficientnet_b0()]
 }
 
-/// Lookup by name (CLI entry point).
+/// Lookup by name (CLI entry point). Besides the five paper networks,
+/// the small synthetic fixtures are addressable for CI smoke legs
+/// (`mininet`, `tiny`, `small`) so fast sweeps don't need the zoo.
 pub fn by_name(name: &str) -> Option<Network> {
     match name {
         "alexnet" => Some(alexnet()),
@@ -257,6 +259,9 @@ pub fn by_name(name: &str) -> Option<Network> {
         "resnet18" => Some(resnet18()),
         "mobilenet_v2" | "mobilenetv2" => Some(mobilenet_v2()),
         "efficientnet_b0" | "efficientnetb0" => Some(efficientnet_b0()),
+        "mininet" => Some(super::fixtures::mininet_proxy()),
+        "tiny" => Some(super::fixtures::tiny_net()),
+        "small" => Some(super::fixtures::small_net()),
         _ => None,
     }
 }

@@ -186,6 +186,27 @@ impl<'a> CoreExecutor<'a> {
                 if arch.value_sparsity {
                     self.events.mask_rf_reads += t.rows() as u64;
                 }
+                if let Some(lf) = layer.faults.as_ref() {
+                    // ABFT verification of the freshly loaded block:
+                    // nf × NUM_BLOCKS checksum words re-derived and
+                    // compared, one macro-column batch per cycle
+                    // (DESIGN.md §13). Charged per LoadTile — a pure
+                    // function of the instruction, so bit-identical
+                    // under every engine and worker count.
+                    let words = (a.filters.len() * crate::csd::NUM_BLOCKS) as u64;
+                    self.events.abft_checks += words;
+                    self.clock += ceil_div(words as usize, arch.macro_columns) as u64;
+                    if let Some(af) = lf.by_assignment[t.assignment].as_ref() {
+                        for r in &af.replicas {
+                            self.events.fault_detections += r.detections;
+                            if lf.policy == crate::arch::DegradePolicy::Recompute {
+                                // scalar-oracle recompute of the
+                                // flagged filters over this tile's rows
+                                self.clock += r.detected_filters * t.rows() as u64;
+                            }
+                        }
+                    }
+                }
             }
             Instr::Compute { tile, m_base, m_count, .. } => {
                 let cycles = self.compute_chunk(tile as usize, m_base as usize, m_count as usize);
@@ -390,9 +411,17 @@ impl<'a> CoreExecutor<'a> {
             let block = acc.block_mut(t.assignment);
             let nf = block.filters.len();
             debug_assert_eq!(a.wblock.len(), a.kept_rows.len() * nf);
-            let wtile = &a.wblock[t.row_start * nf..t.row_end * nf];
+            let faulty = layer.faults.is_some();
+            let mut wtile = &a.wblock[t.row_start * nf..t.row_end * nf];
             for mi in 0..m_count {
                 let m = m_base + mi;
+                if faulty {
+                    // replica macro `mi` serves row m (m ≡ mi mod Tm;
+                    // codegen's Compute chunks are Tm-aligned), so it
+                    // reads that replica's effective resident block
+                    wtile = &layer.effective_wblock(t.assignment, mi)
+                        [t.row_start * nf..t.row_end * nf];
+                }
                 let gathered = &table.gathered_row(m)[t.row_start..t.row_end];
                 backend.gemm_accumulate(&mut block.data[m * nf..(m + 1) * nf], gathered, wtile);
             }

@@ -2,6 +2,10 @@
 //! simulated run's per-layer timeline (per core, per category) can be
 //! inspected visually. One complete span per layer per busy core, plus
 //! a counter track for cumulative energy.
+//!
+//! Trace encode/decode is a user-facing I/O path — `unwrap`/`expect`
+//! are linted out of the non-test code.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 use std::fmt::Write as _;
 
@@ -71,6 +75,7 @@ fn emit_counter(out: &mut String, first: &mut bool, ts: f64, energy_pj: f64) {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::arch::ArchConfig;

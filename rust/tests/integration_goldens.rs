@@ -105,6 +105,32 @@ fn golden_table3() {
 }
 
 #[test]
+fn golden_fault_campaign() {
+    // Same rows as the `dbpim fault-campaign` defaults (resnet18 ×
+    // BER {1e-5, 1e-4, 1e-3} × repair {none, spares}): pins repair
+    // coverage, injected-cell and detection counts, per-layer
+    // corruption accounting and cycle/energy overheads bit-exactly.
+    // Cell-fault verdicts are pure hashes of (seed, coordinate), so
+    // these rows are identical for any engine or worker count.
+    let rows = exp::fault_campaign(SEED);
+    // ISSUE 9 acceptance, pinned independently of the snapshot: with
+    // spare repair at BER <= 1e-4, no corrupted layer goes undetected,
+    // and the spare budget repairs real columns somewhere in the sweep.
+    for r in rows.iter().filter(|r| r.repair == "spares" && r.ber <= 1e-4) {
+        assert_eq!(
+            r.undetected_layers, 0,
+            "undetected corruption under spares at ber={}",
+            r.ber
+        );
+    }
+    assert!(
+        rows.iter().any(|r| r.repair == "spares" && r.repaired_columns > 0),
+        "spare repair never fired across the sweep"
+    );
+    check_golden("fault_campaign", &exp::fault_campaign_json(&rows));
+}
+
+#[test]
 fn golden_shard_sweep() {
     // The multi-chip driver builds its fleet specs explicitly, so these
     // rows are identical with or without the DBPIM_CHIPS/DBPIM_SCHEME

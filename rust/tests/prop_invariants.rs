@@ -51,6 +51,14 @@
 //!   produces a typed per-request `Failed` outcome with exact retry
 //!   counters, never a pool poisoning or a panic, for every worker
 //!   count
+//! * cell faults: per-cell fault verdicts are pure hashes — identical
+//!   across map instances and visit orders — and a faulty layer's
+//!   stats/accumulators are bit-identical across engines and reruns; a
+//!   zero-BER spec (any seed, any spare/degrade knobs) is bit-identical
+//!   to the plain pipeline and shares its compile-cache entries; the
+//!   repair pass never exceeds the spare column/macro budget and its
+//!   column maps are injective, clean-unless-reported, and consistent
+//!   with the aggregate report
 
 use dbpim::arch::ArchConfig;
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
@@ -1005,6 +1013,208 @@ fn prop_serve_batched_bit_identical() {
         }
         if stats.requests != n || stats.latencies_ms.len() != n {
             return Err("serve stats inconsistent with trace length".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fault_map_pure_and_schedule_independent() {
+    // ISSUE 9 acceptance: every cell-fault verdict is a pure hash of
+    // (seed, coordinate) — no sequence, no shared state — so fault
+    // placement and everything downstream of it is bit-identical for
+    // any engine, worker count or visit order. Checked at both levels:
+    // raw verdicts across map instances and visit orders, and a whole
+    // faulty layer (compile-time corruption + ABFT detection +
+    // degrade) across sequential/parallel engines and reruns.
+    use dbpim::arch::{CellFaultSpec, FaultMap};
+    check_cases(10, |rng| {
+        let spec = CellFaultSpec {
+            ber_stuck0: rng.f64() * 0.01,
+            ber_stuck1: rng.f64() * 0.01,
+            ber_transient: rng.f64() * 0.01,
+            seed: rng.next_u64(),
+        };
+        let a = FaultMap::new(spec);
+        let b = FaultMap::new(spec);
+        let coords: Vec<(usize, usize, usize, usize, usize)> = (0..64)
+            .map(|_| {
+                (
+                    rng.below(8) as usize,
+                    rng.below(6) as usize,
+                    rng.below(16) as usize,
+                    rng.below(16) as usize,
+                    rng.below(24) as usize,
+                )
+            })
+            .collect();
+        let fwd: Vec<_> = coords.iter().map(|&(c, m, k, r, l)| a.cell(c, m, k, r, l)).collect();
+        for (i, &(c, m, k, r, l)) in coords.iter().enumerate().rev() {
+            if b.cell(c, m, k, r, l) != fwd[i] {
+                return Err(format!("verdict at coord {i} depends on instance/visit order"));
+            }
+        }
+        // end-to-end: same faulty layer under both engines, run twice
+        let mut arch = random_arch(rng);
+        arch.n_cores = 1 + rng.below(8) as usize;
+        arch.cell_faults = CellFaultSpec::uniform(1e-3 + rng.f64() * 5e-3, rng.next_u64());
+        let functional = rng.below(2) == 0;
+        let (layer, x) = random_layer(rng, &arch);
+        if layer.faults.is_none() {
+            return Err(format!("enabled spec compiled without fault metadata on {}", arch.name));
+        }
+        let seq = Machine::with_engine(arch.clone(), Engine::Sequential);
+        let par = Machine::with_engine(arch.clone(), Engine::Parallel);
+        let want = seq.run_pim_layer(&layer, Some(&x), functional);
+        for (label, m) in
+            [("sequential rerun", &seq), ("parallel", &par), ("parallel rerun", &par)]
+        {
+            let (s, acc) = m.run_pim_layer(&layer, Some(&x), functional);
+            if s.events != want.0.events
+                || s.core_cycles != want.0.core_cycles
+                || s.elapsed != want.0.elapsed
+            {
+                return Err(format!(
+                    "{label} stats diverge under faults on {} cores={}",
+                    arch.name, arch.n_cores
+                ));
+            }
+            if acc != want.1 {
+                return Err(format!("{label} accumulators diverge under faults on {}", arch.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_ber_bit_identical() {
+    // ISSUE 9 acceptance: `CellFaultSpec::off()` must be bit-identical
+    // to a build that never heard of the fault subsystem — regardless
+    // of the seed riding along in the off spec or how the spare/degrade
+    // knobs are set. Stronger than report equality: the off spec must
+    // not perturb the CompileKey either, so the second network shares
+    // every compile-cache entry with the first (all hits, no misses).
+    use dbpim::arch::{CellFaultSpec, DegradePolicy};
+    use dbpim::compiler::CompileCache;
+    use dbpim::models::fixtures::tiny_net;
+    check_cases(8, |rng| {
+        let base = random_arch(rng);
+        let mut decorated = base.clone();
+        decorated.cell_faults = CellFaultSpec { seed: rng.next_u64(), ..CellFaultSpec::off() };
+        decorated.spare_columns_per_macro = rng.below(5) as usize;
+        decorated.spare_macros_per_core = rng.below(3) as usize;
+        decorated.fault_degrade =
+            [DegradePolicy::Fail, DegradePolicy::Mask, DegradePolicy::Recompute]
+                [rng.below(3) as usize];
+        let net = tiny_net();
+        let sp = SparsityConfig { value_sparsity: rng.f64() * 0.7, fta: rng.below(2) == 0 };
+        let seed = rng.next_u64();
+        let cache = CompileCache::new();
+        let a = dbpim::sim::simulate_network_cached(
+            &net, sp, &base, seed, Engine::Sequential, &cache,
+        );
+        let first = cache.stats();
+        let b = dbpim::sim::simulate_network_cached(
+            &net, sp, &decorated, seed, Engine::Sequential, &cache,
+        );
+        if a.totals != b.totals || a.total_cycles() != b.total_cycles() {
+            return Err(format!("zero-BER totals diverge on {}", base.name));
+        }
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            if la.events != lb.events
+                || la.core_cycles != lb.core_cycles
+                || la.elapsed != lb.elapsed
+            {
+                return Err(format!("zero-BER layer {} diverges on {}", la.name, base.name));
+            }
+        }
+        let second = cache.stats();
+        if second.misses != first.misses || second.hits != first.misses {
+            return Err(format!(
+                "off fault spec perturbed the compile key on {}: {first:?} then {second:?}",
+                base.name
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_repair_respects_spare_budget() {
+    // The repair pass may only spend what the arch grants: at most
+    // `spare_macros_per_core` replica slots per core served by spares,
+    // column maps injective into the physical column space, every
+    // logical column on a clean physical column unless reported in
+    // `stuck_logical`, and the aggregate report self-consistent
+    // (`stuck == repaired + unrepairable`). With a zero spare budget
+    // nothing may be repaired or spared.
+    use dbpim::arch::FaultMap;
+    use dbpim::compiler::packing;
+    check_cases(12, |rng| {
+        let mut arch = ArchConfig::db_pim();
+        arch.n_cores = 1 + rng.below(4) as usize;
+        arch.spare_columns_per_macro = rng.below(5) as usize;
+        arch.spare_macros_per_core = rng.below(3) as usize;
+        arch.cell_faults = dbpim::arch::CellFaultSpec::uniform(
+            [1e-5, 1e-4, 1e-3, 5e-3][rng.below(4) as usize],
+            rng.next_u64(),
+        );
+        let plan = packing::plan_repair(&arch).ok_or("enabled spec must yield a plan")?;
+        let fm = FaultMap::new(arch.cell_faults);
+        let phys_cols = arch.macro_columns + arch.spare_columns_per_macro;
+        let phys_macros = arch.macros_per_core + arch.spare_macros_per_core;
+        let rep = plan.report;
+        if rep.stuck_columns != rep.repaired_columns + rep.unrepairable_columns {
+            return Err(format!("report not self-consistent: {rep:?}"));
+        }
+        if rep.spared_macros > (arch.n_cores * arch.spare_macros_per_core) as u64 {
+            return Err(format!("spared {} macros over budget", rep.spared_macros));
+        }
+        if plan.slots.len() != arch.n_cores {
+            return Err("one slot list per core".into());
+        }
+        for (core, slots) in plan.slots.iter().enumerate() {
+            if slots.len() != arch.macros_per_core {
+                return Err(format!("core {core}: {} replica slots", slots.len()));
+            }
+            let mut macros_seen = std::collections::HashSet::new();
+            for mr in slots {
+                if mr.phys_macro >= phys_macros || !macros_seen.insert(mr.phys_macro) {
+                    return Err(format!("core {core}: bad physical macro {}", mr.phys_macro));
+                }
+                if mr.col_map.len() != arch.macro_columns {
+                    return Err(format!("core {core}: col_map length {}", mr.col_map.len()));
+                }
+                let mut cols_seen = std::collections::HashSet::new();
+                for (lc, &pc) in mr.col_map.iter().enumerate() {
+                    if pc as usize >= phys_cols || !cols_seen.insert(pc) {
+                        return Err(format!("core {core}: col_map not injective at {lc}"));
+                    }
+                    let stuck = fm.column_stuck(
+                        core,
+                        mr.phys_macro,
+                        pc as usize,
+                        arch.compartments,
+                        arch.rows_per_compartment,
+                    );
+                    let reported = mr.stuck_logical.binary_search(&(lc as u16)).is_ok();
+                    if stuck != reported {
+                        return Err(format!(
+                            "core {core} macro {}: logical {lc} stuck={stuck} reported={reported}",
+                            mr.phys_macro
+                        ));
+                    }
+                }
+            }
+        }
+        if arch.spare_columns_per_macro == 0 && arch.spare_macros_per_core == 0 {
+            // no budget: every stuck column stays, nothing is spared.
+            // (spare macros alone can still "repair" by swapping whole
+            // macros, so only the fully-zero budget pins zero repairs)
+            if rep.repaired_columns != 0 || rep.spared_macros != 0 {
+                return Err(format!("zero budget but repairs reported: {rep:?}"));
+            }
         }
         Ok(())
     });

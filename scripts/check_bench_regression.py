@@ -44,6 +44,7 @@ DEFAULT_CASES = [
     "requant_relu_arena",
     "serve_loop_saturation",
     "shard_sweep",
+    "fault_campaign",
 ]
 
 
