@@ -48,6 +48,9 @@
 //!   (BER 1e-4, repair off vs spares): repair planning, fault-aware
 //!   lowering, ABFT verification and the clean-vs-faulty functional
 //!   comparison; asserts zero undetected corrupted layers
+//! * `explore_sweep` — the tiny-transformer design-space exploration
+//!   (seq-len × arch-variant × fleet grid through the shared sweep
+//!   caches + the Pareto post-pass); asserts a non-empty frontier
 //! * `pool_spawn_overhead` — scheduling cost of the persistent
 //!   work-stealing pool: 256 trivial jobs through `pool::run_jobs`
 //! * `pool_nested_sweep` — a miniature sweep × layer × segment nested
@@ -556,6 +559,23 @@ fn main() {
                 "campaign left corrupted layers undetected"
             );
             rows.iter().map(|r| r.detections).sum::<u64>()
+        }));
+    }
+
+    // --- design-space explorer: transformer grid + Pareto post-pass ---
+    // The full `dbpim explore` unit on the cheapest fixture: 2 seq-len
+    // instances × 5 arch variants × 2 fleet points, each cell a fleet
+    // simulation through the shared caches, then the per-model
+    // frontier marking. The frontier must be non-empty (the ISSUE 10
+    // acceptance gate).
+    {
+        use dbpim::coordinator::experiments as exp;
+        let nets = vec!["tiny_transformer".to_string()];
+        samples.push(bench("explore_sweep", 0, iters(5, 2), || {
+            let (rows, _) = exp::explore_with_stats(&nets, 42);
+            assert_eq!(rows.len(), 20);
+            assert!(rows.iter().any(|r| r.on_frontier), "empty Pareto frontier");
+            rows.iter().filter(|r| r.on_frontier).count()
         }));
     }
 

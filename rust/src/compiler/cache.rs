@@ -107,11 +107,22 @@ impl CompileKey {
     ) -> Self {
         let kind = &net.layers[idx].kind;
         let (m, k, n) = kind.matmul_dims().expect("PIM layer");
+        // Exhaustive on purpose: a new PIM-shaped `LayerKind` must
+        // decide here whether it carries spatial geometry that the
+        // cache key has to discriminate on.
         let conv_geom = match *kind {
             crate::models::LayerKind::Conv { kernel, stride, pad, in_hw, .. } => {
                 (kernel, stride, pad, in_hw)
             }
-            _ => (0, 0, 0, 0),
+            crate::models::LayerKind::Fc { .. }
+            | crate::models::LayerKind::Attention { .. }
+            | crate::models::LayerKind::Mlp { .. }
+            | crate::models::LayerKind::DwConv { .. }
+            | crate::models::LayerKind::Pool { .. }
+            | crate::models::LayerKind::Act { .. }
+            | crate::models::LayerKind::ResAdd { .. }
+            | crate::models::LayerKind::Mul { .. }
+            | crate::models::LayerKind::LayerNorm { .. } => (0, 0, 0, 0),
         };
         Self {
             network: net.name.clone(),

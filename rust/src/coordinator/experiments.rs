@@ -612,6 +612,171 @@ pub fn fault_campaign_with_stats(
     .run()
 }
 
+/// `dbpim explore` row: one (model instance, arch variant, fleet)
+/// cell of the design-space sweep (DESIGN.md §14). `speedup` is
+/// end-to-end cycles of the per-model dense baseline (dense arch,
+/// dense sparsity, one chip) over this cell's fleet cycles;
+/// `energy_uj` is the cell's merged-report energy. `on_frontier`
+/// marks the speedup-vs-energy Pareto frontier *within the rows of
+/// the same base model* (max speedup, min energy).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreRow {
+    /// Base model name as registered (`bert_base`, `resnet18`, ...).
+    pub model: String,
+    /// Concrete instance simulated (`bert_base_s128`, ...).
+    pub network: String,
+    /// Sequence length of the instance; 0 for CNNs (no seq axis).
+    pub seq_len: usize,
+    /// Arch variant label (`ArchConfig::name`).
+    pub arch: &'static str,
+    pub chips: usize,
+    pub scheme: &'static str,
+    /// End-to-end fleet latency (cycles, interconnect included).
+    pub cycles: u64,
+    pub speedup: f64,
+    pub energy_uj: f64,
+    pub on_frontier: bool,
+}
+
+/// The curated arch variants the explorer sweeps: the paper preset
+/// plus one step along each hardware axis ISSUE 10 names — core
+/// count, macro count, tile shape (same 256-row K budget, taller ×
+/// narrower), and the CSD bit-level path switched off. Every varied
+/// field is part of `CompileKey`, so variants never alias in the
+/// sweep caches.
+fn explore_archs() -> Vec<ArchConfig> {
+    let base = ArchConfig::db_pim();
+    vec![
+        base.clone(),
+        ArchConfig { name: "cores-x2", n_cores: base.n_cores * 2, ..base.clone() },
+        ArchConfig {
+            name: "macros-x2",
+            macros_per_core: base.macros_per_core * 2,
+            ..base.clone()
+        },
+        ArchConfig {
+            name: "tile-tall",
+            compartments: base.compartments / 2,
+            rows_per_compartment: base.rows_per_compartment * 2,
+            ..base.clone()
+        },
+        ArchConfig { name: "no-csd", weight_bit_sparsity: false, ..base },
+    ]
+}
+
+/// Pareto frontier over (speedup, energy) points: `.0` is maximized,
+/// `.1` minimized. `mask[i]` is true iff no other point is at least
+/// as good on both axes and strictly better on one; exact float
+/// comparisons, so duplicated points stay on the frontier together
+/// and the mask is bit-stable across runs.
+pub fn pareto_frontier(points: &[(f64, f64)]) -> Vec<bool> {
+    points
+        .iter()
+        .enumerate()
+        .map(|(i, &(s, e))| {
+            !points.iter().enumerate().any(|(j, &(sj, ej))| {
+                j != i && sj >= s && ej <= e && (sj > s || ej < e)
+            })
+        })
+        .collect()
+}
+
+/// The default explorer grid (the EXPERIMENTS.md artifact): the two
+/// cheap transformer fixtures over their seq-len, arch-variant, and
+/// fleet axes. `bert_base` (or any zoo CNN) is reachable via
+/// `dbpim explore --models ...`.
+pub fn explore(seed: u64) -> Vec<ExploreRow> {
+    let names = vec!["tiny_transformer".to_string(), "gpt_micro".to_string()];
+    explore_with_stats(&names, seed).0
+}
+
+/// The design-space explorer: every model in `model_names` (base name;
+/// transformers expand to two seq-len instances — half the default and
+/// the default — CNNs to one instance) crossed with the
+/// [`explore_archs`] variants and the fleet points (1 chip, 4-chip
+/// TP). Each cell simulates through the shared sweep caches — the
+/// per-model dense baseline is memoized once per instance — and the
+/// rows come back in axis order with `on_frontier` marked per base
+/// model. Bit-identical for any worker count, steal order, or engine.
+pub fn explore_with_stats(model_names: &[String], seed: u64) -> (Vec<ExploreRow>, SweepStats) {
+    let archs = explore_archs();
+    let fleets: [(usize, &'static str); 2] = [(1, "single"), (4, "tp")];
+    type Cell = (String, Network, usize, ArchConfig, usize, &'static str);
+    let mut axes: Vec<Cell> = Vec::new();
+    for name in model_names {
+        let instances: Vec<(Network, usize)> = match models::default_seq_len(name) {
+            Some(d) => {
+                let mut seqs = vec![(d / 2).max(2), d];
+                seqs.dedup();
+                seqs.iter()
+                    .map(|&s| {
+                        (models::transformer_seq(name, s).expect("transformer model"), s)
+                    })
+                    .collect()
+            }
+            None => vec![(models::by_name(name).expect("explore model"), 0)],
+        };
+        for (net, s) in instances {
+            for a in &archs {
+                for &(chips, scheme) in &fleets {
+                    axes.push((name.clone(), net.clone(), s, a.clone(), chips, scheme));
+                }
+            }
+        }
+    }
+    let (mut rows, st) = SweepSpec {
+        axes,
+        job: move |(model, net, seq_len, arch, chips, scheme): Cell, ctx: &SweepCtx| {
+            let sp = SparsityConfig::hybrid(0.6);
+            let base =
+                ctx.simulate(&net, SparsityConfig::dense(), &ArchConfig::dense_baseline(), seed);
+            let spec = if chips <= 1 {
+                ShardSpec::single()
+            } else {
+                ShardSpec::parse(chips, scheme).expect("static scheme tags")
+            };
+            let rep = ctx.simulate_fleet(&net, sp, &arch, seed, spec);
+            let cycles = rep.fleet_cycles();
+            ExploreRow {
+                model,
+                network: net.name.clone(),
+                seq_len,
+                arch: arch.name,
+                chips,
+                scheme,
+                cycles,
+                speedup: base.total_cycles() as f64 / cycles.max(1) as f64,
+                energy_uj: rep.report.energy_uj(),
+                on_frontier: false,
+            }
+        },
+    }
+    .run();
+    mark_frontiers(&mut rows);
+    (rows, st)
+}
+
+/// Set `on_frontier` per base model over the collected rows (pure
+/// post-pass; row order is already fixed by the sweep executor).
+fn mark_frontiers(rows: &mut [ExploreRow]) {
+    let mut seen: Vec<String> = Vec::new();
+    for r in rows.iter() {
+        if !seen.contains(&r.model) {
+            seen.push(r.model.clone());
+        }
+    }
+    for m in seen {
+        let idx: Vec<usize> =
+            rows.iter().enumerate().filter(|(_, r)| r.model == m).map(|(i, _)| i).collect();
+        let pts: Vec<(f64, f64)> =
+            idx.iter().map(|&i| (rows[i].speedup, rows[i].energy_uj)).collect();
+        let mask = pareto_frontier(&pts);
+        for (k, &i) in idx.iter().enumerate() {
+            rows[i].on_frontier = mask[k];
+        }
+    }
+}
+
 /// Fig. 3 data (both panels) for all five networks.
 pub fn fig3(seed: u64) -> (Vec<stats::ZeroBitStats>, Vec<stats::ZeroColumnStats>) {
     let (panels, _) = SweepSpec {
@@ -765,6 +930,26 @@ pub fn fault_campaign_json(rows: &[FaultCampaignRow]) -> Value {
         .collect())
 }
 
+pub fn explore_json(rows: &[ExploreRow]) -> Value {
+    arr(rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("model", str_(&r.model)),
+                ("network", str_(&r.network)),
+                ("seq_len", num(r.seq_len as f64)),
+                ("arch", str_(r.arch)),
+                ("chips", num(r.chips as f64)),
+                ("scheme", str_(r.scheme)),
+                ("cycles", num(r.cycles as f64)),
+                ("speedup", num(r.speedup)),
+                ("energy_uj", num(r.energy_uj)),
+                ("on_frontier", Value::Bool(r.on_frontier)),
+            ])
+        })
+        .collect())
+}
+
 pub fn table3_json(rows: &[Table3Row]) -> Value {
     arr(rows
         .iter()
@@ -807,6 +992,42 @@ mod tests {
         for (name, u) in &t.u_act {
             assert!(*u > 0.4, "{name} U_act {u}");
         }
+    }
+
+    #[test]
+    fn pareto_frontier_marks_non_dominated() {
+        // speedup maximized, energy minimized; duplicates co-survive
+        let pts = [(2.0, 5.0), (1.0, 9.0), (3.0, 4.0), (3.0, 4.0), (2.5, 6.0)];
+        assert_eq!(pareto_frontier(&pts), vec![false, false, true, true, false]);
+        // a point better on one axis, worse on the other, is kept
+        let pts = [(1.0, 1.0), (2.0, 2.0)];
+        assert_eq!(pareto_frontier(&pts), vec![true, true]);
+        assert!(pareto_frontier(&[]).is_empty());
+    }
+
+    #[test]
+    fn explore_tiny_has_nonempty_valid_frontier() {
+        let names = vec!["tiny_transformer".to_string()];
+        let (rows, stats) = explore_with_stats(&names, 7);
+        // 2 seq-len instances × 5 arch variants × 2 fleet points
+        assert_eq!(rows.len(), 20);
+        assert!(rows.iter().any(|r| r.on_frontier), "empty frontier");
+        for r in &rows {
+            assert!(r.cycles > 0 && r.speedup > 0.0 && r.energy_uj > 0.0, "{r:?}");
+        }
+        // every frontier row is non-dominated within its base model
+        for r in rows.iter().filter(|r| r.on_frontier) {
+            assert!(
+                !rows.iter().any(|o| o.model == r.model
+                    && o.speedup >= r.speedup
+                    && o.energy_uj <= r.energy_uj
+                    && (o.speedup > r.speedup || o.energy_uj < r.energy_uj)),
+                "dominated frontier row {r:?}"
+            );
+        }
+        // the shared dense baseline memoizes: one sim per instance's
+        // baseline, not one per cell
+        assert!(stats.sim.hits > 0, "{stats:?}");
     }
 
     #[test]

@@ -175,8 +175,11 @@ pub struct ServeStats {
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice; `q` in
-/// (0, 100]. Empty input yields 0 (an empty trace has well-defined
-/// all-zero stats, not NaN).
+/// [0, 100]. Empty input yields 0 (an empty trace has well-defined
+/// all-zero stats, not NaN). The computed rank is clamped to
+/// `1..=n`, so the boundaries are total: q = 0 (or any q small enough
+/// that `ceil` lands on rank 0) returns the minimum, and q = 100 (or
+/// out-of-range q) the maximum — never an index panic.
 pub(crate) fn percentile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
@@ -662,5 +665,29 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(percentile(&xs[..1], 50.0), 1.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases_never_panic() {
+        // ISSUE 10: q = 0 used to compute rank 0 and underflow the
+        // `rank - 1` index; exercise 0/1/2-element inputs across the
+        // boundary quantiles (and a tiny-q case that also ceils to 0).
+        let quantiles = [0.0, 50.0, 99.0, 100.0];
+        for &q in &quantiles {
+            assert_eq!(percentile(&[], q), 0.0, "empty, q={q}");
+        }
+        let one = [7.5];
+        for &q in &quantiles {
+            assert_eq!(percentile(&one, q), 7.5, "singleton, q={q}");
+        }
+        let two = [1.0, 9.0];
+        assert_eq!(percentile(&two, 0.0), 1.0);
+        assert_eq!(percentile(&two, 50.0), 1.0); // nearest-rank: ceil(1.0) = 1
+        assert_eq!(percentile(&two, 99.0), 9.0);
+        assert_eq!(percentile(&two, 100.0), 9.0);
+        // tiny q on a larger input still clamps to the minimum
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.001), 1.0);
+        // out-of-range q clamps instead of indexing past the end
+        assert_eq!(percentile(&two, 250.0), 9.0);
     }
 }

@@ -47,6 +47,12 @@
 //! pipeline scheme (which simulates plain single-chip layers) shares
 //! entries with plain runs.
 
+// Panic-hardening (DESIGN.md §13, extended by ISSUE 10): sharding sits
+// on the serve path, so stray unwraps are lint-visible. The few
+// remaining `expect`s are structural invariants with per-site
+// justifications.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
 use std::sync::Arc;
 
 use crate::arch::ArchConfig;
@@ -235,9 +241,11 @@ pub fn partition_assignments(
     for (cost, idx) in order {
         let fp = assignment_footprint_bytes(&assignments[idx]);
         let fits = (0..chips).filter(|&c| foot[c] + fp <= cap).min_by_key(|&c| (load[c], c));
-        let c = fits.unwrap_or_else(|| {
-            (0..chips).min_by_key(|&c| (load[c], c)).expect("chips >= 1")
-        });
+        // `chips >= 1` always (ShardSpec::parse rejects 0), so the
+        // capacity-blind fallback has a least-loaded chip; `unwrap_or`
+        // keeps the path panic-free regardless.
+        let c = fits
+            .unwrap_or_else(|| (0..chips).min_by_key(|&c| (load[c], c)).unwrap_or(0));
         parts[c].push(idx);
         load[c] += cost.max(1);
         foot[c] += fp;
@@ -251,11 +259,14 @@ pub fn partition_assignments(
 /// Output-activation volume of a layer in bytes (i8 activations) —
 /// what an all-gather (TP) or a stage boundary (PP) moves.
 fn layer_output_bytes(kind: &LayerKind) -> u64 {
+    // Infallible: every GEMM-lowered kind answers through
+    // `matmul_dims`, so a new PIM-shaped variant can never hit a
+    // panic here (ISSUE 10 hardening; previously `expect("PIM layer")`
+    // on a `Conv | Fc` match).
+    if let Some((m, _, n)) = kind.matmul_dims() {
+        return (m * n) as u64;
+    }
     match *kind {
-        LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
-            let (m, _, n) = kind.matmul_dims().expect("PIM layer");
-            (m * n) as u64
-        }
         LayerKind::DwConv { ch, kernel, stride, pad, in_hw } => {
             let out_hw = (in_hw + 2 * pad - kernel) / stride + 1;
             (ch * out_hw * out_hw) as u64
@@ -263,7 +274,14 @@ fn layer_output_bytes(kind: &LayerKind) -> u64 {
         LayerKind::Pool { elems }
         | LayerKind::Act { elems }
         | LayerKind::ResAdd { elems }
-        | LayerKind::Mul { elems } => elems as u64,
+        | LayerKind::Mul { elems }
+        | LayerKind::LayerNorm { elems } => elems as u64,
+        // GEMM-lowered kinds returned above; listed so the match stays
+        // exhaustive (and panic-free) when variants are added.
+        LayerKind::Conv { .. }
+        | LayerKind::Fc { .. }
+        | LayerKind::Attention { .. }
+        | LayerKind::Mlp { .. } => 0,
     }
 }
 
@@ -484,6 +502,10 @@ fn present_layer_indices(net: &Network, arch: &ArchConfig) -> Vec<usize> {
 /// then merge per layer in fixed chip order. SIMD layers are costed
 /// exactly once (they are not split), identical to the single-chip
 /// report.
+// expect(): the two expects below consume exactly one chunk / one
+// merged entry per `pim_indices` element — a structural zip whose
+// lengths are equal by construction.
+#[allow(clippy::expect_used)]
 fn merge_tensor_parallel(
     net: &Network,
     sparsity: SparsityConfig,
@@ -605,7 +627,9 @@ fn merge_pim_layer(
 /// chip 0, which always simulates (possibly an empty program) so a
 /// layer with no assignments still contributes its barrier
 /// bookkeeping exactly like the single-chip run.
-#[allow(clippy::too_many_arguments)]
+// expect(): callers only pass indices from `sim::pim_indices`, for
+// which `get_or_compile` returns `Some` by definition.
+#[allow(clippy::too_many_arguments, clippy::expect_used)]
 fn simulate_chip_layer(
     net: &Network,
     idx: usize,
@@ -659,6 +683,8 @@ fn simulate_chip_layer(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]

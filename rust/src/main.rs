@@ -42,6 +42,16 @@
 //!                          corruption goes undetected (the CI smoke
 //!                          gate); `--fault-seed` defaults to
 //!                          `DBPIM_CELL_FAULT_SEED`, then `--seed`
+//! dbpim explore [--models a,b] [--seed S] [--check]
+//!                          design-space explorer (DESIGN.md §14):
+//!                          sweep each model (transformers expand over
+//!                          two sequence lengths) across arch variants
+//!                          (cores, macro count, tile shape, CSD
+//!                          on/off) and fleet points, then mark the
+//!                          speedup-vs-energy Pareto frontier per
+//!                          model. `--check` exits nonzero unless
+//!                          every model's frontier is non-empty and
+//!                          non-dominated (the CI smoke gate)
 //! dbpim info               architecture summary + effective topology
 //!                          (pool, fleet, kernel backend, cache shards)
 //! ```
@@ -127,10 +137,11 @@ fn main() {
         "serve" => cmd_serve(&args[1..]),
         "shard-sweep" => cmd_shard_sweep(),
         "fault-campaign" => cmd_fault_campaign(&args[1..]),
+        "explore" => cmd_explore(&args[1..]),
         "info" => cmd_info(),
         _ => {
             eprintln!(
-                "usage: dbpim <verify|simulate|energy|trace|serve|shard-sweep|fault-campaign|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
+                "usage: dbpim <verify|simulate|energy|trace|serve|shard-sweep|fault-campaign|explore|fig3|fig11|fig12|fig13|table2|table3|info> [--workers N] [--kernel auto|scalar|swar|wide]"
             );
             2
         }
@@ -253,7 +264,7 @@ fn cmd_simulate(args: &[String]) -> i32 {
     let name = args.first().map(String::as_str).unwrap_or("resnet18");
     let Some(net) = models::by_name(name) else {
         eprintln!(
-            "unknown network {name} (try: alexnet vgg19 resnet18 mobilenet_v2 efficientnet_b0)"
+            "unknown network {name} (try: alexnet vgg19 resnet18 mobilenet_v2 efficientnet_b0 bert_base gpt_micro tiny_transformer)"
         );
         return 2;
     };
@@ -969,6 +980,95 @@ fn cmd_fault_campaign(args: &[String]) -> i32 {
             return 1;
         }
         println!("fault-campaign check: repair active, no silent corruption");
+    }
+    0
+}
+
+/// Design-space explorer (DESIGN.md §14): model × seq-len × arch
+/// variant × fleet sweep with a per-model speedup-vs-energy Pareto
+/// frontier.
+fn cmd_explore(args: &[String]) -> i32 {
+    let models_arg =
+        flag_value(args, "--models").unwrap_or_else(|| "tiny_transformer,gpt_micro".into());
+    let nets: Vec<String> =
+        models_arg.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+    if nets.is_empty() {
+        eprintln!("--models expects a comma-separated list of model names");
+        return 2;
+    }
+    for n in &nets {
+        if models::by_name(n).is_none() {
+            eprintln!(
+                "unknown model {n} (try: bert_base gpt_micro tiny_transformer alexnet vgg19 resnet18 mobilenet_v2 efficientnet_b0)"
+            );
+            return 2;
+        }
+    }
+    let seed = match flag_value(args, "--seed") {
+        None => 42,
+        Some(s) => match s.parse::<u64>() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("--seed expects a non-negative integer");
+                return 2;
+            }
+        },
+    };
+    let (rows, stats) = exp::explore_with_stats(&nets, seed);
+    print_table(
+        "Design-space exploration — speedup vs energy per (model, seq, arch, fleet)",
+        &["model", "network", "seq", "arch", "chips", "scheme", "cycles", "speedup", "energy uJ", "pareto"],
+        &rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.model.clone(),
+                    r.network.clone(),
+                    r.seq_len.to_string(),
+                    r.arch.to_string(),
+                    r.chips.to_string(),
+                    r.scheme.to_string(),
+                    r.cycles.to_string(),
+                    format!("{}x", f2(r.speedup)),
+                    f2(r.energy_uj),
+                    if r.on_frontier { "*".into() } else { String::new() },
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!("compile cache: {}", stats.compile.summary());
+    println!("sim cache: {}", stats.sim.summary());
+    write_report("explore", &exp::explore_json(&rows));
+    if args.iter().any(|a| a == "--check") {
+        let mut ok = true;
+        for n in &nets {
+            let frontier: Vec<&exp::ExploreRow> =
+                rows.iter().filter(|r| &r.model == n && r.on_frontier).collect();
+            if frontier.is_empty() {
+                eprintln!("check failed: {n}: empty Pareto frontier");
+                ok = false;
+                continue;
+            }
+            for f in frontier {
+                let dominated = rows.iter().any(|o| {
+                    o.model == f.model
+                        && o.speedup >= f.speedup
+                        && o.energy_uj <= f.energy_uj
+                        && (o.speedup > f.speedup || o.energy_uj < f.energy_uj)
+                });
+                if dominated {
+                    eprintln!(
+                        "check failed: {n}: frontier row {} ({}, {} chips) is dominated",
+                        f.network, f.arch, f.chips
+                    );
+                    ok = false;
+                }
+            }
+        }
+        if !ok {
+            return 1;
+        }
+        println!("explore check: every model has a non-empty, non-dominated frontier");
     }
     0
 }

@@ -7,13 +7,25 @@
 //! and element-wise multiplies run on the SIMD core (exactly the split
 //! the paper uses — Fig. 13's execution-time breakdown falls out of
 //! this partition).
+//!
+//! Transformer workloads (DESIGN.md §14) lower onto the same split:
+//! every attention/MLP GEMM is a PIM layer via [`LayerKind::matmul_dims`]
+//! (per-head QKV/score/context matmuls parameterized by `heads`,
+//! `d_model`, `seq_len`), while LayerNorm runs on the SIMD core like
+//! the other element-wise kinds. Anything that answers
+//! `matmul_dims() == Some(..)` flows through compile/sim/cache/sharding
+//! untouched — that one predicate is the single source of PIM-ness.
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod fixtures;
 pub mod mininet;
 mod zoo;
 
 pub use mininet::{default_artifacts_dir, load_mininet, MiniNet, MiniNetLayer};
-pub use zoo::{alexnet, by_name, efficientnet_b0, mobilenet_v2, resnet18, vgg19, zoo, Registry};
+pub use zoo::{
+    alexnet, bert_base, by_name, default_seq_len, efficientnet_b0, gpt_micro, mobilenet_v2,
+    resnet18, tiny_transformer, transformer_seq, transformers, vgg19, zoo, Registry,
+};
 
 use crate::util::Rng;
 
@@ -44,15 +56,68 @@ pub enum LayerKind {
     /// Element-wise multiply over `elems` elements (SIMD core; SE
     /// blocks and the paper's "Mul" category in Fig. 13).
     Mul { elems: usize },
+    /// One multi-head-attention GEMM lowered onto the PIM matmul path
+    /// (DESIGN.md §14). The builder emits one layer per head for the
+    /// per-head projections; `proj` picks which of the block's matmuls
+    /// this layer is and fixes the (M, K, N) derived from `d_model`,
+    /// `heads` and `seq_len`. `head_sparsity_pct`, when set, overrides
+    /// the run's value-sparsity target for this head's weights (the
+    /// per-head pruning config), as an integer percent in [0, 99];
+    /// dense runs ignore it so baseline references stay truly dense.
+    Attention {
+        heads: usize,
+        d_model: usize,
+        seq_len: usize,
+        proj: AttnProj,
+        head_sparsity_pct: Option<u8>,
+    },
+    /// Transformer feed-forward / projection GEMM over a full sequence
+    /// (PIM): `seq_len × d_in · d_in × d_out`. `nm`, when set, applies
+    /// N:M structured pruning — keep the `n` largest of every `m`
+    /// consecutive input-row weights per filter — to the synthesized
+    /// weights before value pruning (ignored on dense runs).
+    Mlp { seq_len: usize, d_in: usize, d_out: usize, nm: Option<(u8, u8)> },
+    /// LayerNorm over `elems` activations (SIMD core; costed as an
+    /// element-wise pass like the other SIMD kinds).
+    LayerNorm { elems: usize },
+}
+
+/// Which GEMM of a multi-head attention block an
+/// [`LayerKind::Attention`] layer models. Q/K/V share a shape, so one
+/// tag covers all three input projections.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnProj {
+    /// Per-head Q/K/V input projection:
+    /// `seq_len × d_model · d_model × (d_model / heads)`.
+    Qkv,
+    /// Per-head score matmul Q·Kᵀ:
+    /// `seq_len × head_dim · head_dim × seq_len`.
+    Score,
+    /// Per-head context matmul softmax(S)·V:
+    /// `seq_len × seq_len · seq_len × head_dim`.
+    Context,
+    /// Concat-heads output projection:
+    /// `seq_len × d_model · d_model × d_model`.
+    Output,
 }
 
 impl LayerKind {
-    /// Is this layer mapped onto the PIM array (std/pw-conv + FC)?
+    /// Is this layer mapped onto the PIM array (std/pw-conv + FC +
+    /// attention/MLP GEMMs)? Equivalent to `matmul_dims().is_some()`.
     pub fn is_pim(&self) -> bool {
-        matches!(self, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+        matches!(
+            self,
+            LayerKind::Conv { .. }
+                | LayerKind::Fc { .. }
+                | LayerKind::Attention { .. }
+                | LayerKind::Mlp { .. }
+        )
     }
 
-    /// im2col problem size (M, K, N) for PIM layers; None otherwise.
+    /// im2col/GEMM problem size (M, K, N) for PIM layers; None
+    /// otherwise. Exhaustive over the taxonomy on purpose: a new kind
+    /// must declare here whether it is a GEMM, never fall through a
+    /// wildcard into the SIMD path silently.
     pub fn matmul_dims(&self) -> Option<(usize, usize, usize)> {
         match *self {
             LayerKind::Conv { in_ch, out_ch, kernel, stride, pad, in_hw } => {
@@ -60,17 +125,33 @@ impl LayerKind {
                 Some((out_hw * out_hw, in_ch * kernel * kernel, out_ch))
             }
             LayerKind::Fc { in_features, out_features } => Some((1, in_features, out_features)),
-            _ => None,
+            LayerKind::Attention { heads, d_model, seq_len, proj, .. } => {
+                let head_dim = d_model / heads.max(1);
+                Some(match proj {
+                    AttnProj::Qkv => (seq_len, d_model, head_dim),
+                    AttnProj::Score => (seq_len, head_dim, seq_len),
+                    AttnProj::Context => (seq_len, seq_len, head_dim),
+                    AttnProj::Output => (seq_len, d_model, d_model),
+                })
+            }
+            LayerKind::Mlp { seq_len, d_in, d_out, .. } => Some((seq_len, d_in, d_out)),
+            LayerKind::DwConv { .. }
+            | LayerKind::Pool { .. }
+            | LayerKind::Act { .. }
+            | LayerKind::ResAdd { .. }
+            | LayerKind::Mul { .. }
+            | LayerKind::LayerNorm { .. } => None,
         }
     }
 
     /// MAC count (for OPS accounting; 1 MAC = 2 OPs).
     pub fn macs(&self) -> u64 {
+        // Every GEMM-shaped (PIM) kind is covered by its problem size;
+        // the match below only prices the SIMD kinds.
+        if let Some((m, k, n)) = self.matmul_dims() {
+            return (m * k * n) as u64;
+        }
         match *self {
-            LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
-                let (m, k, n) = self.matmul_dims().unwrap();
-                (m * k * n) as u64
-            }
             LayerKind::DwConv { ch, kernel, stride, pad, in_hw } => {
                 let out_hw = (in_hw + 2 * pad - kernel) / stride + 1;
                 (ch * out_hw * out_hw * kernel * kernel) as u64
@@ -78,7 +159,14 @@ impl LayerKind {
             LayerKind::Pool { elems }
             | LayerKind::Act { elems }
             | LayerKind::ResAdd { elems }
-            | LayerKind::Mul { elems } => elems as u64,
+            | LayerKind::Mul { elems }
+            | LayerKind::LayerNorm { elems } => elems as u64,
+            // PIM kinds returned above; listed so the match stays
+            // exhaustive (and panic-free) if the taxonomy grows.
+            LayerKind::Conv { .. }
+            | LayerKind::Fc { .. }
+            | LayerKind::Attention { .. }
+            | LayerKind::Mlp { .. } => 0,
         }
     }
 }
@@ -165,6 +253,60 @@ mod tests {
     fn fc_dims() {
         let k = LayerKind::Fc { in_features: 512, out_features: 100 };
         assert_eq!(k.matmul_dims(), Some((1, 512, 100)));
+    }
+
+    #[test]
+    fn attention_dims_per_proj() {
+        let mk = |proj| LayerKind::Attention {
+            heads: 12,
+            d_model: 768,
+            seq_len: 128,
+            proj,
+            head_sparsity_pct: Some(60),
+        };
+        assert_eq!(mk(AttnProj::Qkv).matmul_dims(), Some((128, 768, 64)));
+        assert_eq!(mk(AttnProj::Score).matmul_dims(), Some((128, 64, 128)));
+        assert_eq!(mk(AttnProj::Context).matmul_dims(), Some((128, 128, 64)));
+        assert_eq!(mk(AttnProj::Output).matmul_dims(), Some((128, 768, 768)));
+        assert!(mk(AttnProj::Qkv).is_pim());
+        assert_eq!(mk(AttnProj::Qkv).macs(), 128 * 768 * 64);
+    }
+
+    #[test]
+    fn mlp_and_layernorm_split() {
+        let m = LayerKind::Mlp { seq_len: 64, d_in: 256, d_out: 1024, nm: Some((2, 4)) };
+        assert!(m.is_pim());
+        assert_eq!(m.matmul_dims(), Some((64, 256, 1024)));
+        assert_eq!(m.macs(), 64 * 256 * 1024);
+        let ln = LayerKind::LayerNorm { elems: 64 * 256 };
+        assert!(!ln.is_pim());
+        assert_eq!(ln.matmul_dims(), None);
+        assert_eq!(ln.macs(), 64 * 256);
+    }
+
+    #[test]
+    fn is_pim_agrees_with_matmul_dims() {
+        let kinds = [
+            LayerKind::Conv { in_ch: 8, out_ch: 8, kernel: 3, stride: 1, pad: 1, in_hw: 4 },
+            LayerKind::DwConv { ch: 8, kernel: 3, stride: 1, pad: 1, in_hw: 4 },
+            LayerKind::Fc { in_features: 8, out_features: 8 },
+            LayerKind::Pool { elems: 8 },
+            LayerKind::Act { elems: 8 },
+            LayerKind::ResAdd { elems: 8 },
+            LayerKind::Mul { elems: 8 },
+            LayerKind::Attention {
+                heads: 2,
+                d_model: 32,
+                seq_len: 16,
+                proj: AttnProj::Score,
+                head_sparsity_pct: None,
+            },
+            LayerKind::Mlp { seq_len: 16, d_in: 32, d_out: 64, nm: None },
+            LayerKind::LayerNorm { elems: 8 },
+        ];
+        for k in kinds {
+            assert_eq!(k.is_pim(), k.matmul_dims().is_some(), "{k:?}");
+        }
     }
 
     #[test]

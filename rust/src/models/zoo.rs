@@ -1,12 +1,16 @@
 //! The five evaluation networks of the paper, in their common CIFAR-100
-//! adaptations (32×32×3 inputs, 100 classes). Geometry — not trained
-//! weights — is what the hardware experiments need; weights are
-//! synthesized per layer with trained-like statistics (DESIGN.md §3).
+//! adaptations (32×32×3 inputs, 100 classes), plus the transformer
+//! workloads of DESIGN.md §14 (a BERT-base-shaped encoder, a small
+//! GPT-style decoder stack and a tiny test fixture — sequence length is
+//! a constructor parameter, so it can be swept as a first-class axis).
+//! Geometry — not trained weights — is what the hardware experiments
+//! need; weights are synthesized per layer with trained-like statistics
+//! (DESIGN.md §3).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use super::{Layer, LayerKind, Network};
+use super::{AttnProj, Layer, LayerKind, Network};
 
 fn conv(name: &str, in_ch: usize, out_ch: usize, k: usize, s: usize, p: usize, hw: usize) -> Layer {
     Layer {
@@ -39,8 +43,138 @@ fn mul(name: &str, elems: usize) -> Layer {
     Layer { name: name.to_string(), kind: LayerKind::Mul { elems } }
 }
 
+fn attn(
+    name: String,
+    heads: usize,
+    d_model: usize,
+    seq_len: usize,
+    proj: AttnProj,
+    head_sparsity_pct: Option<u8>,
+) -> Layer {
+    Layer {
+        name,
+        kind: LayerKind::Attention { heads, d_model, seq_len, proj, head_sparsity_pct },
+    }
+}
+
+fn mlp(name: String, seq_len: usize, d_in: usize, d_out: usize, nm: Option<(u8, u8)>) -> Layer {
+    Layer { name, kind: LayerKind::Mlp { seq_len, d_in, d_out, nm } }
+}
+
+fn layernorm(name: String, elems: usize) -> Layer {
+    Layer { name, kind: LayerKind::LayerNorm { elems } }
+}
+
 fn out_hw(hw: usize, k: usize, s: usize, p: usize) -> usize {
     (hw + 2 * p - k) / s + 1
+}
+
+/// Per-head value-sparsity schedule (the per-head pruning config of
+/// DESIGN.md §14): attention heads are redundant to varying degrees, so
+/// later heads get pruned harder, cycling over four targets. Dense runs
+/// ignore the override, so baseline references stay dense.
+fn head_sparsity(h: usize) -> Option<u8> {
+    Some([45u8, 55, 65, 75][h % 4])
+}
+
+/// One pre-norm transformer block: LN → per-head {Q,K,V, Q·Kᵀ,
+/// softmax·V} → concat/output projection → residual → LN → FFN
+/// (up, GELU, down) → residual. Every GEMM is a PIM layer; LN, GELU and
+/// the residual adds run on the SIMD core. The FFN GEMMs carry a 2:4
+/// N:M structured-pruning config.
+fn transformer_block(
+    l: &mut Vec<Layer>,
+    prefix: &str,
+    d_model: usize,
+    heads: usize,
+    seq_len: usize,
+    d_ff: usize,
+) {
+    let tok = seq_len * d_model;
+    l.push(layernorm(format!("{prefix}.ln1"), tok));
+    for h in 0..heads {
+        let sp = head_sparsity(h);
+        for p in ["q", "k", "v"] {
+            l.push(attn(format!("{prefix}.h{h}.{p}"), heads, d_model, seq_len, AttnProj::Qkv, sp));
+        }
+        l.push(attn(format!("{prefix}.h{h}.score"), heads, d_model, seq_len, AttnProj::Score, sp));
+        l.push(attn(format!("{prefix}.h{h}.ctx"), heads, d_model, seq_len, AttnProj::Context, sp));
+    }
+    l.push(attn(format!("{prefix}.out"), heads, d_model, seq_len, AttnProj::Output, None));
+    l.push(resadd(&format!("{prefix}.res1"), tok));
+    l.push(layernorm(format!("{prefix}.ln2"), tok));
+    l.push(mlp(format!("{prefix}.up"), seq_len, d_model, d_ff, Some((2, 4))));
+    l.push(act(&format!("{prefix}.gelu"), seq_len * d_ff));
+    l.push(mlp(format!("{prefix}.down"), seq_len, d_ff, d_model, Some((2, 4))));
+    l.push(resadd(&format!("{prefix}.res2"), tok));
+}
+
+/// BERT-base-shaped encoder (12 blocks × d_model 768 × 12 heads, FFN
+/// 3072) with a pooled 2-way classifier head. `seq_len` is a sweep
+/// axis, so the instance name carries it (`bert_base_s128`); the
+/// default registered spelling is `bert_base` at seq_len 128.
+pub fn bert_base(seq_len: usize) -> Network {
+    let (d_model, heads, d_ff) = (768, 12, 3072);
+    let mut l = Vec::new();
+    for b in 0..12 {
+        transformer_block(&mut l, &format!("enc{b}"), d_model, heads, seq_len, d_ff);
+    }
+    l.push(fc("cls", d_model, 2));
+    Network { name: format!("bert_base_s{seq_len}"), input_hw: seq_len, input_ch: d_model, layers: l }
+}
+
+/// Small GPT-style decoder stack (4 blocks × d_model 256 × 8 heads,
+/// FFN 1024) with a reduced-vocabulary LM head. Causal masking does
+/// not change the GEMM shapes at full sequence length, so the decoder
+/// lowers exactly like the encoder; default spelling `gpt_micro` at
+/// seq_len 64.
+pub fn gpt_micro(seq_len: usize) -> Network {
+    let (d_model, heads, d_ff) = (256, 8, 1024);
+    let mut l = Vec::new();
+    for b in 0..4 {
+        transformer_block(&mut l, &format!("dec{b}"), d_model, heads, seq_len, d_ff);
+    }
+    l.push(mlp("lm_head".to_string(), seq_len, d_model, 512, None));
+    Network { name: format!("gpt_micro_s{seq_len}"), input_hw: seq_len, input_ch: d_model, layers: l }
+}
+
+/// One-block toy transformer (d_model 32 × 2 heads, FFN 64) for tests
+/// and CI smoke legs; default spelling `tiny_transformer` at seq_len
+/// 16.
+pub fn tiny_transformer(seq_len: usize) -> Network {
+    let mut l = Vec::new();
+    transformer_block(&mut l, "blk0", 32, 2, seq_len, 64);
+    Network { name: format!("tiny_transformer_s{seq_len}"), input_hw: seq_len, input_ch: 32, layers: l }
+}
+
+/// The registered transformer workloads at their default sequence
+/// lengths (the CNN zoo stays [`zoo`]-only so the paper figures are
+/// untouched).
+pub fn transformers() -> Vec<Network> {
+    vec![bert_base(128), gpt_micro(64), tiny_transformer(16)]
+}
+
+/// Build a registered transformer at an explicit sequence length — the
+/// design-space explorer's seq-len axis. `None` for CNN/fixture names
+/// (their geometry has no sequence dimension).
+pub fn transformer_seq(name: &str, seq_len: usize) -> Option<Network> {
+    match name {
+        "bert_base" | "bert-base" => Some(bert_base(seq_len)),
+        "gpt_micro" | "gpt-micro" => Some(gpt_micro(seq_len)),
+        "tiny_transformer" => Some(tiny_transformer(seq_len)),
+        _ => None,
+    }
+}
+
+/// Default sequence length of a registered transformer name; `None`
+/// for non-transformer models.
+pub fn default_seq_len(name: &str) -> Option<usize> {
+    match name {
+        "bert_base" | "bert-base" => Some(128),
+        "gpt_micro" | "gpt-micro" => Some(64),
+        "tiny_transformer" => Some(16),
+        _ => None,
+    }
 }
 
 /// AlexNet (CIFAR variant: 5 convs + 3 FCs, pools after 1/2/5).
@@ -250,8 +384,11 @@ pub fn zoo() -> Vec<Network> {
 }
 
 /// Lookup by name (CLI entry point). Besides the five paper networks,
-/// the small synthetic fixtures are addressable for CI smoke legs
-/// (`mininet`, `tiny`, `small`) so fast sweeps don't need the zoo.
+/// the transformer workloads are addressable at their default sequence
+/// lengths (`bert_base`, `gpt_micro`, `tiny_transformer` — see
+/// [`transformer_seq`] for explicit seq-len instances) and the small
+/// synthetic fixtures for CI smoke legs (`mininet`, `tiny`, `small`)
+/// so fast sweeps don't need the zoo.
 pub fn by_name(name: &str) -> Option<Network> {
     match name {
         "alexnet" => Some(alexnet()),
@@ -259,6 +396,9 @@ pub fn by_name(name: &str) -> Option<Network> {
         "resnet18" => Some(resnet18()),
         "mobilenet_v2" | "mobilenetv2" => Some(mobilenet_v2()),
         "efficientnet_b0" | "efficientnetb0" => Some(efficientnet_b0()),
+        "bert_base" | "bert-base" => Some(bert_base(128)),
+        "gpt_micro" | "gpt-micro" => Some(gpt_micro(64)),
+        "tiny_transformer" => Some(tiny_transformer(16)),
         "mininet" => Some(super::fixtures::mininet_proxy()),
         "tiny" => Some(super::fixtures::tiny_net()),
         "small" => Some(super::fixtures::small_net()),
@@ -317,6 +457,9 @@ impl Registry {
 
 #[cfg(test)]
 mod tests {
+    // Tests assert on infallible fixtures; the module-wide
+    // unwrap/expect lint is for production model-construction paths.
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
     use super::*;
 
     #[test]
@@ -411,8 +554,102 @@ mod tests {
                     assert_eq!(in_hw, hw, "layer {} expected hw {hw}", l.name);
                     hw = (hw + 2 * pad - kernel) / stride + 1;
                 }
-                _ => {}
+                // spatially inert kinds — listed so a new spatial kind
+                // can't slip past this walk through a wildcard
+                LayerKind::Fc { .. }
+                | LayerKind::Pool { .. }
+                | LayerKind::Act { .. }
+                | LayerKind::ResAdd { .. }
+                | LayerKind::Mul { .. }
+                | LayerKind::Attention { .. }
+                | LayerKind::Mlp { .. }
+                | LayerKind::LayerNorm { .. } => {}
             }
         }
+    }
+
+    /// Count a model's PIM layers per GEMM kind.
+    fn pim_kind_counts(n: &Network) -> (usize, usize, usize, usize) {
+        let (mut conv, mut fc, mut attn, mut mlp) = (0, 0, 0, 0);
+        for l in n.pim_layers() {
+            match l.kind {
+                LayerKind::Conv { .. } => conv += 1,
+                LayerKind::Fc { .. } => fc += 1,
+                LayerKind::Attention { .. } => attn += 1,
+                LayerKind::Mlp { .. } => mlp += 1,
+                LayerKind::DwConv { .. }
+                | LayerKind::Pool { .. }
+                | LayerKind::Act { .. }
+                | LayerKind::ResAdd { .. }
+                | LayerKind::Mul { .. }
+                | LayerKind::LayerNorm { .. } => {
+                    panic!("{}: non-PIM kind {:?} in pim_layers()", n.name, l.kind)
+                }
+            }
+        }
+        (conv, fc, attn, mlp)
+    }
+
+    #[test]
+    fn every_model_has_nonzero_pim_layers_per_kind() {
+        // The ISSUE-10 audit gate: no model's GEMMs may be silently
+        // swallowed as non-PIM by a wildcard match. CNNs must count
+        // convs, transformers must count attention + MLP GEMMs.
+        for n in zoo() {
+            let (conv, fc, _, _) = pim_kind_counts(&n);
+            assert!(conv > 0, "{}: no conv PIM layers", n.name);
+            assert!(fc > 0, "{}: no FC PIM layers", n.name);
+        }
+        for n in transformers() {
+            let (_, _, attn, mlp) = pim_kind_counts(&n);
+            assert!(attn > 0, "{}: no attention PIM layers", n.name);
+            assert!(mlp > 0, "{}: no MLP PIM layers", n.name);
+            assert!(n.pim_macs() > 0, "{}: zero PIM MACs", n.name);
+        }
+    }
+
+    #[test]
+    fn transformer_structure() {
+        let t = tiny_transformer(16);
+        // 1 block: ln1 + 2 heads × (q,k,v,score,ctx) + out + res1 +
+        // ln2 + up + gelu + down + res2 = 17 layers, 13 of them PIM.
+        assert_eq!(t.layers.len(), 17);
+        assert_eq!(t.pim_layers().count(), 13);
+        let b = bert_base(128);
+        // 12 blocks × (12 heads × 5 + 6 GEMM/SIMD wrap layers) + cls
+        assert_eq!(b.layers.len(), 12 * (12 * 5 + 8) + 1);
+        let (_, fc, attn, mlp) = pim_kind_counts(&b);
+        assert_eq!(attn, 12 * (12 * 5 + 1));
+        assert_eq!(mlp, 24);
+        assert_eq!(fc, 1);
+        // per-head sparsity configs present on per-head projections,
+        // absent on the concat/output projection
+        assert!(t.layers.iter().any(|l| matches!(
+            l.kind,
+            LayerKind::Attention { head_sparsity_pct: Some(_), proj: AttnProj::Qkv, .. }
+        )));
+        assert!(t.layers.iter().any(|l| matches!(
+            l.kind,
+            LayerKind::Attention { head_sparsity_pct: None, proj: AttnProj::Output, .. }
+        )));
+        // N:M config on the FFN GEMMs
+        assert!(t
+            .layers
+            .iter()
+            .any(|l| matches!(l.kind, LayerKind::Mlp { nm: Some((2, 4)), .. })));
+    }
+
+    #[test]
+    fn seq_len_is_a_first_class_axis() {
+        let a = gpt_micro(32);
+        let b = gpt_micro(64);
+        assert_ne!(a.name, b.name, "instances must key caches separately");
+        assert!(b.pim_macs() > a.pim_macs());
+        assert_eq!(transformer_seq("gpt_micro", 32).unwrap().name, a.name);
+        assert!(transformer_seq("resnet18", 32).is_none());
+        assert_eq!(default_seq_len("bert_base"), Some(128));
+        assert_eq!(default_seq_len("alexnet"), None);
+        // by_name serves the default-seq instances
+        assert_eq!(by_name("tiny_transformer").unwrap().name, "tiny_transformer_s16");
     }
 }

@@ -122,6 +122,40 @@ pub fn prune_blocks(
     mask
 }
 
+/// N:M structured pruning (transformer FFN config, DESIGN.md §14):
+/// within every group of `m` consecutive input rows of one filter
+/// column, keep the `keep` largest-magnitude weights and zero the rest
+/// (stable tie-break: the earlier row wins, so the result is
+/// deterministic). `weights` is the [K, N] row-major synthesized
+/// matrix; a trailing group shorter than `m` is kept proportionally
+/// (only rows beyond the `keep` largest are zeroed). No-op when
+/// `keep >= m`.
+pub fn prune_n_of_m(weights: &mut [i8], k: usize, n: usize, keep: usize, m: usize) {
+    assert_eq!(weights.len(), k * n, "weights must be K×N row-major");
+    if m == 0 || keep >= m {
+        return;
+    }
+    let mut idx: Vec<usize> = Vec::with_capacity(m);
+    for col in 0..n {
+        let mut g0 = 0usize;
+        while g0 < k {
+            let glen = m.min(k - g0);
+            if glen > keep {
+                idx.clear();
+                idx.extend(0..glen);
+                // |i8| via i16: |-128| overflows in i8
+                idx.sort_by_key(|&i| {
+                    (std::cmp::Reverse((weights[(g0 + i) * n + col] as i16).abs()), i)
+                });
+                for &i in &idx[keep..] {
+                    weights[(g0 + i) * n + col] = 0;
+                }
+            }
+            g0 += glen;
+        }
+    }
+}
+
 /// Fraction of exactly-zero weights.
 pub fn value_sparsity(weights: &[i8]) -> f64 {
     if weights.is_empty() {
@@ -224,6 +258,62 @@ mod tests {
         let f16 = group_zero_column_fraction(&acts, 16);
         assert!(f1 >= f8 && f8 >= f16, "{f1} {f8} {f16}");
         assert!(f8 > 0.2);
+    }
+
+    #[test]
+    fn n_of_m_keeps_largest_per_group() {
+        // one column, K = 8, 2:4 — groups [9,1,5,3] and [2,2,8,7]
+        let mut w = vec![9i8, 1, 5, 3, 2, 2, 8, 7];
+        prune_n_of_m(&mut w, 8, 1, 2, 4);
+        assert_eq!(w, vec![9, 0, 5, 0, 0, 0, 8, 7]);
+        // ties keep the earlier row; negative magnitudes count
+        let mut t = vec![-4i8, 4, 4, 1];
+        prune_n_of_m(&mut t, 4, 1, 2, 4);
+        assert_eq!(t, vec![-4, 4, 0, 0]);
+        // keep >= m is a no-op
+        let mut u = vec![1i8, 2, 3, 4];
+        prune_n_of_m(&mut u, 4, 1, 4, 4);
+        assert_eq!(u, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn n_of_m_property_deterministic_and_bounded() {
+        check_cases(24, |rng| {
+            let k = 4 + rng.below(40) as usize;
+            let n = 1 + rng.below(12) as usize;
+            let m = 2 + rng.below(6) as usize;
+            let keep = 1 + rng.below(m as u64 - 1) as usize;
+            let orig: Vec<i8> = (0..k * n).map(|_| rng.int8()).collect();
+            let mut a = orig.clone();
+            prune_n_of_m(&mut a, k, n, keep, m);
+            // deterministic
+            let mut b = orig.clone();
+            prune_n_of_m(&mut b, k, n, keep, m);
+            if a != b {
+                return Err("non-deterministic".into());
+            }
+            // idempotent
+            let mut c = a.clone();
+            prune_n_of_m(&mut c, k, n, keep, m);
+            if c != a {
+                return Err("not idempotent".into());
+            }
+            // at most `keep` nonzeros per full group, per column
+            for col in 0..n {
+                let mut g0 = 0usize;
+                while g0 < k {
+                    let glen = m.min(k - g0);
+                    let nz =
+                        (0..glen).filter(|&i| a[(g0 + i) * n + col] != 0).count();
+                    let cap = keep.min(glen);
+                    if glen > keep && nz > cap {
+                        return Err(format!("group at {g0} col {col}: {nz} > {cap}"));
+                    }
+                    g0 += glen;
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -385,18 +385,13 @@ fn assemble_report(
     let mut layers = Vec::new();
     let mut totals = EventCounts::default();
     for (idx, layer) in net.layers.iter().enumerate() {
-        match layer.kind {
-            LayerKind::Conv { .. } | LayerKind::Fc { .. } => {
-                let stats = pim_stats[idx].take().expect("compiled layer missing");
-                totals.add(&stats.events);
-                layers.push(stats);
-            }
-            _ => {
-                if let Some(s) = simd_layer_stats(machine, layer) {
-                    totals.add(&s.events);
-                    layers.push(s);
-                }
-            }
+        if layer.kind.matmul_dims().is_some() {
+            let stats = pim_stats[idx].take().expect("compiled layer missing");
+            totals.add(&stats.events);
+            layers.push(stats);
+        } else if let Some(s) = simd_layer_stats(machine, layer) {
+            totals.add(&s.events);
+            layers.push(s);
         }
     }
 
@@ -423,7 +418,10 @@ pub(crate) fn simd_layer_stats(
         return None;
     }
     Some(match layer.kind {
-        LayerKind::Conv { .. } | LayerKind::Fc { .. } => return None,
+        LayerKind::Conv { .. }
+        | LayerKind::Fc { .. }
+        | LayerKind::Attention { .. }
+        | LayerKind::Mlp { .. } => return None,
         LayerKind::DwConv { .. } => {
             machine.run_simd_layer(&layer.name, SimdOp::DwConv, layer.kind.macs())
         }
@@ -435,6 +433,12 @@ pub(crate) fn simd_layer_stats(
             machine.run_simd_layer(&layer.name, SimdOp::ResAdd, elems as u64)
         }
         LayerKind::Mul { elems } => machine.run_simd_layer(&layer.name, SimdOp::Mul, elems as u64),
+        // LayerNorm has no dedicated SIMD opcode in the ISA; its
+        // element-wise normalize/scale pass is costed like a Mul over
+        // the same element count.
+        LayerKind::LayerNorm { elems } => {
+            machine.run_simd_layer(&layer.name, SimdOp::Mul, elems as u64)
+        }
     })
 }
 

@@ -131,6 +131,25 @@ fn golden_fault_campaign() {
 }
 
 #[test]
+fn golden_explore() {
+    // Same rows as the `dbpim explore` defaults (tiny_transformer +
+    // gpt_micro over seq-len × arch-variant × fleet axes): pins the
+    // transformer GEMM lowering, per-head/N:M sparsity configs, the
+    // arch-variant cost deltas and the Pareto-frontier marking
+    // bit-exactly. Rows are identical for any worker count or engine.
+    let rows = exp::explore(SEED);
+    // ISSUE 10 acceptance, pinned independently of the snapshot: every
+    // swept model reports a non-empty frontier.
+    for model in ["tiny_transformer", "gpt_micro"] {
+        assert!(
+            rows.iter().any(|r| r.model == model && r.on_frontier),
+            "{model}: empty Pareto frontier"
+        );
+    }
+    check_golden("explore", &exp::explore_json(&rows));
+}
+
+#[test]
 fn golden_shard_sweep() {
     // The multi-chip driver builds its fleet specs explicitly, so these
     // rows are identical with or without the DBPIM_CHIPS/DBPIM_SCHEME

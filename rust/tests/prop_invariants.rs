@@ -59,6 +59,13 @@
 //!   repair pass never exceeds the spare column/macro budget and its
 //!   column maps are injective, clean-unless-reported, and consistent
 //!   with the aggregate report
+//! * transformers: attention/MLP layers lowered to GEMM simulate
+//!   bit-identically across Sequential/Parallel engines and through
+//!   the compile/sim caches, for random seq lengths and sparsity
+//!   points
+//! * exploration: every `on_frontier` explorer row is non-dominated
+//!   within its model, and the whole row set reproduces bit-exactly
+//!   from a fresh `SweepCtx`
 
 use dbpim::arch::ArchConfig;
 use dbpim::compiler::{compile_layer, prepare_layer, SparsityConfig};
@@ -1413,6 +1420,92 @@ fn prop_open_loop_fault_exhaustion_typed_outcomes() {
         let (_, hs) = pool.run_jobs(vec![move || h_ref.run_with(c_ref).unwrap()]).pop().unwrap();
         if hs.done != n {
             return Err(format!("pool poisoned after fault exhaustion: {hs:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_attention_gemm_engine_and_cache_bit_identical() {
+    // Transformer layers are PIM layers purely through `matmul_dims`,
+    // so they must inherit every determinism contract the CNN path
+    // has: Sequential == Parallel, and the memoized path == the
+    // uncached path, bit for bit, at random seq lengths and sparsity
+    // points (which exercise the per-head overrides and 2:4 pruning).
+    use dbpim::compiler::CompileCache;
+    use dbpim::sim::SimCache;
+    check_cases(6, |rng| {
+        let seq = 2 + 2 * rng.below(8) as usize; // 2..=16
+        let net = dbpim::models::transformer_seq("tiny_transformer", seq)
+            .ok_or("tiny_transformer not registered")?;
+        let sp = SparsityConfig { value_sparsity: rng.f64() * 0.7, fta: rng.below(2) == 0 };
+        let arch = ArchConfig::db_pim();
+        let seed = rng.next_u64();
+        let seq_r =
+            dbpim::sim::simulate_network_with_engine(&net, sp, &arch, seed, Engine::Sequential);
+        let par_r =
+            dbpim::sim::simulate_network_with_engine(&net, sp, &arch, seed, Engine::Parallel);
+        if par_r.totals != seq_r.totals || par_r.total_cycles() != seq_r.total_cycles() {
+            return Err(format!("engines diverge on {} (seq={seq})", net.name));
+        }
+        let cc = CompileCache::new();
+        let sc = SimCache::new();
+        let memo = dbpim::sim::simulate_network_memo(
+            &net,
+            sp,
+            &arch,
+            seed,
+            Engine::Sequential,
+            &cc,
+            &sc,
+        );
+        if memo.totals != seq_r.totals || memo.total_cycles() != seq_r.total_cycles() {
+            return Err(format!("memoized run diverges on {} (seq={seq})", net.name));
+        }
+        for (a, b) in memo.layers.iter().zip(&seq_r.layers) {
+            if a.name != b.name || a.events != b.events || a.elapsed != b.elapsed {
+                return Err(format!("layer {} diverges under caches (seq={seq})", a.name));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_explore_pareto() {
+    // Every reported frontier row is actually non-dominated within its
+    // model, and the whole sweep reproduces bit-exactly from a fresh
+    // `SweepCtx` (each `explore_with_stats` call builds its own).
+    use dbpim::coordinator::experiments as exp;
+    check_cases(3, |rng| {
+        let names = vec!["tiny_transformer".to_string()];
+        let seed = rng.below(1000);
+        let (rows, _) = exp::explore_with_stats(&names, seed);
+        if rows.is_empty() || !rows.iter().any(|r| r.on_frontier) {
+            return Err(format!("empty sweep or frontier at seed {seed}"));
+        }
+        for r in rows.iter().filter(|r| r.on_frontier) {
+            let dominated = rows.iter().any(|o| {
+                o.model == r.model
+                    && o.speedup >= r.speedup
+                    && o.energy_uj <= r.energy_uj
+                    && (o.speedup > r.speedup || o.energy_uj < r.energy_uj)
+            });
+            if dominated {
+                return Err(format!("dominated frontier row {} / {}", r.network, r.arch));
+            }
+        }
+        // frontier marks agree with the standalone helper
+        let pts: Vec<(f64, f64)> = rows.iter().map(|r| (r.speedup, r.energy_uj)).collect();
+        let mask = exp::pareto_frontier(&pts);
+        for (r, m) in rows.iter().zip(&mask) {
+            if r.on_frontier != *m {
+                return Err(format!("frontier mark disagrees on {} / {}", r.network, r.arch));
+            }
+        }
+        let (again, _) = exp::explore_with_stats(&names, seed);
+        if again != rows {
+            return Err(format!("explore rows not reproducible at seed {seed}"));
         }
         Ok(())
     });

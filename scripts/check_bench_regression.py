@@ -45,6 +45,7 @@ DEFAULT_CASES = [
     "serve_loop_saturation",
     "shard_sweep",
     "fault_campaign",
+    "explore_sweep",
 ]
 
 
